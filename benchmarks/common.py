@@ -1,0 +1,38 @@
+"""Shared benchmark helpers. All figures print CSV rows; `run.py` aggregates.
+
+Two measurement modes (DESIGN.md §7 fidelity note):
+- sim: discrete-event simulation in virtual time (scaling figures — the
+  1-core container cannot exhibit real parallel speedup)
+- thread: the real threaded runtime (correctness + absolute single-core
+  throughput)
+"""
+from __future__ import annotations
+
+import math
+import random
+
+
+def gaussian_key_sampler(sigma: float, key_space: int = 10_000):
+    """Paper fig. 9: range-partitioned keys sampled from N(0, sigma) scaled to
+    the key space; lower sigma = more skew. The simulator's partitioner is
+    ``key % num_partitions``, so pass key_space == num_partitions to model
+    range partitioning (key IS the range bucket)."""
+
+    def sample(rng: random.Random) -> int:
+        # wrap (not clip) into [-1,1): sigma >> 1 converges to uniform,
+        # sigma << 1 stays peaked — matching the paper's skew knob intent
+        v = ((rng.gauss(0.0, sigma) + 1.0) % 2.0) - 1.0
+        return int((v + 1.0) / 2.0 * (key_space - 1))
+
+    return sample
+
+
+def uniform_key_sampler(key_space: int = 10_000):
+    def sample(rng: random.Random) -> int:
+        return rng.randrange(key_space)
+
+    return sample
+
+
+def fmt_row(*cols) -> str:
+    return ",".join(str(c) for c in cols)

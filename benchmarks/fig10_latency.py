@@ -1,0 +1,36 @@
+"""Fig. 10 — per-operator processing latency vs per-tuple cost for the two
+partitioning schemes (uniform keys). HYBRID tracks the op cost (near-arrival-
+order processing); PARTITIONED waits in the reorder buffer.
+"""
+from __future__ import annotations
+
+from repro.core.simulate import SimConfig, SimOp, simulate
+
+from .common import fmt_row, uniform_key_sampler
+
+WORKERS = 8
+
+
+def run(print_fn=print, n_tuples=8_000):
+    print_fn("fig,scheme,cost_us,mean_latency_us,ratio_to_cost")
+    for cost in (10.0, 100.0, 1000.0, 10000.0):
+        n = min(n_tuples, int(4e8 / cost))  # keep sim time bounded
+        for scheme, parts in (("hybrid", 100), ("partitioned", WORKERS)):
+            ops = [
+                SimOp("op", "partitioned", cost_us=cost, num_partitions=parts)
+            ]
+            r = simulate(
+                ops, n,
+                SimConfig(
+                    num_workers=WORKERS, worklist_scheme=scheme, heuristic="lp"
+                ),
+                key_sampler=uniform_key_sampler(parts),
+            )
+            lat = r["mean_latency_us"]
+            print_fn(
+                fmt_row("fig10", scheme, int(cost), f"{lat:.1f}", f"{lat/cost:.2f}")
+            )
+
+
+if __name__ == "__main__":
+    run()

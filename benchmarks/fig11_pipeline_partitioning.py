@@ -1,0 +1,32 @@
+"""Fig. 11 — partitioning schemes on the TPCx-BB pipeline queries (CT
+heuristic, 8 workers): peak throughput and latency, HYBRID vs PARTITIONED.
+"""
+from __future__ import annotations
+
+from repro.core.simulate import SimConfig, simulate
+from repro.streams.tpcxbb import sim_ops
+
+from .common import fmt_row
+
+QUERIES = ("q1", "q2", "q3", "q4", "q15")
+
+
+def run(print_fn=print, n_tuples=15_000):
+    print_fn("fig,query,scheme,throughput_per_s,mean_latency_ms")
+    for q in QUERIES:
+        for scheme in ("hybrid", "partitioned"):
+            best_thru, best_lat = 0.0, 0.0
+            for w in (2, 4, 8, 16):
+                r = simulate(
+                    sim_ops(q), n_tuples,
+                    SimConfig(num_workers=w, worklist_scheme=scheme, heuristic="ct"),
+                    key_sampler=lambda rng: rng.randrange(1 << 30),
+                )
+                if r["throughput_per_s"] > best_thru:
+                    best_thru = r["throughput_per_s"]
+                    best_lat = r["mean_latency_us"] / 1e3
+            print_fn(fmt_row("fig11", q, scheme, f"{best_thru:.0f}", f"{best_lat:.3f}"))
+
+
+if __name__ == "__main__":
+    run()

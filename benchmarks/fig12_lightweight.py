@@ -1,0 +1,47 @@
+"""Fig. 12 — light-weight stateless operator: speedup + per-tuple cost of the
+NON-BLOCKING vs LOCK-BASED reordering schemes as workers scale.
+
+Paper setup: stateless op, ~10us/tuple. Expectation: non-blocking scales
+better; lock-based per-tuple cost (incl. blocked time) rises steeply.
+"""
+from __future__ import annotations
+
+from repro.core.simulate import SimConfig, SimOp, simulate
+
+from .common import fmt_row
+
+N_TUPLES = 30_000
+COST_US = 10.0
+
+
+def run(print_fn=print):
+    print_fn("fig,scheme,workers,speedup,avg_cost_us,blocked_ms")
+    base = {}
+    for scheme in ("non_blocking", "lock_based"):
+        for w in (1, 2, 4, 8, 16):
+            ops = [SimOp("light", "stateless", cost_us=COST_US)]
+            r = simulate(
+                ops,
+                N_TUPLES,
+                SimConfig(num_workers=w, reorder_scheme=scheme, heuristic="lp"),
+            )
+            if scheme == "non_blocking" and w == 1:
+                base["t"] = r["makespan_us"]
+            speedup = base["t"] / r["makespan_us"]
+            avg_cost = sum(
+                [r["makespan_us"] * w / N_TUPLES]
+            )  # worker-time per tuple upper bound
+            busy_cost = (
+                r["worker_busy_frac"] * w * r["makespan_us"] / N_TUPLES
+            )
+            print_fn(
+                fmt_row(
+                    "fig12", scheme, w,
+                    f"{speedup:.2f}", f"{busy_cost:.2f}",
+                    f"{r['blocked_us']/1e3:.1f}",
+                )
+            )
+
+
+if __name__ == "__main__":
+    run()

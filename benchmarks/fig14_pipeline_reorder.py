@@ -1,0 +1,30 @@
+"""Fig. 14 — reordering schemes on TPCx-BB queries (CT heuristic): peak
+throughput, NON-BLOCKING vs LOCK-BASED.
+"""
+from __future__ import annotations
+
+from repro.core.simulate import SimConfig, simulate
+from repro.streams.tpcxbb import sim_ops
+
+from .common import fmt_row
+
+QUERIES = ("q1", "q2", "q3", "q4", "q15")
+
+
+def run(print_fn=print, n_tuples=15_000):
+    print_fn("fig,query,scheme,peak_throughput_per_s")
+    for q in QUERIES:
+        for scheme in ("non_blocking", "lock_based"):
+            best = 0.0
+            for w in (2, 4, 8, 16):
+                r = simulate(
+                    sim_ops(q), n_tuples,
+                    SimConfig(num_workers=w, reorder_scheme=scheme, heuristic="ct"),
+                    key_sampler=lambda rng: rng.randrange(1 << 30),
+                )
+                best = max(best, r["throughput_per_s"])
+            print_fn(fmt_row("fig14", q, scheme, f"{best:.0f}"))
+
+
+if __name__ == "__main__":
+    run()

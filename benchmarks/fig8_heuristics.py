@@ -1,0 +1,40 @@
+"""Fig. 8a/8b — scheduling heuristics (CT/LP/ET/QST) on TPCx-BB queries:
+throughput and mean processing latency as cores scale (discrete-event sim
+mirroring each query's operator cost/selectivity profile).
+"""
+from __future__ import annotations
+
+from repro.core.simulate import SimConfig, simulate
+from repro.streams.tpcxbb import sim_ops
+
+from .common import fmt_row
+
+N_TUPLES = 15_000
+QUERIES = ("q1", "q2", "q3", "q4", "q15")
+HEURISTICS = ("ct", "lp", "et", "qst")
+
+
+def run(print_fn=print, workers=(2, 4, 8, 16), n_tuples=N_TUPLES):
+    print_fn("fig,query,heuristic,workers,throughput_per_s,mean_latency_ms,p99_ms")
+    for q in QUERIES:
+        for h in HEURISTICS:
+            for w in workers:
+                ops = sim_ops(q)
+                r = simulate(
+                    ops,
+                    n_tuples,
+                    SimConfig(num_workers=w, heuristic=h),
+                    key_sampler=lambda rng: rng.randrange(1 << 30),
+                )
+                print_fn(
+                    fmt_row(
+                        "fig8", q, h, w,
+                        f"{r['throughput_per_s']:.0f}",
+                        f"{r['mean_latency_us']/1e3:.3f}",
+                        f"{r['p99_latency_us']/1e3:.3f}",
+                    )
+                )
+
+
+if __name__ == "__main__":
+    run()

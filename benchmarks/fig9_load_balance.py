@@ -1,0 +1,48 @@
+"""Fig. 9 — partitioned-parallelism under skew: HYBRID-QUEUE (100 partitions)
+vs PARTITIONED-QUEUE (partitions = workers) with range-partitioned keys from
+N(0, sigma); lower sigma = heavier skew. Metric: speedup over 1 worker.
+"""
+from __future__ import annotations
+
+from repro.core.simulate import SimConfig, SimOp, simulate
+
+from .common import fmt_row, gaussian_key_sampler
+
+N_TUPLES = 20_000
+COST_US = 100.0
+WORKERS = 8
+
+
+def run(print_fn=print):
+    print_fn("fig,scheme,sigma,speedup")
+    base = None
+    for sigma in (2.0, 1.0, 0.5, 0.35, 0.25, 0.18):
+        for scheme, parts in (("hybrid", 100), ("partitioned", WORKERS)):
+            ops = [
+                SimOp(
+                    "partitioned_op", "partitioned",
+                    cost_us=COST_US, num_partitions=parts,
+                )
+            ]
+            r1 = simulate(
+                ops, N_TUPLES,
+                SimConfig(num_workers=1, worklist_scheme=scheme, heuristic="lp"),
+                key_sampler=gaussian_key_sampler(sigma, key_space=parts),
+            )
+            ops2 = [
+                SimOp(
+                    "partitioned_op", "partitioned",
+                    cost_us=COST_US, num_partitions=parts,
+                )
+            ]
+            rw = simulate(
+                ops2, N_TUPLES,
+                SimConfig(num_workers=WORKERS, worklist_scheme=scheme, heuristic="lp"),
+                key_sampler=gaussian_key_sampler(sigma, key_space=parts),
+            )
+            speedup = r1["makespan_us"] / rw["makespan_us"]
+            print_fn(fmt_row("fig9", scheme, sigma, f"{speedup:.2f}"))
+
+
+if __name__ == "__main__":
+    run()

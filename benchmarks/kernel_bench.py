@@ -1,0 +1,82 @@
+"""Kernel micro-benchmarks: wall time of the Pallas kernels (interpret mode on
+CPU — correctness-path timing; TPU perf comes from the §Roofline analysis)
+plus their pure-jnp references, and derived bytes/flops per call.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import fmt_row
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(print_fn=print):
+    print_fn("bench,name,variant,us_per_call,derived")
+    key = jax.random.PRNGKey(0)
+
+    # reorder-commit: ring 256 x 128, batches of 32
+    from repro.kernels.reorder import ops as reorder_ops
+
+    S, W, K = 256, 128, 32
+    state = reorder_ops.init_state(S, W)
+    serials = jnp.arange(K, dtype=jnp.int32)
+    payloads = jax.random.normal(key, (K, W))
+    t_k = _time(lambda: reorder_ops.commit(state, serials, payloads, use_kernel=True))
+    t_r = _time(lambda: reorder_ops.commit(state, serials, payloads, use_kernel=False))
+    print_fn(fmt_row("kernels", "reorder_commit", "pallas", f"{t_k:.0f}", f"ring={S}x{W} K={K}"))
+    print_fn(fmt_row("kernels", "reorder_commit", "jnp_ref", f"{t_r:.0f}", ""))
+
+    # dispatch: 256 tuples -> 16 partitions cap 32, width 128
+    from repro.kernels.dispatch import ops as dispatch_ops
+
+    T, Pn, C, Wd = 256, 16, 32, 128
+    ids = jax.random.randint(key, (T,), 0, Pn)
+    pay = jax.random.normal(key, (T, Wd))
+    t_k = _time(lambda: dispatch_ops.dispatch(ids, pay, Pn, C, use_kernel=True))
+    t_r = _time(lambda: dispatch_ops.dispatch(ids, pay, Pn, C, use_kernel=False))
+    print_fn(fmt_row("kernels", "dispatch", "pallas", f"{t_k:.0f}", f"T={T} P={Pn} C={C}"))
+    print_fn(fmt_row("kernels", "dispatch", "jnp_ref", f"{t_r:.0f}", ""))
+
+    # flash attention fwd: (1, 512, 4, 64)
+    from repro.kernels.attention.flash import flash_attention
+    from repro.kernels.attention.ref import attention_ref
+
+    B, S2, H, Dh = 1, 512, 4, 64
+    q = jax.random.normal(key, (B, S2, H, Dh), jnp.bfloat16)
+    k = jax.random.normal(key, (B, S2, 2, Dh), jnp.bfloat16)
+    v = jax.random.normal(key, (B, S2, 2, Dh), jnp.bfloat16)
+    flops = 4 * B * H * S2 * S2 * Dh // 2  # causal
+    t_k = _time(lambda: flash_attention(q, k, v, causal=True))
+    t_r = _time(lambda: attention_ref(q, k, v, causal=True))
+    print_fn(fmt_row("kernels", "flash_attention", "pallas", f"{t_k:.0f}", f"flops={flops:.2e}"))
+    print_fn(fmt_row("kernels", "flash_attention", "jnp_ref", f"{t_r:.0f}", ""))
+
+    # ssd: (1, 512, 4, 64) state 128
+    from repro.kernels.ssd import ops as ssd_ops
+    from repro.models.ssm import ssd_chunked
+
+    B3, L, H3, P3, N3 = 1, 512, 4, 64, 128
+    x = jax.random.normal(key, (B3, L, H3, P3))
+    dt = jax.nn.softplus(jax.random.normal(key, (B3, L, H3)))
+    A = -jnp.exp(jax.random.normal(key, (H3,)) * 0.3)
+    Bm = jax.random.normal(key, (B3, L, N3)) * 0.3
+    Cm = jax.random.normal(key, (B3, L, N3)) * 0.3
+    t_k = _time(lambda: ssd_ops.ssd(x, dt, A, Bm, Cm, chunk=128))
+    t_r = _time(lambda: ssd_chunked(x, dt, A, Bm, Cm, chunk=128))
+    print_fn(fmt_row("kernels", "ssd_scan", "pallas", f"{t_k:.0f}", f"L={L} H={H3} N={N3}"))
+    print_fn(fmt_row("kernels", "ssd_scan", "jnp_ref", f"{t_r:.0f}", ""))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure. Prints CSV rows
+(`fig,...` per figure; `kernels,name,variant,us_per_call,derived`).
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller tuple counts")
+    ap.add_argument("--only", default=None, help="comma-list: fig8,fig9,...")
+    args = ap.parse_args()
+
+    from . import (
+        fig8_heuristics,
+        fig9_load_balance,
+        fig10_latency,
+        fig11_pipeline_partitioning,
+        fig12_lightweight,
+        fig13_selectivity,
+        fig14_pipeline_reorder,
+        kernel_bench,
+    )
+
+    suites = {
+        "fig8": lambda: fig8_heuristics.run(
+            workers=(2, 4, 8, 16), n_tuples=4000 if args.quick else 15000
+        ),
+        "fig9": fig9_load_balance.run,
+        "fig10": lambda: fig10_latency.run(n_tuples=2000 if args.quick else 8000),
+        "fig11": lambda: fig11_pipeline_partitioning.run(
+            n_tuples=4000 if args.quick else 15000
+        ),
+        "fig12": fig12_lightweight.run,
+        "fig13": fig13_selectivity.run,
+        "fig14": lambda: fig14_pipeline_reorder.run(
+            n_tuples=4000 if args.quick else 15000
+        ),
+        "kernels": kernel_bench.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# ==== {name} ====", flush=True)
+        fn()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: build an ordered streaming pipeline, run it on the threaded
+runtime, and check the ordering guarantee end-to-end.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import OpSpec, run_pipeline
+
+
+def main():
+    # A 3-operator pipeline: stateless map -> partitioned running sum -> filter
+    specs = [
+        OpSpec("square", "stateless", lambda v: [v * v], cost_us=2),
+        OpSpec(
+            "running_sum_by_mod7",
+            "partitioned",
+            lambda s, k, v: (s + v, [(k, s + v)]),
+            key_fn=lambda v: v % 7,
+            num_partitions=16,
+            init_state=lambda: 0,
+            cost_us=3,
+        ),
+        OpSpec(
+            "even_only", "stateless",
+            lambda kv: [kv] if kv[1] % 2 == 0 else [], selectivity=0.5, cost_us=1,
+        ),
+    ]
+    source = list(range(1, 5001))
+    pipe, report = run_pipeline(
+        specs, source, num_workers=4, heuristic="ct", collect_outputs=True
+    )
+    print(report)
+    print("first outputs:", pipe.outputs[:5])
+
+    # ordering check vs sequential oracle
+    state = {}
+    expected = []
+    for v in source:
+        vv = v * v
+        k = vv % 7
+        state[k] = state.get(k, 0) + vv
+        if state[k] % 2 == 0:
+            expected.append((k, state[k]))
+    assert pipe.outputs == expected, "ordered-execution guarantee violated!"
+    print(f"ordered execution verified over {len(expected)} outputs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Ordered LM serving: batched requests, continuous batching, out-of-order
+completion, in-order egress via the paper's non-blocking reorder buffer.
+
+Compares the two scheduling policies — 'interleave' (pipelined flow, the
+paper's winning strategy) vs 'prefill_first' (micro-batch style).
+
+  PYTHONPATH=src python examples/serve_ordered.py
+"""
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import smoke_config
+from repro.models.common import init_params
+from repro.serve.engine import OrderedServingEngine
+
+
+def run_policy(policy: str, params, cfg, n_requests=10):
+    eng = OrderedServingEngine(
+        cfg, params, max_slots=4, max_len=64, schedule=policy
+    )
+    rng = np.random.RandomState(0)
+    serials = []
+    for _ in range(n_requests):
+        prompt = rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16))
+        serials.append(eng.submit(prompt, max_new_tokens=int(rng.randint(3, 12))))
+    t0 = time.perf_counter()
+    comps = eng.run_to_completion()
+    wall = time.perf_counter() - t0
+    assert [c.serial for c in comps] == sorted(serials), "ordering violated"
+    toks = sum(len(c.tokens) for c in comps)
+    return {
+        "policy": policy,
+        "wall_s": wall,
+        "tokens": toks,
+        "decode_steps": eng.stats["decode_steps"],
+        "tok_per_decode_step": toks / max(eng.stats["decode_steps"], 1),
+    }
+
+
+def main():
+    cfg = smoke_config("olmo-1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    for policy in ("interleave", "prefill_first"):
+        r = run_policy(policy, params, cfg)
+        print(
+            f"{r['policy']:14s} wall={r['wall_s']:.2f}s tokens={r['tokens']} "
+            f"decode_steps={r['decode_steps']} "
+            f"tokens/decode-step={r['tok_per_decode_step']:.2f}"
+        )
+    print("ordered egress verified for both policies")
+
+
+if __name__ == "__main__":
+    main()

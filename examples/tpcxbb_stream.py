@@ -1,0 +1,23 @@
+"""Run the TPCx-BB streaming queries (paper §7) on the threaded runtime.
+
+  PYTHONPATH=src python examples/tpcxbb_stream.py [q1|q2|q3|q4|q15] [n_tuples]
+"""
+import sys
+
+from repro.core import run_pipeline
+from repro.streams.tpcxbb import QUERIES
+
+
+def main():
+    qname = sys.argv[1] if len(sys.argv) > 1 else "q2"
+    n = int(sys.argv[2]) if len(sys.argv) > 2 else 20_000
+    specs, source = QUERIES[qname](n=n)
+    pipe, report = run_pipeline(
+        specs, source, num_workers=4, heuristic="ct", collect_outputs=True
+    )
+    print(f"{qname}: {report}")
+    print(f"egress tuples: {pipe.egress_count}; sample: {pipe.outputs[:2]}")
+
+
+if __name__ == "__main__":
+    main()

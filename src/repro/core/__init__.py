@@ -1,0 +1,52 @@
+"""Core ordered-stream-processing library (the paper's contribution).
+
+Host tier (faithful reproduction, threads + atomics):
+  serial, reorder, hybrid, operators, pipeline, scheduler, runtime, simulate
+
+Device tier (TPU-native vectorized adaptation, JAX + Pallas):
+  vectorized
+"""
+from .serial import AtomicFlag, AtomicLong, SerialAssigner
+from .reorder import (
+    LockBasedReorderBuffer,
+    NonBlockingReorderBuffer,
+    ReorderBuffer,
+    make_reorder_buffer,
+)
+from .hybrid import (
+    HybridQueueWorklist,
+    PartitionedQueueWorklist,
+    SharedQueueWorklist,
+    make_worklist,
+)
+from .operators import OpSpec, OperatorNode, OpStats, PARTITIONED, STATEFUL, STATELESS
+from .pipeline import CompiledPipeline, compile_pipeline
+from .scheduler import HEURISTICS, Scheduler
+from .runtime import RunReport, StreamRuntime, run_pipeline
+
+__all__ = [
+    "AtomicFlag",
+    "AtomicLong",
+    "SerialAssigner",
+    "LockBasedReorderBuffer",
+    "NonBlockingReorderBuffer",
+    "ReorderBuffer",
+    "make_reorder_buffer",
+    "HybridQueueWorklist",
+    "PartitionedQueueWorklist",
+    "SharedQueueWorklist",
+    "make_worklist",
+    "OpSpec",
+    "OperatorNode",
+    "OpStats",
+    "PARTITIONED",
+    "STATEFUL",
+    "STATELESS",
+    "CompiledPipeline",
+    "compile_pipeline",
+    "HEURISTICS",
+    "Scheduler",
+    "RunReport",
+    "StreamRuntime",
+    "run_pipeline",
+]

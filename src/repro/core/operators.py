@@ -1,0 +1,216 @@
+"""Operator abstractions and their executable (schedulable) nodes (paper §2, §5).
+
+An :class:`OpSpec` declares an operator; ``compile`` (in pipeline.py) turns each
+into an :class:`OperatorNode` — an independently schedulable unit owning its
+worklist(s), reorder buffer, and runtime statistics, exactly the decoupled
+asynchronous execution model of §2.2.
+
+Operator function signatures:
+  stateless:    fn(value) -> list[out]
+  stateful:     fn(state, value) -> (state, list[out])
+  partitioned:  fn(state, key, value) -> (state, list[out])
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Hashable, Optional
+
+from .hybrid import make_worklist
+from .reorder import make_reorder_buffer
+from .serial import AtomicLong, SerialAssigner
+
+STATELESS = "stateless"
+STATEFUL = "stateful"
+PARTITIONED = "partitioned"
+
+
+@dataclass
+class OpSpec:
+    name: str
+    kind: str  # stateless | stateful | partitioned
+    fn: Callable
+    key_fn: Optional[Callable[[Any], Hashable]] = None
+    num_partitions: int = 1
+    partitioner: Optional[Callable[[Hashable], int]] = None
+    init_state: Callable[[], Any] = lambda: None
+    # Declared priors (used by the scheduler before estimates warm up, and by
+    # the discrete-event simulator as ground-truth virtual costs).
+    cost_us: float = 1.0
+    selectivity: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in (STATELESS, STATEFUL, PARTITIONED):
+            raise ValueError(f"bad operator kind {self.kind!r}")
+        if self.kind == PARTITIONED:
+            if self.key_fn is None:
+                raise ValueError(f"{self.name}: partitioned operator needs key_fn")
+            if self.partitioner is None:
+                n = self.num_partitions
+                self.partitioner = lambda k, n=n: hash(k) % n
+
+
+class _Marker:
+    """Latency probe riding on a tuple (paper §7 'marker wrappers')."""
+
+    __slots__ = ("entry", "begin", "exit")
+
+    def __init__(self, entry: float):
+        self.entry = entry  # enqueue at pipeline ingress
+        self.begin = 0.0  # first operator starts processing (=> processing latency)
+        self.exit = 0.0  # egress
+
+
+@dataclass
+class OpStats:
+    consumed: int = 0
+    produced: int = 0
+    busy_time: float = 0.0  # seconds of worker time spent in fn
+    window_busy: float = 0.0  # worker time in current CT window
+
+    def cost(self, prior: float) -> float:
+        """Estimated per-tuple processing cost in seconds."""
+        if self.consumed < 8:
+            return prior
+        return self.busy_time / self.consumed
+
+    def selectivity(self, prior: float) -> float:
+        if self.consumed < 8:
+            return prior
+        return self.produced / self.consumed
+
+
+class OperatorNode:
+    """Independently schedulable executable operator."""
+
+    def __init__(
+        self,
+        spec: OpSpec,
+        index: int,
+        *,
+        reorder_scheme: str = "non_blocking",
+        worklist_scheme: str = "hybrid",
+        reorder_size: int = 1024,
+        num_workers: int = 1,
+    ):
+        self.spec = spec
+        self.index = index
+        self.downstream: Optional[Callable[[Any, Optional[_Marker]], None]] = None
+        self.stats = OpStats()
+        self.workers = AtomicLong(0)  # currently allotted workers (w_i)
+        self._serials = SerialAssigner()
+        self._stats_lock = threading.Lock()
+
+        if spec.kind == STATEFUL:
+            self.max_dop = 1
+            self._state = spec.init_state()
+            self._queue: collections.deque = collections.deque()
+            self._reorder = None  # single worker => already ordered
+        elif spec.kind == STATELESS:
+            self.max_dop = 1 << 30  # effectively ∞ (capped by cores)
+            self._queue = collections.deque()
+            self._reorder = make_reorder_buffer(
+                reorder_scheme, self._emit, size=reorder_size
+            )
+        else:  # PARTITIONED
+            self.max_dop = spec.num_partitions
+            self._states: dict[int, Any] = {}
+            self._worklist = make_worklist(
+                worklist_scheme,
+                spec.num_partitions,
+                spec.partitioner,
+                num_workers=num_workers,
+            )
+            self._reorder = make_reorder_buffer(
+                reorder_scheme, self._emit, size=reorder_size
+            )
+
+    # ---- producer side ----------------------------------------------------
+    def push(self, value: Any, marker: Optional[_Marker] = None) -> None:
+        serial = self._serials.next()
+        if self.spec.kind == PARTITIONED:
+            key = self.spec.key_fn(value)
+            self._worklist.add(serial, key, (value, marker))
+        else:
+            self._queue.append((serial, value, marker))
+
+    # ---- scheduler interface -----------------------------------------------
+    def worklist_size(self) -> int:
+        if self.spec.kind == PARTITIONED:
+            return len(self._worklist)
+        return len(self._queue)
+
+    def schedulable(self) -> bool:
+        return self.workers.load() < self.max_dop and self.worklist_size() > 0
+
+    # ---- worker side --------------------------------------------------------
+    def work(self, worker_id: int, budget: int) -> int:
+        """Process up to ``budget`` tuples; returns the number processed."""
+        if self.spec.kind == PARTITIONED:
+            return self._worklist.consume(worker_id, self._operate_partitioned, budget)
+        done = 0
+        while done < budget:
+            try:
+                serial, value, marker = self._queue.popleft()
+            except IndexError:
+                break
+            self._operate(serial, value, marker)
+            done += 1
+        return done
+
+    # ---- internals ----------------------------------------------------------
+    def _operate(self, serial: int, value: Any, marker: Optional[_Marker]) -> None:
+        if marker is not None and self.index == 0:
+            marker.begin = time.perf_counter()
+        t0 = time.perf_counter()
+        if self.spec.kind == STATEFUL:
+            self._state, outs = self.spec.fn(self._state, value)
+        else:
+            outs = self.spec.fn(value)
+        dt = time.perf_counter() - t0
+        self._account(dt, len(outs))
+        if self._reorder is None:
+            self._emit((outs, marker))
+        else:
+            self._reorder.send_blocking(serial, (outs, marker))
+
+    def _operate_partitioned(self, serial: int, key: Hashable, item) -> None:
+        value, marker = item
+        if marker is not None and self.index == 0:
+            marker.begin = time.perf_counter()
+        t0 = time.perf_counter()
+        # State is per KEY (the partition/bucket only controls concurrency —
+        # tuples in one bucket are serialized, but each key has its own state,
+        # exactly the paper's partitioned-stateful semantics).
+        state = self._states.get(key)
+        if state is None:
+            state = self.spec.init_state()
+        state, outs = self.spec.fn(state, key, value)
+        self._states[key] = state
+        dt = time.perf_counter() - t0
+        self._account(dt, len(outs))
+        self._reorder.send_blocking(serial, (outs, marker))
+
+    def _account(self, dt: float, n_out: int) -> None:
+        with self._stats_lock:
+            s = self.stats
+            s.consumed += 1
+            s.produced += n_out
+            s.busy_time += dt
+            s.window_busy += dt
+
+    def _emit(self, payload) -> None:
+        outs, marker = payload
+        down = self.downstream
+        for j, out in enumerate(outs):
+            down(out, marker if j == 0 else None)
+        if not outs and marker is not None:
+            # Tuple was filtered out: its journey ends here; record exit so the
+            # latency probe is not lost. Wired by the pipeline.
+            marker.exit = time.perf_counter()
+            if self.on_marker_drop is not None:
+                self.on_marker_drop(marker)
+
+    on_marker_drop: Optional[Callable[["_Marker"], None]] = None

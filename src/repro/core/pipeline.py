@@ -1,0 +1,105 @@
+"""Linear-chain pipeline compilation (paper §2).
+
+``Pipeline`` holds the operator specs; ``compile()`` wires OperatorNodes into a
+chain where node i's ordered egress pushes into node i+1's worklist, and the
+last node's egress feeds a collector. Latency markers (paper §7) are injected
+every ``marker_interval`` tuples at ingress.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, List, Optional, Sequence
+
+from .operators import OpSpec, OperatorNode, _Marker
+
+
+class CompiledPipeline:
+    def __init__(
+        self,
+        specs: Sequence[OpSpec],
+        *,
+        reorder_scheme: str = "non_blocking",
+        worklist_scheme: str = "hybrid",
+        reorder_size: int = 1024,
+        num_workers: int = 1,
+        marker_interval: int = 64,
+        collect_outputs: bool = False,
+    ):
+        self.specs = list(specs)
+        self.nodes: List[OperatorNode] = [
+            OperatorNode(
+                spec,
+                i,
+                reorder_scheme=reorder_scheme,
+                worklist_scheme=worklist_scheme,
+                reorder_size=reorder_size,
+                num_workers=num_workers,
+            )
+            for i, spec in enumerate(self.specs)
+        ]
+        self.marker_interval = marker_interval
+        self.collect_outputs = collect_outputs
+        self.outputs: list = []
+        self.markers: list[_Marker] = []
+        self._markers_lock = threading.Lock()
+        self._egress_count = 0
+        self._egress_lock = threading.Lock()
+        self._ingress_count = 0
+
+        for i, node in enumerate(self.nodes):
+            if i + 1 < len(self.nodes):
+                nxt = self.nodes[i + 1]
+                node.downstream = lambda v, m, nxt=nxt: nxt.push(v, m)
+            else:
+                node.downstream = self._egress
+            node.on_marker_drop = self._record_marker
+
+    # ---- ingress ------------------------------------------------------------
+    def push(self, value: Any) -> None:
+        marker = None
+        self._ingress_count += 1
+        if self.marker_interval and self._ingress_count % self.marker_interval == 0:
+            marker = _Marker(time.perf_counter())
+        self.nodes[0].push(value, marker)
+
+    # ---- egress ---------------------------------------------------------------
+    def _egress(self, value: Any, marker: Optional[_Marker]) -> None:
+        with self._egress_lock:
+            self._egress_count += 1
+            if self.collect_outputs:
+                self.outputs.append(value)
+        if marker is not None:
+            marker.exit = time.perf_counter()
+            self._record_marker(marker)
+
+    def _record_marker(self, marker: _Marker) -> None:
+        with self._markers_lock:
+            self.markers.append(marker)
+
+    # ---- metrics ---------------------------------------------------------------
+    @property
+    def egress_count(self) -> int:
+        return self._egress_count
+
+    def processing_latencies(self, lo: float = 0.2, hi: float = 0.8) -> list[float]:
+        """Processing latency (begin->exit) of markers in the [lo, hi] percentile
+        range of arrival, per the paper's measurement protocol."""
+        with self._markers_lock:
+            ms = sorted(self.markers, key=lambda m: m.entry)
+        ms = [m for m in ms if m.exit and m.begin]
+        if not ms:
+            return []
+        a, b = int(len(ms) * lo), max(int(len(ms) * hi), int(len(ms) * lo) + 1)
+        return [m.exit - m.begin for m in ms[a:b]]
+
+    def drained(self) -> bool:
+        """Quiescence: no queued work AND no worker mid-tuple (a worker pushes
+        downstream before it is released, so workers==0 makes pushes visible)."""
+        return all(
+            n.worklist_size() == 0 and n.workers.load() == 0 for n in self.nodes
+        )
+
+
+def compile_pipeline(specs: Sequence[OpSpec], **kw) -> CompiledPipeline:
+    return CompiledPipeline(specs, **kw)

@@ -1,0 +1,138 @@
+"""Output-reordering schemes (paper §3).
+
+Both schemes order outputs of concurrently-processed tuples by their pre-allotted
+serial number before they are sent downstream.
+
+- :class:`LockBasedReorderBuffer` — fig. 2: a global lock protects a waiting
+  buffer + ``next`` counter. Simple, but adders block while another worker drains.
+- :class:`NonBlockingReorderBuffer` — fig. 4: bounded ring buffer indexed by
+  ``t mod s``, atomic ``next``, and a try-lock flag. Adders never block; exactly
+  one worker drains the contiguous ready prefix at a time.
+
+``send(t, output)`` returns False when the bounded ring cannot yet accept serial
+``t`` (entry condition ``next <= t < next + s``); the caller must retry later —
+this is the paper's back-pressure mechanism.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Optional
+
+from .serial import AtomicFlag, AtomicLong
+
+_EMPTY = None  # ring sentinel; payloads are wrapped so None payloads are legal
+
+
+class _Slot:
+    __slots__ = ("value",)
+
+    def __init__(self, value: Any):
+        self.value = value
+
+
+class ReorderBuffer:
+    """Common interface: send(t, output) -> bool; drains via send_downstream."""
+
+    def send(self, t: int, output: Any) -> bool:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def send_blocking(self, t: int, output: Any, spin: float = 1e-6) -> None:
+        """Retry send until accepted (workers in the paper 'try again').
+
+        ``spin`` sleeps between retries to yield the GIL — on real hardware this
+        would be a PAUSE-loop; under CPython a 0-sleep spin starves the drainer.
+        """
+        while not self.send(t, output):
+            if spin:
+                time.sleep(spin)
+
+
+class LockBasedReorderBuffer(ReorderBuffer):
+    """Fig. 2 — global lock + waiting dict. Blocking by construction."""
+
+    def __init__(self, send_downstream: Callable[[Any], None], start: int = 1):
+        self._send_downstream = send_downstream
+        self._next = start
+        self._waiting: dict[int, _Slot] = {}
+        self._lock = threading.Lock()
+        # Instrumentation: total time workers spent blocked on the lock.
+        self.blocked_time = 0.0
+
+    def send(self, t: int, output: Any) -> bool:
+        t0 = time.perf_counter()
+        with self._lock:
+            self.blocked_time += time.perf_counter() - t0
+            if t == self._next:
+                self._send_downstream(output)
+                self._next += 1
+                while self._next in self._waiting:
+                    self._send_downstream(self._waiting.pop(self._next).value)
+                    self._next += 1
+            else:
+                self._waiting[t] = _Slot(output)
+        return True
+
+
+class NonBlockingReorderBuffer(ReorderBuffer):
+    """Fig. 4 — bounded ring + atomic ``next`` + try-lock drain flag."""
+
+    def __init__(
+        self,
+        send_downstream: Callable[[Any], None],
+        size: int = 1024,
+        start: int = 1,
+    ):
+        if size <= 0:
+            raise ValueError("ring size must be positive")
+        self._send_downstream = send_downstream
+        self._size = size
+        self._next = AtomicLong(start)
+        self._buffer: list[Optional[_Slot]] = [_EMPTY] * size
+        self._flag = AtomicFlag()
+        self.blocked_time = 0.0  # always ~0; kept for symmetric instrumentation
+        self.rejected_adds = 0  # entry-condition failures (ring full for t)
+
+    # -- paper fig. 4 ------------------------------------------------------
+    def send(self, t: int, output: Any) -> bool:
+        success = self._try_add(t, output)
+        self._send_pending_outputs()
+        return success
+
+    def _try_add(self, t: int, output: Any) -> bool:
+        n = self._next.load()
+        if n <= t < n + self._size:
+            self._buffer[t % self._size] = _Slot(output)
+            return True
+        self.rejected_adds += 1
+        return False
+
+    def _send_pending_outputs(self) -> None:
+        while True:  # tail-recursion of fig. 4 L42 expressed as a loop
+            if self._flag.test_and_set():
+                return  # another worker is draining; do NOT block (the point)
+            i = 0
+            while True:
+                n = self._next.load()
+                i = n % self._size
+                slot = self._buffer[i]
+                if slot is not _EMPTY:
+                    self._send_downstream(slot.value)
+                    self._buffer[i] = _EMPTY
+                    self._next.fetch_add(1)
+                else:
+                    self._flag.clear()
+                    break
+            # Re-check: an add may have raced with the flag clear (fig. 4 L39-42).
+            if self._buffer[i] is _EMPTY:
+                return
+
+
+def make_reorder_buffer(
+    scheme: str, send_downstream: Callable[[Any], None], size: int = 1024
+) -> ReorderBuffer:
+    if scheme == "non_blocking":
+        return NonBlockingReorderBuffer(send_downstream, size=size)
+    if scheme == "lock_based":
+        return LockBasedReorderBuffer(send_downstream)
+    raise ValueError(f"unknown reorder scheme: {scheme!r}")

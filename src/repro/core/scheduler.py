@@ -1,0 +1,134 @@
+"""Dynamic scheduling heuristics (paper §6).
+
+The central scheduler answers: which operator next, and how many tuples
+(= constant time slice s / per-tuple cost c_i). Heuristics:
+
+- QST (§6.1): queue-size throttling — earliest operator whose *output* queue is
+  below its selectivity-scaled threshold T_i = C·cs_i / Σ cs_j.
+- LP  (§6.2): last-in-pipeline — latest schedulable operator.
+- ET  (§6.3): estimated worklist completion time p_i = I_i·c_i/(w_i+1), max wins.
+- CT  (§6.4): normalized current-window throughput n_i = (T_i^w + w_i·s)/(c_i·cs_i),
+  min wins (the bottleneck operator).
+
+All consider only *schedulable* operators: w_i < M_i and non-empty worklist.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional, Tuple
+
+from .operators import OperatorNode
+
+HEURISTICS = ("qst", "lp", "et", "ct")
+
+
+class Scheduler:
+    """Central scheduler data structure (paper §2.2/§6)."""
+
+    def __init__(
+        self,
+        nodes: List[OperatorNode],
+        heuristic: str = "ct",
+        *,
+        time_slice: float = 0.002,  # s, the constant slice (paper §6)
+        capacity: int = 4096,  # C for QST
+        window: float = 0.05,  # w for CT
+    ):
+        if heuristic not in HEURISTICS:
+            raise ValueError(f"unknown heuristic {heuristic!r}; pick from {HEURISTICS}")
+        self.nodes = nodes
+        self.heuristic = heuristic
+        self.time_slice = time_slice
+        self.capacity = capacity
+        self.window = window
+        self._lock = threading.Lock()
+        self._window_start = time.perf_counter()
+        # cumulative selectivity cs_i = prod_{k<=i} s_k (priors blended w/ estimates)
+        self._cs_cache: list[float] = [1.0] * len(nodes)
+
+    # ------------------------------------------------------------------ utils
+    def _cost(self, i: int) -> float:
+        n = self.nodes[i]
+        return max(n.stats.cost(n.spec.cost_us * 1e-6), 1e-9)
+
+    def _selectivity(self, i: int) -> float:
+        n = self.nodes[i]
+        return n.stats.selectivity(n.spec.selectivity)
+
+    def _cum_selectivities(self) -> list[float]:
+        cs, acc = [], 1.0
+        for i in range(len(self.nodes)):
+            acc *= self._selectivity(i)
+            cs.append(max(acc, 1e-9))
+        return cs
+
+    def _budget(self, i: int) -> int:
+        return max(1, int(self.time_slice / self._cost(i)))
+
+    def _schedulable(self) -> list[int]:
+        return [i for i, n in enumerate(self.nodes) if n.schedulable()]
+
+    # ---------------------------------------------------------------- acquire
+    def acquire(self) -> Optional[Tuple[OperatorNode, int]]:
+        """Pick (node, tuple budget) for a worker, or None if nothing to do."""
+        with self._lock:
+            idx = self._pick()
+            if idx is None:
+                return None
+            node = self.nodes[idx]
+            node.workers.fetch_add(1)
+            return node, self._budget(idx)
+
+    def release(self, node: OperatorNode) -> None:
+        node.workers.fetch_sub(1)
+
+    # ----------------------------------------------------------------- picks
+    def _pick(self) -> Optional[int]:
+        cand = self._schedulable()
+        if not cand:
+            return None
+        if self.heuristic == "lp":
+            return cand[-1]
+        if self.heuristic == "qst":
+            return self._pick_qst(cand)
+        if self.heuristic == "et":
+            return self._pick_et(cand)
+        return self._pick_ct(cand)
+
+    def _pick_qst(self, cand: list[int]) -> Optional[int]:
+        cs = self._cum_selectivities()
+        total = sum(cs)
+        for i in cand:
+            if i + 1 >= len(self.nodes):
+                return i  # last operator: egress is unbounded
+            threshold = self.capacity * cs[i] / total
+            if self.nodes[i + 1].worklist_size() < max(threshold, 1.0):
+                return i
+        return cand[0]  # all throttled: fall back to earliest (keeps progress)
+
+    def _pick_et(self, cand: list[int]) -> int:
+        best, best_p = cand[0], -1.0
+        for i in cand:
+            n = self.nodes[i]
+            p = n.worklist_size() * self._cost(i) / (n.workers.load() + 1)
+            if p > best_p:
+                best, best_p = i, p
+        return best
+
+    def _pick_ct(self, cand: list[int]) -> int:
+        now = time.perf_counter()
+        if now - self._window_start > self.window:
+            for n in self.nodes:
+                n.stats.window_busy = 0.0
+            self._window_start = now
+        cs = self._cum_selectivities()
+        best, best_n = cand[0], float("inf")
+        for i in cand:
+            n = self.nodes[i]
+            eff = (n.stats.window_busy + n.workers.load() * self.time_slice) / (
+                self._cost(i) * cs[i]
+            )
+            if eff < best_n:
+                best, best_n = i, eff
+        return best

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the performance-critical layers.
+
+Each kernel package has: the pl.pallas_call + BlockSpec implementation,
+ops.py (jit'd public wrapper), and ref.py (pure-jnp oracle used by the
+allclose tests in tests/test_kernels.py).
+
+reorder/    vectorized non-blocking reorder-commit (paper S3)
+dispatch/   vectorized hybrid-queue partition dispatch (paper S4)
+attention/  causal flash attention fwd (GQA via BlockSpec index maps)
+ssd/        Mamba2 SSD chunk scan (state carried in VMEM scratch)
+"""

@@ -1,0 +1,31 @@
+"""Jit'd public wrapper for flash attention, with a pure-jnp VJP so the kernel
+is usable in training (bwd = chunked recompute in XLA)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash import flash_attention as _flash_fwd
+from .ref import attention_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q, k, v, causal: bool = True):
+    return _flash_fwd(q, k, v, causal=causal)
+
+
+def _fwd(q, k, v, causal):
+    return _flash_fwd(q, k, v, causal=causal), (q, k, v)
+
+
+def _bwd(causal, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: attention_ref(q_, k_, v_, causal), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+__all__ = ["flash_attention", "attention_ref"]

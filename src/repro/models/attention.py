@@ -1,0 +1,306 @@
+"""GQA self-attention (RoPE / partial RoPE), cross-attention, and KV caches.
+
+Three entry points per mixer:
+  - ``attn_train``   : full causal self-attention over the whole sequence
+  - ``attn_prefill`` : same, but also returns the populated KV cache
+  - ``attn_decode``  : one new token against a cached KV of length S
+
+The einsum formulation below is the XLA-native path used for dry-run/roofline;
+``kernels/attention`` provides the Pallas flash kernel for the same math
+(selected via ``use_flash``), validated against these functions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.context import shard
+
+from .common import ModelConfig, apply_norm
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(cfg: ModelConfig, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """positions: (...,) int32 -> cos/sin of shape (..., rot_dim/2), fp32."""
+    rot = int(cfg.hd * cfg.rope_fraction)
+    rot -= rot % 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, Dh); cos/sin: (B, S, r/2) or (S, r/2). Rotates the first
+    ``2*(r/2)`` dims (partial rotary for chatglm3), pass-through for the rest."""
+    r2 = cos.shape[-1]
+    xr, xp = x[..., : 2 * r2], x[..., 2 * r2 :]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    if cos.ndim == 2:  # (S, r/2) -> broadcast over batch and heads
+        cos_, sin_ = cos[None, :, None, :], sin[None, :, None, :]
+    else:  # (B, S, r/2)
+        cos_, sin_ = cos[:, :, None, :], sin[:, :, None, :]
+    o1 = x1 * cos_ - x2 * sin_
+    o2 = x2 * cos_ + x1 * sin_
+    rotated = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), xp], axis=-1) if xp.shape[-1] else rotated.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- QKV helpers
+def _project_qkv(cfg: ModelConfig, p: dict, x: jax.Array, kv_src: jax.Array):
+    B = x.shape[0]
+    q = (x @ p["wq"]).reshape(B, x.shape[1], cfg.num_heads, cfg.hd)
+    k = (kv_src @ p["wk"]).reshape(B, kv_src.shape[1], cfg.num_kv_heads, cfg.hd)
+    v = (kv_src @ p["wv"]).reshape(B, kv_src.shape[1], cfg.num_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def _gqa_scores_full(cfg: ModelConfig, q, k, v, causal: bool, q_pos0: int = 0):
+    """Full-materialized attention (B,Sq,H,Dh)x(B,Sk,Hkv,Dh) -> (B,Sq,H,Dh).
+
+    KV heads are expanded to the full head count so every intermediate
+    (q/k/v/scores) shards cleanly over ('model') on the head dim — H is a
+    multiple of the TP axis for all assigned archs, while Hkv often is not
+    (e.g. 8 kv-heads on a 16-way axis). The expansion costs O(B*S*H*Dh) HBM,
+    negligible next to the O(B*H*S^2) scores it lets us shard.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    G = H // cfg.num_kv_heads
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    q = shard(q, "dp", None, "tp", None)
+    k = shard(k, "dp", None, "tp", None)
+    v = shard(v, "dp", None, "tp", None)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = shard(scores, "dp", "tp", None, None)
+    scores *= 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + q_pos0
+        ki = jnp.arange(Sk)[None, :]
+        mask = qi >= ki
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    return shard(out, "dp", None, "tp", None)
+
+
+def _chunked_causal_attention(cfg: ModelConfig, q, k, v, chunk: int):
+    """Causal attention, q chunked into static (unrolled) blocks — the
+    XLA-native flash idiom: never materializes S x S scores, each chunk only
+    attends to its causal key prefix (true causal FLOPs, ~half of full), and
+    the unrolled chunks are counted correctly by cost analysis.
+
+    q/k/v: (B, S, H, Dh), kv already expanded to H heads.
+    """
+    B, S, H, Dh = q.shape
+    # fold the softmax scale into q (one small pass instead of a score pass)
+    q = q * (1.0 / jnp.sqrt(Dh)).astype(q.dtype)
+    n = max(1, S // chunk)
+    c = S // n
+    bf16_scores = cfg.attn_bf16_scores
+    outs = []
+    for i in range(n):
+        qs = q[:, i * c : (i + 1) * c]  # (B, c, H, Dh)
+        hi = (i + 1) * c
+        ks, vs = k[:, :hi], v[:, :hi]
+        qi = jnp.arange(c)[:, None] + i * c
+        ki = jnp.arange(hi)[None, :]
+        if bf16_scores:
+            # bf16 score buffers; reductions (max/sum) still accumulate fp32
+            s = jnp.einsum("bqhd,bkhd->bhqk", qs, ks)
+            bias = jnp.where(qi >= ki, 0.0, -1e30).astype(s.dtype)
+            s = s + bias[None, None]
+            m = jnp.max(s.astype(jnp.float32), axis=-1, keepdims=True)
+            p = jnp.exp(s - m.astype(s.dtype))
+            denom = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+            w = p * (1.0 / denom).astype(s.dtype)
+        else:
+            # fp32 accumulation straight out of the MXU: no convert pass
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", qs, ks, preferred_element_type=jnp.float32
+            )
+            # additive causal mask (single fused add, no where-select buffer)
+            bias = jnp.where(qi >= ki, 0.0, -1e30).astype(jnp.float32)
+            w = jax.nn.softmax(s + bias[None, None], axis=-1).astype(q.dtype)
+        # scores inherit head sharding from q/k — no explicit constraint
+        # (a with_sharding_constraint here materializes a full copy)
+        outs.append(jnp.einsum("bhqk,bkhd->bqhd", w, vs))
+    out = jnp.concatenate(outs, axis=1) if n > 1 else outs[0]
+    return shard(out, "dp", None, "tp", None)
+
+
+# ---------------------------------------------------------------- entry points
+def attn_train(cfg: ModelConfig, p: dict, x: jax.Array, use_flash: bool = False):
+    """Causal self-attention over full sequence (training / prefill compute)."""
+    h = apply_norm(cfg, x, p, "norm")
+    q, k, v = _project_qkv(cfg, p, h, h)
+    pos = jnp.arange(x.shape[1])
+    cos, sin = rope_freqs(cfg, pos)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    if use_flash:
+        from repro.kernels.attention import ops as flash_ops
+
+        out = flash_ops.flash_attention(q, k, v, causal=True)
+    else:
+        G = cfg.num_heads // cfg.num_kv_heads
+        if G > 1:
+            k, v = jnp.repeat(k, G, axis=2), jnp.repeat(v, G, axis=2)
+        q = shard(q, "dp", None, "tp", None)
+        k = shard(k, "dp", None, "tp", None)
+        v = shard(v, "dp", None, "tp", None)
+        out = _chunked_causal_attention(cfg, q, k, v, chunk=2048)
+    B, S = x.shape[:2]
+    return x + (out.reshape(B, S, -1) @ p["wo"]).astype(x.dtype)
+
+
+def attn_prefill(cfg: ModelConfig, p: dict, x: jax.Array, max_len: int = 0):
+    """Returns (residual output, (k_cache, v_cache)) for subsequent decode.
+    ``max_len`` pads the cache along S so decode can append in place."""
+    h = apply_norm(cfg, x, p, "norm")
+    q, k, v = _project_qkv(cfg, p, h, h)
+    pos = jnp.arange(x.shape[1])
+    cos, sin = rope_freqs(cfg, pos)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    G = cfg.num_heads // cfg.num_kv_heads
+    ke = jnp.repeat(k, G, axis=2) if G > 1 else k
+    ve = jnp.repeat(v, G, axis=2) if G > 1 else v
+    q = shard(q, "dp", None, "tp", None)
+    ke = shard(ke, "dp", None, "tp", None)
+    ve = shard(ve, "dp", None, "tp", None)
+    out = _chunked_causal_attention(cfg, q, ke, ve, chunk=2048)
+    B, S = x.shape[:2]
+    y = x + (out.reshape(B, S, -1) @ p["wo"]).astype(x.dtype)
+    # cache layout: (B, Hkv, S, Dh) — batch then heads leading for sharding
+    kc, vc = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    if max_len and max_len > S:
+        pad = ((0, 0), (0, 0), (0, max_len - S), (0, 0))
+        kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
+    return y, (kc, vc)
+
+
+def attn_decode(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,  # (B, 1, D) current token hidden
+    cache: tuple[jax.Array, jax.Array],  # (B, Hkv, S, Dh) x2
+    position: jax.Array,  # (B,) current write index per sequence
+):
+    """One-token decode against cached KV; returns (y, updated cache)."""
+    kc, vc = cache
+    B, Hkv, S, Dh = kc.shape
+    h = apply_norm(cfg, x, p, "norm")
+    q, k, v = _project_qkv(cfg, p, h, h)  # q:(B,1,H,Dh) k/v:(B,1,Hkv,Dh)
+    cos, sin = rope_freqs(cfg, position[:, None])  # (B,1,r/2)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    # write new kv at per-sequence position via scatter (O(B*Hkv*Dh) bytes,
+    # not a full-cache rewrite)
+    bidx = jnp.arange(B)
+    kc = kc.at[bidx, :, position].set(k[:, 0])  # k[:,0]: (B,Hkv,Dh)
+    vc = vc.at[bidx, :, position].set(v[:, 0])
+    # attend: (B,1,H,Dh) x (B,Hkv,S,Dh); the cache S dim is sharded over
+    # 'model' (flash-decoding style) — softmax over S becomes small
+    # cross-shard reductions handled by SPMD.
+    G = cfg.num_heads // Hkv
+    qg = q.reshape(B, 1, Hkv, G, Dh)
+    scores = jnp.einsum("bqhgd,bhkd->bhgqk", qg, kc).astype(jnp.float32)
+    scores = shard(scores, "dp", None, None, None, "tp")
+    scores *= 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    valid = jnp.arange(S)[None, :] <= position[:, None]  # (B,S)
+    scores = jnp.where(valid[:, None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bqhgd", w, vc).reshape(B, 1, -1)
+    y = x + (out @ p["wo"]).astype(x.dtype)
+    return y, (kc, vc)
+
+
+def attn_decode_quant(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,  # (B, 1, D)
+    cache: dict,  # k/v int8 (B,Hkv,S,Dh) + k_scale/v_scale fp32 (B,Hkv,S)
+    position: jax.Array,  # (B,)
+):
+    """Decode against an int8 KV cache. Per-(seq-position, head) scales are
+    applied on the scores / attention weights (128x smaller than the cache),
+    so the cache itself is only ever read at 1 byte/element."""
+    kc, vc = cache["k"], cache["v"]
+    ks, vs = cache["k_scale"], cache["v_scale"]
+    B, Hkv, S, Dh = kc.shape
+    h = apply_norm(cfg, x, p, "norm")
+    q, k, v = _project_qkv(cfg, p, h, h)
+    cos, sin = rope_freqs(cfg, position[:, None])
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+    def quant(new):  # (B,1,Hkv,Dh) -> int8 + per-(b,h) scale
+        a = new[:, 0]  # (B,Hkv,Dh)
+        scale = jnp.max(jnp.abs(a.astype(jnp.float32)), axis=-1) / 127.0 + 1e-9
+        qv = jnp.clip(jnp.round(a.astype(jnp.float32) / scale[..., None]), -127, 127)
+        return qv.astype(jnp.int8), scale
+
+    kq, ksc = quant(k)
+    vq, vsc = quant(v)
+    bidx = jnp.arange(B)
+    kc = kc.at[bidx, :, position].set(kq)
+    vc = vc.at[bidx, :, position].set(vq)
+    ks = ks.at[bidx, :, position].set(ksc)
+    vs = vs.at[bidx, :, position].set(vsc)
+
+    G = cfg.num_heads // Hkv
+    qg = q.reshape(B, 1, Hkv, G, Dh)
+    scores = jnp.einsum(
+        "bqhgd,bhkd->bhgqk", qg.astype(jnp.float32), kc.astype(jnp.float32)
+    )
+    scores = scores * ks[:, :, None, None, :]  # dequant on scores, not cache
+    scores = shard(scores, "dp", None, None, None, "tp")
+    scores *= 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    valid = jnp.arange(S)[None, :] <= position[:, None]
+    scores = jnp.where(valid[:, None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    w = w * vs[:, :, None, None, :]  # fold v-scales into the weights
+    out = jnp.einsum(
+        "bhgqk,bhkd->bqhgd", w.astype(jnp.float32), vc.astype(jnp.float32)
+    ).astype(x.dtype).reshape(B, 1, -1)
+    y = x + (out @ p["wo"]).astype(x.dtype)
+    return y, {"k": kc, "v": vc, "k_scale": ks, "v_scale": vs}
+
+
+def cross_attn(cfg: ModelConfig, p: dict, x: jax.Array, enc: jax.Array):
+    """Cross-attention to (stub) encoder states ``enc``: (B, Se, D).
+    No RoPE on cross keys (positions are modality-internal)."""
+    h = apply_norm(cfg, x, p, "norm")
+    q, k, v = _project_qkv(cfg, p, h, enc)
+    out = _gqa_scores_full(cfg, q, k, v, causal=False)
+    B, S = x.shape[:2]
+    return x + (out.reshape(B, S, -1) @ p["wo"]).astype(x.dtype)
+
+
+def cross_attn_prefill(cfg: ModelConfig, p: dict, x: jax.Array, enc: jax.Array):
+    """Cross-attention that also returns the encoder KV cache for decode."""
+    h = apply_norm(cfg, x, p, "norm")
+    q, k, v = _project_qkv(cfg, p, h, enc)
+    out = _gqa_scores_full(cfg, q, k, v, causal=False)
+    B, S = x.shape[:2]
+    y = x + (out.reshape(B, S, -1) @ p["wo"]).astype(x.dtype)
+    return y, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+
+
+def cross_attn_decode(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,  # (B, 1, D)
+    cache: tuple[jax.Array, jax.Array],  # encoder KV: (B, Hkv, Se, Dh) x2
+):
+    ek, ev = cache
+    B, Hkv, Se, Dh = ek.shape
+    h = apply_norm(cfg, x, p, "norm")
+    q = (h @ p["wq"]).reshape(B, 1, cfg.num_heads, Dh)
+    G = cfg.num_heads // Hkv
+    qg = q.reshape(B, 1, Hkv, G, Dh)
+    scores = jnp.einsum("bqhgd,bhkd->bhgqk", qg, ek).astype(jnp.float32)
+    scores *= 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bqhgd", w, ev).reshape(B, 1, -1)
+    return x + (out @ p["wo"]).astype(x.dtype), cache

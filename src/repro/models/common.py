@@ -1,0 +1,381 @@
+"""Model configuration and single-source parameter definitions.
+
+Every architecture is described by a :class:`ModelConfig`; the parameter tree
+(shapes, dtypes, sharding specs, initializers) is generated once by
+``param_defs`` so real init (smoke tests), abstract init (dry-run), and
+sharding specs can never diverge.
+
+Layers are organized in *periods*: the smallest repeating pattern of
+(mixer, ffn) sublayer kinds; the model is a ``jax.lax.scan`` over stacked
+period parameters, keeping HLO size O(1) in depth (100-layer AOT compiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# Physical mesh axis names (see launch/mesh.py). Params are replicated over
+# "pod" (pure DP across pods; FSDP within a pod) — grads all-reduce over both.
+FSDP_AXIS = "data"
+TP_AXIS = "model"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    # layer pattern: tuple of (mixer, ffn) kinds, cycled over num_layers.
+    # mixer: "attn" | "xattn" | "mamba"; ffn: "mlp" | "moe" | "none"
+    pattern: tuple = (("attn", "mlp"),)
+    # norms: "rmsnorm" | "layernorm" | "nonparametric_ln" (olmo)
+    norm_type: str = "rmsnorm"
+    # rope
+    rope_theta: float = 1e4
+    rope_fraction: float = 1.0  # chatglm3 2d-RoPE: rotate only half of head_dim
+    # ffn
+    ffn_act: str = "swiglu"  # "swiglu" | "gelu"
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # ssm (mamba2 / SSD)
+    ssm_state: int = 128
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_kernel: int = 4
+    ssm_chunk: int = 256
+    # vlm/audio frontend stub
+    num_encoder_tokens: int = 0  # >0 -> cross-attention encoder states provided
+    # dtypes / numerics
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.bfloat16
+    # training memory knobs (per-arch so the biggest models fit)
+    remat: str = "full"  # "full" | "dots" | "none"
+    optim_moment_dtype: Any = jnp.float32
+    optim_master_fp32: bool = True
+    # sharding strategy knobs (hillclimb levers, see EXPERIMENTS.md §Perf)
+    fsdp_params: bool = True  # False: TP-only resident weights (serving)
+    moe_ep: bool = False  # True: experts sharded over DP axis (EP serving)
+    kv_quant: bool = False  # True: int8 KV cache with per-position scales
+    attn_bf16_scores: bool = False  # True: bf16 score buffers, fp32 reductions
+    seq_parallel: bool = False  # True: residual stream seq-sharded over 'model'
+    # (Megatron-SP: norms/MLP run on S/tp shards; only attention gathers S)
+    # serving
+    max_decode_batch: int = 128
+    # metadata
+    family: str = "dense"
+    active_params_note: str = ""
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the embedding/logits dims
+        always shard cleanly (e.g. mamba2's 50280 on a 16-way axis would
+        otherwise force replicated (B,S,V) fp32 logits). Pad logits are masked
+        to -inf in the unembed."""
+        return (self.vocab_size + 255) // 256 * 256
+
+    @property
+    def num_periods(self) -> int:
+        if self.num_layers % len(self.pattern):
+            raise ValueError(
+                f"{self.name}: num_layers={self.num_layers} not a multiple of "
+                f"pattern period {len(self.pattern)}"
+            )
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def d_inner(self) -> int:  # mamba2
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def has(self, mixer_or_ffn: str) -> bool:
+        return any(mixer_or_ffn in slot for slot in self.pattern)
+
+
+# --------------------------------------------------------------------------
+# Parameter definitions
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    spec: P
+    init: str = "normal"  # normal | zeros | ones | scaled(fan_in)
+    dtype: Any = None  # None -> cfg.param_dtype
+
+    def with_stack(self, n: int) -> "ParamDef":
+        return ParamDef(
+            (n,) + self.shape, P(None, *self.spec), self.init, self.dtype
+        )
+
+
+def _norm_defs(cfg: ModelConfig, prefix: str) -> dict:
+    if cfg.norm_type == "nonparametric_ln":
+        return {}
+    d = {f"{prefix}_scale": ParamDef((cfg.d_model,), P(None), "ones")}
+    if cfg.norm_type == "layernorm":
+        d[f"{prefix}_bias"] = ParamDef((cfg.d_model,), P(None), "zeros")
+    return d
+
+
+def _inner_norm_defs(cfg: ModelConfig, prefix: str, dim: int) -> dict:
+    if cfg.norm_type == "nonparametric_ln":
+        return {}
+    return {f"{prefix}_scale": ParamDef((dim,), P(None), "ones")}
+
+
+def _attn_defs(cfg: ModelConfig, cross: bool = False) -> dict:
+    D, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    defs = {
+        "wq": ParamDef((D, H * Dh), P(FSDP_AXIS, TP_AXIS)),
+        "wk": ParamDef((D, Hkv * Dh), P(FSDP_AXIS, TP_AXIS)),
+        "wv": ParamDef((D, Hkv * Dh), P(FSDP_AXIS, TP_AXIS)),
+        "wo": ParamDef((H * Dh, D), P(TP_AXIS, FSDP_AXIS), "scaled"),
+    }
+    defs.update(_norm_defs(cfg, "norm"))
+    if cross:
+        # cross-attn reads encoder states; keys/values from encoder dimension
+        defs.update(_inner_norm_defs(cfg, "kv_norm", cfg.d_model))
+    return defs
+
+
+def _mlp_defs(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    defs = {
+        "w_up": ParamDef((D, F), P(FSDP_AXIS, TP_AXIS)),
+        "w_down": ParamDef((F, D), P(TP_AXIS, FSDP_AXIS), "scaled"),
+    }
+    if cfg.ffn_act == "swiglu":
+        defs["w_gate"] = ParamDef((D, F), P(FSDP_AXIS, TP_AXIS))
+    defs.update(_norm_defs(cfg, "ffn_norm"))
+    return defs
+
+
+def _moe_defs(cfg: ModelConfig) -> dict:
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+    if cfg.moe_ep:
+        # expert-parallel: experts resident, one (or E/dp) per DP rank —
+        # no per-step expert-weight gathers (serving-optimal)
+        e_up, e_down = P(FSDP_AXIS, None, TP_AXIS), P(FSDP_AXIS, TP_AXIS, None)
+    else:
+        e_up, e_down = P(None, FSDP_AXIS, TP_AXIS), P(None, TP_AXIS, FSDP_AXIS)
+    defs = {
+        "w_router": ParamDef((D, E), P(FSDP_AXIS, None), dtype=jnp.float32),
+        "we_up": ParamDef((E, D, F), e_up),
+        "we_gate": ParamDef((E, D, F), e_up),
+        "we_down": ParamDef((E, F, D), e_down, "scaled"),
+    }
+    if cfg.num_shared_experts:
+        Fs = cfg.num_shared_experts * F
+        defs["ws_up"] = ParamDef((D, Fs), P(FSDP_AXIS, TP_AXIS))
+        defs["ws_gate"] = ParamDef((D, Fs), P(FSDP_AXIS, TP_AXIS))
+        defs["ws_down"] = ParamDef((Fs, D), P(TP_AXIS, FSDP_AXIS), "scaled")
+    defs.update(_norm_defs(cfg, "ffn_norm"))
+    return defs
+
+
+def _mamba_defs(cfg: ModelConfig) -> dict:
+    D, Din, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = Din + 2 * N  # x, B, C go through the causal conv
+    defs = {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "in_proj": ParamDef((D, 2 * Din + 2 * N + H), P(FSDP_AXIS, TP_AXIS)),
+        "conv_w": ParamDef((cfg.ssm_conv_kernel, conv_dim), P(None, TP_AXIS)),
+        "conv_b": ParamDef((conv_dim,), P(TP_AXIS), "zeros"),
+        "A_log": ParamDef((H,), P(None), "ones", dtype=jnp.float32),
+        "ssm_D": ParamDef((H,), P(None), "ones", dtype=jnp.float32),
+        "dt_bias": ParamDef((H,), P(None), "zeros", dtype=jnp.float32),
+        "out_proj": ParamDef((Din, D), P(TP_AXIS, FSDP_AXIS), "scaled"),
+    }
+    defs.update(_norm_defs(cfg, "norm"))
+    defs.update(_inner_norm_defs(cfg, "gate_norm", Din))
+    return defs
+
+
+MIXER_DEFS = {"attn": _attn_defs, "xattn": lambda c: _attn_defs(c, cross=True)}
+FFN_DEFS = {"mlp": _mlp_defs, "moe": _moe_defs, "none": lambda c: {}}
+
+
+def slot_defs(cfg: ModelConfig, mixer: str, ffn: str) -> dict:
+    defs = {}
+    if mixer == "mamba":
+        defs.update({f"mamba.{k}": v for k, v in _mamba_defs(cfg).items()})
+    else:
+        defs.update({f"{mixer}.{k}": v for k, v in MIXER_DEFS[mixer](cfg).items()})
+    defs.update({f"{ffn}.{k}": v for k, v in FFN_DEFS[ffn](cfg).items()})
+    return defs
+
+
+def _strip_fsdp(defs: dict) -> dict:
+    """TP-only residency: remove the FSDP ('data') axis from every param spec
+    (serving configs — kills per-layer weight all-gathers)."""
+
+    def strip(spec: P) -> P:
+        return P(*[None if a == FSDP_AXIS else a for a in spec])
+
+    return {
+        k: ParamDef(d.shape, strip(d.spec), d.init, d.dtype)
+        for k, d in defs.items()
+    }
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    """Full parameter tree: {name: ParamDef}. Per-layer params carry a leading
+    ``num_periods`` stack dim (the scan axis)."""
+    n = cfg.num_periods
+    defs: dict[str, ParamDef] = {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), P(TP_AXIS, FSDP_AXIS)),
+        "lm_head": ParamDef((cfg.d_model, cfg.padded_vocab), P(FSDP_AXIS, TP_AXIS)),
+    }
+    defs.update(_norm_defs(cfg, "final_norm"))
+    for si, (mixer, ffn) in enumerate(cfg.pattern):
+        for k, d in slot_defs(cfg, mixer, ffn).items():
+            defs[f"layers.{si}.{k}"] = d.with_stack(n)
+    if not cfg.fsdp_params:
+        defs = _strip_fsdp(defs)
+    return defs
+
+
+def period_param_defs(cfg: ModelConfig) -> dict:
+    """One period's params WITHOUT the stack dim (for standalone body
+    compiles in the roofline harness)."""
+    defs: dict[str, ParamDef] = {}
+    for si, (mixer, ffn) in enumerate(cfg.pattern):
+        for k, d in slot_defs(cfg, mixer, ffn).items():
+            defs[f"{si}.{k}"] = d
+    if not cfg.fsdp_params:
+        defs = _strip_fsdp(defs)
+    return defs
+
+
+# --------------------------------------------------------------------------
+# Materialization: abstract (dry-run) / real (smoke tests) / pspecs
+# --------------------------------------------------------------------------
+def _unflatten(flat: dict) -> dict:
+    tree: dict = {}
+    for key, val in flat.items():
+        node = tree
+        parts = key.split(".")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    return _unflatten(
+        {
+            k: jax.ShapeDtypeStruct(d.shape, d.dtype or cfg.param_dtype)
+            for k, d in param_defs(cfg).items()
+        }
+    )
+
+
+def param_pspecs(cfg: ModelConfig) -> dict:
+    return _unflatten({k: d.spec for k, d in param_defs(cfg).items()})
+
+
+def abstract_period_params(cfg: ModelConfig) -> dict:
+    return _unflatten(
+        {
+            k: jax.ShapeDtypeStruct(d.shape, d.dtype or cfg.param_dtype)
+            for k, d in period_param_defs(cfg).items()
+        }
+    )
+
+
+def period_pspecs(cfg: ModelConfig) -> dict:
+    return _unflatten({k: d.spec for k, d in period_param_defs(cfg).items()})
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    flat = {}
+    defs = param_defs(cfg)
+    keys = jax.random.split(key, len(defs))
+    for (name, d), k in zip(sorted(defs.items()), keys):
+        dtype = d.dtype or cfg.param_dtype
+        if d.init == "zeros":
+            flat[name] = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            flat[name] = jnp.ones(d.shape, dtype)
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = 1.0 / math.sqrt(fan_in)
+            if d.init == "scaled":  # extra depth scaling for output projections
+                scale /= math.sqrt(2.0 * cfg.num_layers)
+            flat[name] = (
+                jax.random.normal(k, d.shape, jnp.float32) * scale
+            ).astype(dtype)
+    return _unflatten(flat)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return sum(math.prod(d.shape) for d in param_defs(cfg).values())
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: only top_k + shared experts count)."""
+    total = 0
+    for name, d in param_defs(cfg).items():
+        n = math.prod(d.shape)
+        if ".we_" in name:  # routed experts: top_k of E active
+            n = n * cfg.top_k // max(cfg.num_experts, 1)
+        total += n
+    return total
+
+
+# --------------------------------------------------------------------------
+# Norm application
+# --------------------------------------------------------------------------
+def apply_norm(cfg: ModelConfig, x: jax.Array, params: dict, prefix: str) -> jax.Array:
+    """Normalization with fp32 *statistics* but the full-size multiply kept in
+    the activation dtype — avoids materializing (B,S,D) fp32 staging tensors
+    (XLA:TPU would fuse them; XLA:CPU's memory analysis shows they dominate)."""
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        out = x * r.astype(x.dtype)
+        return out * params[f"{prefix}_scale"].astype(x.dtype)
+    # layernorm / olmo's non-parametric LN
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + 1e-6)
+    out = (x - mu.astype(x.dtype)) * r.astype(x.dtype)
+    if cfg.norm_type == "nonparametric_ln":
+        return out
+    out = out * params[f"{prefix}_scale"].astype(x.dtype)
+    if f"{prefix}_bias" in params:
+        out = out + params[f"{prefix}_bias"].astype(x.dtype)
+    return out
+
+
+def inner_norm(x: jax.Array, params: dict, prefix: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    out = x * r.astype(x.dtype)
+    scale = params.get(f"{prefix}_scale")
+    if scale is not None:
+        out = out * scale.astype(x.dtype)
+    return out

@@ -1,0 +1,193 @@
+"""Dense MLP and Mixture-of-Experts feed-forward layers.
+
+The MoE dispatch is the *vectorized hybrid-queue* (paper §4 adapted, see
+DESIGN.md §2): tokens are routed to partitions (experts) by a stable sort that
+preserves arrival order within each partition (= the master-queue order), with
+a per-partition capacity (= bounded delegation).
+
+SPMD layout: dispatch happens in a (R, T/R) row layout where R = the DP shard
+count, so routing/sort/scatter are *row-local* (never cross shards — the
+paper's partitioned-queue locality, with experts replicated across DP and
+TP-sharded on d_ff). Expert-parallel all-to-all dispatch is the alternative
+(EP; see §Perf hillclimb).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.context import get_mesh, shard
+
+from .common import ModelConfig, apply_norm
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _act(cfg: ModelConfig, up: jax.Array, gate: jax.Array | None) -> jax.Array:
+    if cfg.ffn_act == "swiglu":
+        return jax.nn.silu(gate) * up
+    return jax.nn.gelu(up)
+
+
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    h = apply_norm(cfg, x, p, "ffn_norm")
+    up = h @ p["w_up"]
+    gate = h @ p["w_gate"] if "w_gate" in p else None
+    return x + (_act(cfg, up, gate) @ p["w_down"]).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MoE
+def _num_rows(mesh, tokens: int) -> int:
+    if mesh is None:
+        return 1
+    r = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            r *= mesh.shape[a]
+    return r if tokens % r == 0 else 1
+
+
+def moe_dispatch_rowwise(
+    expert_ids: jax.Array, num_experts: int, capacity: int
+) -> tuple[jax.Array, jax.Array]:
+    """Row-local hybrid-queue dispatch.
+
+    expert_ids: (R, A) int32, arrival order = column index within each row.
+    Returns (dest, keep): dest[r, a] is the slot in that row's (E*C) buffer
+    (E*C when dropped). Stable sort preserves arrival order per partition —
+    the master-queue property of the paper's §4.3.
+    """
+    R, A = expert_ids.shape
+    sort_idx = jnp.argsort(expert_ids, axis=-1, stable=True)
+    sorted_ids = jnp.take_along_axis(expert_ids, sort_idx, axis=-1)
+    group_start = jax.vmap(
+        lambda s: jnp.searchsorted(s, jnp.arange(num_experts), side="left")
+    )(sorted_ids)  # (R, E)
+    gs_of = jnp.take_along_axis(group_start, sorted_ids, axis=-1)  # (R, A)
+    pos_in_group = jnp.arange(A)[None, :] - gs_of
+    keep_sorted = pos_in_group < capacity
+    dest_sorted = jnp.where(
+        keep_sorted, sorted_ids * capacity + pos_in_group, num_experts * capacity
+    )
+    rows = jnp.arange(R)[:, None]
+    dest = jnp.zeros((R, A), dest_sorted.dtype).at[rows, sort_idx].set(dest_sorted)
+    keep = jnp.zeros((R, A), bool).at[rows, sort_idx].set(keep_sorted)
+    return dest, keep
+
+
+def moe(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (residual output, load-balancing aux loss)."""
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.num_experts, cfg.top_k
+    # EP mode (serving): global dispatch, buffers sharded over DP by EXPERT —
+    # tokens all-to-all to their resident expert instead of gathering weights
+    R = 1 if cfg.moe_ep else _num_rows(get_mesh(), T)
+    Tl = T // R
+    h_all = apply_norm(cfg, x, p, "ffn_norm").reshape(T, D)
+    h = shard(h_all.reshape(R, Tl, D), "dp", None, None)
+
+    logits = jnp.einsum("rtd,de->rte", h.astype(jnp.float32), p["w_router"])
+    gates = jax.nn.softmax(logits, axis=-1)  # (R, Tl, E)
+    top_v, top_i = jax.lax.top_k(gates, k)  # (R, Tl, k)
+    top_v = top_v / jnp.maximum(top_v.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(gates, axis=(0, 1))
+    rows = jnp.arange(R)[:, None]
+    ce = (
+        jnp.zeros((R, E), jnp.float32)
+        .at[rows, top_i.reshape(R, Tl * k)]
+        .add(1.0)
+        .mean(0)
+        / (Tl * k)
+    )
+    aux = E * jnp.sum(me * ce)
+
+    capacity = max(int(math.ceil(Tl * k / E * cfg.capacity_factor)), 4)
+    ids = top_i.reshape(R, Tl * k)
+    dest, keep = moe_dispatch_rowwise(ids, E, capacity)
+
+    token_of = jnp.arange(Tl * k) // k  # (Tl*k,) same for all rows
+    h_assign = h[:, token_of, :]  # (R, Tl*k, D)
+
+    # Row-local scatter/gather. Under a mesh these run inside shard_map so
+    # SPMD provably keeps them local to each DP rank (auto propagation was
+    # observed to replicate the (R, E*C, D) buffer on every device).
+    def _scatter(d_r, v_r):
+        return jax.vmap(
+            lambda d, v: jnp.zeros((E * capacity, D), x.dtype).at[d].set(
+                v, mode="drop"
+            )
+        )(d_r, v_r)
+
+    def _gather_combine(f_r, i_r, k_r, c_r):
+        pa = jax.vmap(lambda f, i: f[i])(f_r, i_r)
+        pa = pa * k_r[..., None].astype(x.dtype) * c_r[..., None]
+        return jax.vmap(
+            lambda v: jnp.zeros((Tl, D), x.dtype).at[token_of].add(v)
+        )(pa)
+
+    mesh = get_mesh()
+    local = mesh is not None and R > 1
+    if local:
+        dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        row2 = P(dp, None)
+        row3 = P(dp, None, None)
+        scatter = _shard_map(
+            _scatter, mesh=mesh, in_specs=(row2, row3), out_specs=row3
+        )
+        gather_combine = _shard_map(
+            _gather_combine,
+            mesh=mesh,
+            in_specs=(row3, row2, row2, row2),
+            out_specs=row3,
+        )
+    else:
+        scatter, gather_combine = _scatter, _gather_combine
+
+    buf = scatter(dest, h_assign)
+    if cfg.moe_ep:
+        buf = shard(buf.reshape(R, E, capacity, D), None, "dp", None, None)
+        up = jnp.einsum("recd,edf->recf", buf, p["we_up"])
+        gate = jnp.einsum("recd,edf->recf", buf, p["we_gate"])
+        up = shard(up, None, "dp", None, "tp")
+        gate = shard(gate, None, "dp", None, "tp")
+        down = jnp.einsum("recf,efd->recd", jax.nn.silu(gate) * up, p["we_down"])
+        out_flat = shard(down.reshape(R, E * capacity, D), None, None, None)
+    else:
+        buf = shard(buf.reshape(R, E, capacity, D), "dp", None, None, None)
+        up = jnp.einsum("recd,edf->recf", buf, p["we_up"])
+        gate = jnp.einsum("recd,edf->recf", buf, p["we_gate"])
+        up = shard(up, "dp", None, None, "tp")
+        gate = shard(gate, "dp", None, None, "tp")
+        down = jnp.einsum("recf,efd->recd", jax.nn.silu(gate) * up, p["we_down"])
+        out_flat = shard(down.reshape(R, E * capacity, D), "dp", None, None)
+
+    safe = jnp.where(keep, dest, 0)
+    combine = top_v.reshape(R, Tl * k).astype(x.dtype)
+    y = gather_combine(out_flat, safe, keep, combine)
+    y = shard(y, "dp", None, None).reshape(T, D)
+
+    if cfg.num_shared_experts:
+        sup = h_all @ p["ws_up"]
+        sgate = h_all @ p["ws_gate"]
+        y = y + (jax.nn.silu(sgate) * sup) @ p["ws_down"]
+
+    return x + y.reshape(B, S, D).astype(x.dtype), aux
+
+
+def apply_ffn(cfg: ModelConfig, kind: str, p: dict, x: jax.Array):
+    """Uniform interface: returns (y, aux)."""
+    if kind == "mlp":
+        return mlp(cfg, p, x), jnp.zeros((), jnp.float32)
+    if kind == "moe":
+        return moe(cfg, p, x)
+    return x, jnp.zeros((), jnp.float32)  # "none"

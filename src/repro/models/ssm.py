@@ -1,0 +1,230 @@
+"""Mamba2 mixer: SSD (state-space duality) chunked scan [arXiv:2405.21060].
+
+Train/prefill use the chunked SSD algorithm (intra-chunk quadratic term +
+inter-chunk state recurrence via jax.lax.scan / associative ops); decode is the
+O(1)-state recurrent update. ``kernels/ssd`` provides the Pallas version of the
+chunk kernel; this module is the XLA-native path and the oracle's substrate.
+
+Shapes (G=1 group): x:(B,L,H,P) dt:(B,L,H) A:(H,) B,C:(B,L,N)
+State: (B,H,P,N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.context import shard
+
+from .common import ModelConfig, apply_norm, inner_norm
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] for j<i,
+    -inf above diagonal (the 1-SS 'attention' log-decay matrix)."""
+    L = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, L, H, P) fp32
+    dt: jax.Array,  # (B, L, H) fp32, post-softplus
+    A: jax.Array,  # (H,) fp32, negative
+    Bm: jax.Array,  # (B, L, N) fp32
+    Cm: jax.Array,  # (B, L, N) fp32
+    chunk: int = 256,
+    h0: jax.Array | None = None,  # (B, H, P, N) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y: (B,L,H,P), final_state: (B,H,P,N))."""
+    B_, L, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = L // chunk
+    assert nc * chunk == L, "seq len must be a multiple of chunk"
+
+    xc = x.reshape(B_, nc, chunk, H, P)
+    dtc = dt.reshape(B_, nc, chunk, H)
+    Bc = Bm.reshape(B_, nc, chunk, N)
+    Cc = Cm.reshape(B_, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]  # (B,nc,cl,H)
+    dA_cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+
+    # NOTE: every contraction below is a 2-operand einsum with elementwise
+    # scalings pre-fused — multi-operand einsums let XLA pick contraction
+    # orders with huge intermediates (observed: (b,c,k,n,h)-shaped 25 GB
+    # temporaries on the 780m config).
+    xdt = xc * dtc[..., None]  # (B,nc,cl,H,P)
+
+    # ---- intra-chunk (quadratic, the "attention-like" term)
+    Ldec = jnp.exp(segsum(dA.transpose(0, 1, 3, 2)))  # (B,nc,H,cl,cl)
+    Ldec = shard(Ldec, "dp", None, "tp", None, None)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)  # (B,nc,cl,cl)
+    M = Ldec * scores[:, :, None]  # (B,nc,H,cl,cl)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M, xdt)
+
+    # ---- chunk summaries: state contributed by each chunk
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (B,nc,cl,H)
+    S = jnp.einsum("bckn,bckhp->bchpn", Bc, xdt * decay_to_end[..., None])
+
+    # ---- inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])  # (B,nc,H)
+
+    def step(h, inp):
+        S_c, d_c = inp  # (B,H,P,N), (B,H)
+        h_new = h * d_c[..., None, None] + S_c
+        return h_new, h  # emit state BEFORE this chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((B_, H, P, N), x.dtype)
+    hT, h_before = jax.lax.scan(
+        step,
+        h0,
+        (S.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_before = h_before.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # ---- inter-chunk output: y += C_q · h_before * exp(dA_cum_q)
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cc, h_before)
+    y_inter = y_inter * jnp.exp(dA_cum)[..., None]
+    y = (y_intra + y_inter).reshape(B_, L, H, P)
+    return y, hT
+
+
+def ssd_decode_step(
+    x: jax.Array,  # (B, H, P)
+    dt: jax.Array,  # (B, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, N)
+    Cm: jax.Array,  # (B, N)
+    h: jax.Array,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    dA = jnp.exp(dt * A[None, :])  # (B,H)
+    h_new = h * dA[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", Bm, dt, x
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h_new)
+    return y, h_new
+
+
+# ------------------------------------------------------------------ mixer
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    Din, N = cfg.d_inner, cfg.ssm_state
+    # layout: [z (Din) | x (Din) | B (N) | C (N) | dt (H)]
+    z, xBC, dt = jnp.split(zxbcdt, [Din, 2 * Din + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xBC: (B,L,Cd), w: (K,Cd).
+
+    Uses a true grouped convolution (one op) rather than K shifted copies —
+    the shifted-slice formulation materializes K full-size temporaries."""
+    K, Cd = w.shape
+    out = jax.lax.conv_general_dilated(
+        xBC,
+        w[:, None, :],  # (K, 1, Cd) = (spatial, in/group=1, features)
+        window_strides=(1,),
+        padding=[(K - 1, 0)],  # causal
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=Cd,
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _pad_len(L: int, chunk: int) -> int:
+    return (chunk - L % chunk) % chunk
+
+
+def _run_ssd(cfg, xh, dt, A, Bm, Cm, use_kernel: bool, h0=None):
+    """Pads L to a chunk multiple with dt=0 (identity steps: no decay, no
+    input) so the final state is exact, then truncates the output."""
+    B, L = xh.shape[:2]
+    pad = _pad_len(L, cfg.ssm_chunk)
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    if use_kernel:
+        from repro.kernels.ssd import ops as ssd_ops
+
+        y, hT = ssd_ops.ssd(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk, h0=h0)
+    else:
+        y, hT = ssd_chunked(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk, h0=h0)
+    return y[:, :L], hT
+
+
+def mamba_train(cfg: ModelConfig, p: dict, xres: jax.Array, use_kernel: bool = False):
+    """Full-sequence mamba2 block (train/prefill). Returns residual output."""
+    B, L, D = xres.shape
+    Din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = apply_norm(cfg, xres, p, "norm")
+    zxbcdt = shard(h @ p["in_proj"], "dp", None, "tp")  # (B,L, 2*Din+2N+H)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xBC, [Din, Din + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B, L, H, P).astype(jnp.float32)
+    y, _ = _run_ssd(
+        cfg, xh, dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), use_kernel
+    )
+    y = y + xh * p["ssm_D"][None, None, :, None]
+    y = y.reshape(B, L, Din).astype(xres.dtype)
+    y = inner_norm(y * jax.nn.silu(z), p, "gate_norm")
+    return xres + (y @ p["out_proj"]).astype(xres.dtype)
+
+
+def mamba_prefill(cfg: ModelConfig, p: dict, xres: jax.Array):
+    """Like mamba_train but also returns (ssm_state, conv_state) caches."""
+    B, L, D = xres.shape
+    Din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = apply_norm(cfg, xres, p, "norm")
+    zxbcdt = h @ p["in_proj"]
+    z, xBC_raw, dt = _split_proj(cfg, zxbcdt)
+    K = cfg.ssm_conv_kernel
+    conv_state = xBC_raw[:, -(K - 1) :, :]  # last K-1 pre-conv inputs
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xBC, [Din, Din + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B, L, H, P).astype(jnp.float32)
+    y, hT = _run_ssd(
+        cfg, xh, dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), False
+    )
+    y = y + xh * p["ssm_D"][None, None, :, None]
+    y = y.reshape(B, L, Din).astype(xres.dtype)
+    y = inner_norm(y * jax.nn.silu(z), p, "gate_norm")
+    return xres + (y @ p["out_proj"]).astype(xres.dtype), (hT, conv_state)
+
+
+def mamba_decode(
+    cfg: ModelConfig,
+    p: dict,
+    xres: jax.Array,  # (B, 1, D)
+    cache: tuple[jax.Array, jax.Array],  # (ssm_state (B,H,P,N), conv_state (B,K-1,Cd))
+):
+    B = xres.shape[0]
+    Din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    ssm_state, conv_state = cache
+    h = apply_norm(cfg, xres, p, "norm")
+    zxbcdt = (h @ p["in_proj"])[:, 0, :]  # (B, ...)
+    z, xBC_new, dt = _split_proj(cfg, zxbcdt[:, None, :])
+    xBC_new = xBC_new[:, 0, :]
+    # roll conv state, apply conv at last position
+    window = jnp.concatenate([conv_state, xBC_new[:, None, :]], axis=1)  # (B,K,Cd)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(xBC, [Din, Din + N], axis=-1)
+    dtv = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    y, h_new = ssd_decode_step(
+        xh, dtv, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), ssm_state
+    )
+    y = y + xh * p["ssm_D"][None, :, None]
+    y = y.reshape(B, 1, Din).astype(xres.dtype)
+    y = inner_norm(y * jax.nn.silu(z), p, "gate_norm")
+    return xres + (y @ p["out_proj"]).astype(xres.dtype), (h_new, window[:, 1:, :])

@@ -1,0 +1,313 @@
+"""Model assembly: scan-over-periods decoder with heterogeneous layer patterns.
+
+Entry points (all pure functions of (cfg, params, ...)):
+  forward_train(cfg, params, tokens, encoder_states) -> (logits, aux_loss)
+  loss_fn(cfg, params, batch) -> (loss, metrics)
+  prefill(cfg, params, tokens, encoder_states, max_len) -> (last_logits, cache)
+  decode_step(cfg, params, token, cache, position) -> (logits, new_cache)
+
+The layer stack is one jax.lax.scan over ``num_periods`` where each step
+applies the config's (mixer, ffn) pattern — HLO size is O(period), not
+O(depth), which keeps 100-layer AOT compiles tractable and matches how
+production frameworks stack layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ffn as ffn_mod
+from . import ssm
+from .common import ModelConfig, apply_norm
+
+Cache = Any  # nested dict pytree
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full"
+
+
+def _embed(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    return params["embed"].astype(cfg.dtype)[tokens]
+
+
+def _unembed(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = apply_norm(cfg, x, params, "final_norm")
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = logits + jnp.where(pad_mask, -1e30, 0.0)
+    return logits
+
+
+# ------------------------------------------------------------- period bodies
+def apply_period_train(
+    cfg: ModelConfig,
+    h: jax.Array,
+    layer_params: dict,
+    encoder_states: Optional[jax.Array] = None,
+    use_flash: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """One period of the layer pattern (the scan body; also compiled standalone
+    by the roofline harness to correct for XLA's count-loop-body-once costs).
+
+    Each sublayer is individually checkpointed when remat is on, so the
+    backward pass of a multi-layer period holds one sublayer's working set at
+    a time (not the whole period's)."""
+    nested = cfg.remat != "none" and len(cfg.pattern) > 1
+
+    def ck(fn, *args):
+        return jax.checkpoint(fn)(*args) if nested else fn(*args)
+
+    def sp(hh):  # Megatron-SP: residual stream S-sharded between blocks
+        if cfg.seq_parallel:
+            from repro.sharding.context import shard
+
+            return shard(hh, "dp", "tp", None)
+        return hh
+
+    aux = jnp.zeros((), jnp.float32)
+    for si, (mixer, ffn_kind) in enumerate(cfg.pattern):
+        sp_ = layer_params[str(si)]
+        if mixer == "attn":
+            h = sp(ck(lambda hh, pp=sp_: attn.attn_train(cfg, pp["attn"], hh, use_flash=use_flash), h))
+        elif mixer == "xattn":
+            h = sp(ck(lambda hh, pp=sp_: attn.cross_attn(cfg, pp["xattn"], hh, encoder_states), h))
+        elif mixer == "mamba":
+            h = ck(lambda hh, pp=sp_: ssm.mamba_train(cfg, pp["mamba"], hh), h)
+        h, a = ck(
+            lambda hh, pp=sp_, kind=ffn_kind: ffn_mod.apply_ffn(cfg, kind, pp.get(kind, {}), hh),
+            h,
+        )
+        h = sp(h) if mixer != "mamba" else h
+        aux = aux + a
+    return h, aux
+
+
+def apply_period_prefill(
+    cfg: ModelConfig,
+    h: jax.Array,
+    layer_params: dict,
+    encoder_states: Optional[jax.Array] = None,
+    max_len: int = 0,
+) -> tuple[jax.Array, jax.Array, dict]:
+    def sp(hh):  # Megatron-SP between blocks (see apply_period_train)
+        if cfg.seq_parallel:
+            from repro.sharding.context import shard
+
+            return shard(hh, "dp", "tp", None)
+        return hh
+
+    aux = jnp.zeros((), jnp.float32)
+    cache_slice: dict = {}
+    for si, (mixer, ffn_kind) in enumerate(cfg.pattern):
+        sp_ = layer_params[str(si)]
+        if mixer == "attn":
+            h, kv = attn.attn_prefill(cfg, sp_["attn"], h, max_len=max_len)
+            h = sp(h)
+            cache_slice[str(si)] = {"k": kv[0], "v": kv[1]}
+        elif mixer == "xattn":
+            h, ekv = attn.cross_attn_prefill(cfg, sp_["xattn"], h, encoder_states)
+            h = sp(h)
+            cache_slice[str(si)] = {"ek": ekv[0], "ev": ekv[1]}
+        elif mixer == "mamba":
+            h, (hT, conv) = ssm.mamba_prefill(cfg, sp_["mamba"], h)
+            cache_slice[str(si)] = {"ssm": hT, "conv": conv}
+        h, a = ffn_mod.apply_ffn(cfg, ffn_kind, sp_.get(ffn_kind, {}), h)
+        if mixer != "mamba":
+            h = sp(h)
+        aux = aux + a
+    return h, aux, cache_slice
+
+
+def apply_period_decode(
+    cfg: ModelConfig,
+    h: jax.Array,
+    layer_params: dict,
+    cache_slice: dict,
+    position: jax.Array,
+) -> tuple[jax.Array, dict]:
+    new_slice: dict = {}
+    for si, (mixer, ffn_kind) in enumerate(cfg.pattern):
+        sp = layer_params[str(si)]
+        if mixer == "attn":
+            cs = cache_slice[str(si)]
+            if cfg.kv_quant:
+                h, new_cs = attn.attn_decode_quant(cfg, sp["attn"], h, cs, position)
+                new_slice[str(si)] = new_cs
+            else:
+                h, (kc, vc) = attn.attn_decode(
+                    cfg, sp["attn"], h, (cs["k"], cs["v"]), position
+                )
+                new_slice[str(si)] = {"k": kc, "v": vc}
+        elif mixer == "xattn":
+            cs = cache_slice[str(si)]
+            h, _ = attn.cross_attn_decode(cfg, sp["xattn"], h, (cs["ek"], cs["ev"]))
+            new_slice[str(si)] = cs
+        elif mixer == "mamba":
+            cs = cache_slice[str(si)]
+            h, (hn, conv) = ssm.mamba_decode(
+                cfg, sp["mamba"], h, (cs["ssm"], cs["conv"])
+            )
+            new_slice[str(si)] = {"ssm": hn, "conv": conv}
+        h, _ = ffn_mod.apply_ffn(cfg, ffn_kind, sp.get(ffn_kind, {}), h)
+    return h, new_slice
+
+
+# --------------------------------------------------------------------- train
+def forward_train(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # (B, S) int32
+    encoder_states: Optional[jax.Array] = None,  # (B, Se, D) for vlm/audio
+    use_flash: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    x = _embed(cfg, params, tokens)
+
+    def body(carry, layer_params):
+        h, aux = carry
+        h, a = apply_period_train(cfg, h, layer_params, encoder_states, use_flash)
+        return (h, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        _remat(cfg, body), (x, jnp.zeros((), jnp.float32)), params["layers"]
+    )
+    return _unembed(cfg, params, x), aux
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+    logits, aux = forward_train(
+        cfg, params, batch["tokens"], batch.get("encoder_states")
+    )
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        loss = nll.mean()
+    else:
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    total = loss + 0.01 * aux
+    return total, {"nll": loss, "aux": aux}
+
+
+# -------------------------------------------------------------------- prefill
+def prefill(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # (B, S)
+    encoder_states: Optional[jax.Array] = None,
+    max_len: int = 0,
+) -> tuple[jax.Array, Cache]:
+    x = _embed(cfg, params, tokens)
+
+    def body(carry, layer_params):
+        h, aux = carry
+        h, a, cache_slice = apply_period_prefill(
+            cfg, h, layer_params, encoder_states, max_len
+        )
+        return (h, aux + a), cache_slice
+
+    (x, _), cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["layers"]
+    )
+    logits = _unembed(cfg, params, x[:, -1:, :])[:, 0, :]
+    return logits, cache
+
+
+# --------------------------------------------------------------------- decode
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    token: jax.Array,  # (B,) int32 — current token
+    cache: Cache,  # pytree with leading num_periods dim on every leaf
+    position: jax.Array,  # (B,) int32 — write index (= #tokens so far)
+) -> tuple[jax.Array, Cache]:
+    x = _embed(cfg, params, token[:, None])  # (B, 1, D)
+
+    def body(h, xs):
+        layer_params, cache_slice = xs
+        return apply_period_decode(cfg, h, layer_params, cache_slice, position)
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    logits = _unembed(cfg, params, x)[:, 0, :]  # (B, V)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------- cache specs
+def abstract_cache_slice(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    """ShapeDtypeStruct tree for ONE period's cache slice."""
+    Dh, Hkv = cfg.hd, cfg.num_kv_heads
+    sds = jax.ShapeDtypeStruct
+    slices: dict[str, dict] = {}
+    for si, (mixer, _ffn) in enumerate(cfg.pattern):
+        if mixer == "attn":
+            shape = (batch, Hkv, max_len, Dh)
+            if cfg.kv_quant:
+                slices[str(si)] = {
+                    "k": sds(shape, jnp.int8),
+                    "v": sds(shape, jnp.int8),
+                    "k_scale": sds(shape[:-1], jnp.float32),
+                    "v_scale": sds(shape[:-1], jnp.float32),
+                }
+                continue
+            slices[str(si)] = {"k": sds(shape, cfg.dtype), "v": sds(shape, cfg.dtype)}
+        elif mixer == "xattn":
+            shape = (batch, Hkv, cfg.num_encoder_tokens, Dh)
+            slices[str(si)] = {"ek": sds(shape, cfg.dtype), "ev": sds(shape, cfg.dtype)}
+        elif mixer == "mamba":
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            slices[str(si)] = {
+                "ssm": sds(
+                    (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32,
+                ),
+                "conv": sds((batch, cfg.ssm_conv_kernel - 1, conv_dim), cfg.dtype),
+            }
+    return slices
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    """Full-cache ShapeDtypeStructs (leading num_periods scan dim)."""
+    nP = cfg.num_periods
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((nP,) + s.shape, s.dtype),
+        abstract_cache_slice(cfg, batch, max_len),
+    )
+
+
+# ------------------------------------------------------------------ greedy gen
+def generate(
+    cfg: ModelConfig,
+    params: dict,
+    prompt: jax.Array,  # (B, S)
+    num_steps: int,
+    encoder_states: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Greedy generation driver (used by examples/tests; the serving engine in
+    repro.serve drives decode_step itself for continuous batching)."""
+    B, S = prompt.shape
+    logits, cache = prefill(
+        cfg, params, prompt, encoder_states, max_len=S + num_steps
+    )
+    token = jnp.argmax(logits, axis=-1).astype(prompt.dtype)
+
+    def step(carry, _):
+        token, cache, pos = carry
+        logits, cache = decode_step(cfg, params, token, cache, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(token.dtype)
+        return (nxt, cache, pos + 1), nxt
+
+    (_, _, _), toks = jax.lax.scan(
+        step, (token, cache, jnp.full((B,), S, jnp.int32)), None, length=num_steps
+    )
+    return jnp.concatenate([token[None], toks], axis=0).T  # (B, num_steps+1)

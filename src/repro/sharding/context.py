@@ -1,0 +1,65 @@
+"""Current-mesh context for in-model sharding constraints.
+
+Model code calls ``shard(x, "dp", None, "tp", None)`` with *logical* dims;
+this resolves them against the active mesh ("dp" -> ('pod','data') when the
+pod axis exists, "tp" -> 'model') and no-ops when no mesh is set (CPU smoke
+tests) or when the dim size does not divide the axis.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_CURRENT: list[Optional[Mesh]] = [None]
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _CURRENT[0] = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _CURRENT[0]
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = _CURRENT[0]
+    _CURRENT[0] = mesh
+    try:
+        yield
+    finally:
+        _CURRENT[0] = prev
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def shard(x: jax.Array, *dims) -> jax.Array:
+    """Constrain ``x`` with logical dims: "dp" | "tp" | None per axis."""
+    mesh = _CURRENT[0]
+    if mesh is None:
+        return x
+    spec = []
+    for size, d in zip(x.shape, dims):
+        if d == "dp":
+            axes = ("pod", "data") if "pod" in mesh.axis_names else "data"
+        elif d == "tp":
+            axes = "model"
+        else:
+            axes = None
+        if axes is not None and size % _axes_size(mesh, axes) != 0:
+            axes = None  # non-divisible: leave to the compiler
+        spec.append(axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

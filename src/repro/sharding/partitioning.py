@@ -1,0 +1,136 @@
+"""Sharding rules: batch/cache/activation PartitionSpecs for the production
+meshes (see launch/mesh.py). Param specs live with the param definitions in
+models/common.py; this module holds everything shape-dependent.
+
+Conventions (DESIGN.md §5):
+- batch dims shard over DP axes ('pod','data') when divisible, else replicate
+- KV caches shard batch over DP and the *sequence* dim over 'model'
+  (flash-decoding style: XLA turns softmax/contraction over the sharded seq
+  dim into small cross-shard reductions; exact memory scaling for any #heads)
+- mamba caches shard batch over DP and heads over 'model'
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    size = 1
+    for a in dp_axes(mesh):
+        size *= mesh.shape[a]
+    return size
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """(B, ...) arrays: shard B over DP axes when divisible."""
+    if batch % dp_size(mesh) == 0:
+        return P(dp_axes(mesh), *([None] * extra_dims))
+    return P(*([None] * (extra_dims + 1)))
+
+
+def cache_slice_pspecs(
+    cfg: ModelConfig, mesh: Mesh, batch: int, mode: str = "decode"
+) -> dict:
+    """Per-period cache slice specs (no leading scan dim).
+
+    mode="decode": attn KV shards its *seq* dim over 'model' (flash-decoding
+    style; exact memory scaling for any #kv-heads).
+    mode="prefill": attn KV shards *heads* over 'model' — matches how prefill
+    naturally produces KV (head-sharded from TP attention), avoiding an SPMD
+    involuntary full remat; the serving engine re-shards once at the
+    prefill->decode hand-off (as disaggregated serving systems do).
+    """
+    bspec = dp_axes(mesh) if batch % dp_size(mesh) == 0 else None
+    slices: dict[str, dict] = {}
+    for si, (mixer, _ffn) in enumerate(cfg.pattern):
+        if mixer == "attn":
+            if mode == "decode":
+                spec = P(bspec, None, "model", None)  # (B,Hkv,S,Dh): S over tp
+            else:
+                # prefill emits head-dim-sharded KV (Dh always divides the TP
+                # axis; head counts often don't) — the serving engine
+                # re-shards once at the prefill->decode hand-off.
+                spec = P(bspec, None, None, "model")
+            slices[str(si)] = {"k": spec, "v": spec}
+            if cfg.kv_quant:
+                sspec = P(bspec, None, "model")  # scales: (B,Hkv,S)
+                slices[str(si)].update({"k_scale": sspec, "v_scale": sspec})
+        elif mixer == "xattn":
+            spec = P(bspec, None, None, "model")  # enc KV: head-dim over tp
+            slices[str(si)] = {"ek": spec, "ev": spec}
+        elif mixer == "mamba":
+            slices[str(si)] = {
+                # (B, H, Pdim, N): heads over model
+                "ssm": P(bspec, "model", None, None),
+                # (B, K-1, conv_dim): channels over model
+                "conv": P(bspec, None, "model"),
+            }
+    return slices
+
+
+def cache_pspecs(
+    cfg: ModelConfig, mesh: Mesh, batch: int, mode: str = "decode"
+) -> dict:
+    """Full-cache specs: slice specs with the leading num_periods scan dim."""
+    return jax.tree.map(
+        lambda s: P(None, *s),
+        cache_slice_pspecs(cfg, mesh, batch, mode),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def named(mesh: Mesh, tree: Any) -> Any:
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape: tuple) -> P:
+    """Drop sharding on dims the mesh axis size does not divide (explicit
+    in/out shardings must divide exactly; e.g. mamba2's vocab=50280 on a
+    16-way axis, or 8 kv-heads on 'model')."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axes in zip(shape, entries):
+        if axes is not None and dim % _axes_size(mesh, axes) != 0:
+            axes = None
+        out.append(axes)
+    return P(*out)
+
+
+def named_sanitized(mesh: Mesh, pspec_tree: Any, abstract_tree: Any) -> Any:
+    """Like ``named`` but validates divisibility against the abstract shapes."""
+    return jax.tree.map(
+        lambda s, a: NamedSharding(mesh, sanitize_spec(mesh, s, a.shape)),
+        pspec_tree,
+        abstract_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def constrain_batch(mesh: Mesh, x: jax.Array) -> jax.Array:
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, batch_spec(mesh, x.shape[0], x.ndim - 1))
+    )

@@ -1,0 +1,65 @@
+"""Parametric operators (paper §7): stateless / partitioned-stateful operators
+with tunable per-tuple processing cost (matrix work), selectivity, and state
+size — used by the thread-runtime micro-benchmarks and tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import OpSpec
+
+
+def _work(n: int, seed_mat: np.ndarray) -> float:
+    # ~n^3 flops of real compute per tuple
+    return float((seed_mat @ seed_mat).sum())
+
+
+def stateless_parametric(
+    name: str = "param_sl",
+    matrix_n: int = 8,
+    selectivity: float = 1.0,
+    cost_us: float | None = None,
+) -> OpSpec:
+    m = np.random.RandomState(0).randn(matrix_n, matrix_n).astype(np.float32)
+    acc = [0.0]
+
+    def fn(v):
+        _work(matrix_n, m)
+        base = int(selectivity)
+        acc[0] += selectivity - base
+        if acc[0] >= 1.0:
+            acc[0] -= 1.0
+            base += 1
+        return [v] * base
+
+    return OpSpec(
+        name, "stateless", fn,
+        cost_us=cost_us or (matrix_n ** 3) * 2e-3,
+        selectivity=selectivity,
+    )
+
+
+def partitioned_parametric(
+    name: str = "param_ps",
+    matrix_n: int = 8,
+    state_n: int = 16,
+    num_partitions: int = 64,
+    cost_us: float | None = None,
+) -> OpSpec:
+    m = np.random.RandomState(1).randn(matrix_n, matrix_n).astype(np.float32)
+
+    def fn(state, key, v):
+        if state is None:
+            state = np.zeros((state_n,), np.float32)
+        _work(matrix_n, m)
+        state = state + 1.0
+        return state, [(key, float(state[0]))]
+
+    return OpSpec(
+        name, "partitioned", fn,
+        key_fn=lambda v: hash(v),
+        num_partitions=num_partitions,
+        init_state=lambda: None,
+        cost_us=cost_us or (matrix_n ** 3) * 2e-3,
+        selectivity=1.0,
+    )

@@ -1,0 +1,260 @@
+"""TPCx-BB streaming queries Q1-Q4, Q15 (paper §7 table 1) as pipelines.
+
+Pipeline structures follow table 1 exactly (SL = stateless, PS = partitioned
+stateful, SF = stateful):
+  Q1 : SS -> SL -> PS -> PS -> SF   items sold together hourly top-100
+  Q2 : WC -> SL -> PS -> SL -> PS -> SF  viewed-together (60-min sessions)
+  Q3 : WC -> SL -> PS -> PS         last-5 views before purchase (10 days)
+  Q4 : WC -> SL -> PS -> SL -> SF   cart abandonment: avg pages per session
+  Q15: SS -> SL -> SL -> PS         categories w/ flat or declining sales
+
+Each builder returns (specs, source_iterator). Specs carry per-op cost/
+selectivity priors used by the scheduler and the discrete-event simulator.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Iterable
+
+from repro.core import OpSpec
+
+from . import sources
+
+SESSION_TIMEOUT = 3600.0  # 60 min
+HOUR = 3600.0
+
+
+# ----------------------------------------------------------------------- Q1
+def q1(n: int = 20000, seed: int = 0):
+    def project(sale):  # SL
+        return [(sale.store, sale.basket, sale.item, sale.ts)]
+
+    def basket_pairs(state, key, t):  # PS by basket
+        store, basket, item, ts = t
+        items = state or []
+        outs = [((min(item, i2), max(item, i2)), ts) for i2 in items if i2 != item]
+        return items + [item], outs
+
+    def pair_count(state, key, t):  # PS by pair
+        pair, ts = t
+        c = (state or 0) + 1
+        return c, [(pair, c, ts)]
+
+    def hourly_top100(state, t):  # SF
+        pair, c, ts = t
+        top, hour = state if state else ({}, 0)
+        top[pair] = c
+        out = []
+        if ts // HOUR > hour:
+            hour = ts // HOUR
+            ranked = sorted(top.items(), key=lambda kv: -kv[1])[:100]
+            out = [("top100", hour, ranked)]
+        return (top, hour), out
+
+    specs = [
+        OpSpec("project", "stateless", project, cost_us=4, selectivity=1.0),
+        OpSpec(
+            "basket_pairs", "partitioned", basket_pairs,
+            key_fn=lambda t: t[1], num_partitions=64,
+            init_state=lambda: None, cost_us=6, selectivity=1.2,
+        ),
+        OpSpec(
+            "pair_count", "partitioned", pair_count,
+            key_fn=lambda t: t[0], num_partitions=128,
+            init_state=lambda: 0, cost_us=5, selectivity=1.0,
+        ),
+        OpSpec("hourly_top100", "stateful", hourly_top100, init_state=lambda: None,
+               cost_us=8, selectivity=0.01),
+    ]
+    return specs, sources.store_sales(n, seed=seed, dt_s=6.0)  # ~hours span
+
+
+# ----------------------------------------------------------------------- Q2
+def q2(n: int = 20000, seed: int = 0):
+    def views(c):  # SL: keep views only
+        return [(c.user, c.item, c.ts)] if c.action == "view" else []
+
+    def sessionize(state, key, t):  # PS by user: emit co-viewed pairs per session
+        user, item, ts = t
+        sess = state or {"items": [], "last": ts}
+        outs = []
+        if ts - sess["last"] > SESSION_TIMEOUT and sess["items"]:
+            items = sorted(set(sess["items"]))
+            outs = [(a, b) for i, a in enumerate(items) for b in items[i + 1 :]]
+            sess = {"items": [], "last": ts}
+        sess["items"].append(item)
+        sess["last"] = ts
+        return sess, outs
+
+    def norm_pair(p):  # SL
+        return [p]
+
+    def pair_count(state, key, p):  # PS by pair
+        c = (state or 0) + 1
+        return c, [(p, c)]
+
+    def top30(state, t):  # SF
+        pair, c = t
+        top, n_in = state if state else ({}, 0)
+        top[pair] = c
+        n_in += 1
+        ranked = sorted(top.items(), key=lambda kv: -kv[1])[:30]
+        return (top, n_in), [ranked] if n_in % 50 == 0 else []
+
+    specs = [
+        OpSpec("views", "stateless", views, cost_us=3, selectivity=0.86),
+        OpSpec(
+            "sessionize", "partitioned", sessionize,
+            key_fn=lambda t: t[0], num_partitions=128,
+            init_state=lambda: None, cost_us=8, selectivity=0.6,
+        ),
+        OpSpec("norm_pair", "stateless", norm_pair, cost_us=2, selectivity=1.0),
+        OpSpec(
+            "pair_count", "partitioned", pair_count,
+            key_fn=lambda p: p, num_partitions=128,
+            init_state=lambda: 0, cost_us=5, selectivity=1.0,
+        ),
+        OpSpec("top30", "stateful", top30, init_state=lambda: None,
+               cost_us=10, selectivity=0.02),
+    ]
+    return specs, sources.clickstream(n, seed=seed, dt_s=4.0)  # sessions can time out
+
+
+# ----------------------------------------------------------------------- Q3
+def q3(n: int = 20000, seed: int = 0):
+    TEN_DAYS = 10 * 24 * 3600.0
+
+    def project(c):  # SL
+        return [(c.user, c.item, c.action, c.ts)]
+
+    def last5_before_purchase(state, key, t):  # PS by user
+        user, item, action, ts = t
+        hist = [(i, s) for (i, s) in (state or []) if ts - s < TEN_DAYS][-5:]
+        outs = []
+        if action == "purchase":
+            outs = [(item, viewed) for (viewed, _) in hist]
+        elif action == "view":
+            hist = hist + [(item, ts)]
+        return hist, outs
+
+    def view_count(state, key, t):  # PS by viewed item
+        purchased, viewed = t
+        c = (state or 0) + 1
+        return c, [(viewed, c)]
+
+    specs = [
+        OpSpec("project", "stateless", project, cost_us=3, selectivity=1.0),
+        OpSpec(
+            "last5", "partitioned", last5_before_purchase,
+            key_fn=lambda t: t[0], num_partitions=128,
+            init_state=lambda: None, cost_us=7, selectivity=0.3,
+        ),
+        OpSpec(
+            "view_count", "partitioned", view_count,
+            key_fn=lambda t: t[1], num_partitions=128,
+            init_state=lambda: 0, cost_us=4, selectivity=1.0,
+        ),
+    ]
+    return specs, sources.clickstream(n, seed=seed)
+
+
+# ----------------------------------------------------------------------- Q4
+def q4(n: int = 20000, seed: int = 0):
+    def project(c):  # SL
+        return [(c.user, c.action, c.ts)]
+
+    def abandoned_sessions(state, key, t):  # PS by user
+        user, action, ts = t
+        sess = state or {"pages": 0, "cart": False, "bought": False, "last": ts}
+        outs = []
+        if ts - sess["last"] > SESSION_TIMEOUT and sess["pages"]:
+            if sess["cart"] and not sess["bought"]:
+                outs = [(user, sess["pages"])]
+            sess = {"pages": 0, "cart": False, "bought": False, "last": ts}
+        sess["pages"] += 1
+        sess["cart"] |= action == "add2cart"
+        sess["bought"] |= action == "purchase"
+        sess["last"] = ts
+        return sess, outs
+
+    def pages(t):  # SL
+        return [t[1]]
+
+    def running_avg(state, pages_n):  # SF
+        total, count = state if state else (0, 0)
+        total, count = total + pages_n, count + 1
+        return (total, count), [total / count]
+
+    specs = [
+        OpSpec("project", "stateless", project, cost_us=3, selectivity=1.0),
+        OpSpec(
+            "abandoned", "partitioned", abandoned_sessions,
+            key_fn=lambda t: t[0], num_partitions=128,
+            init_state=lambda: None, cost_us=7, selectivity=0.05,
+        ),
+        OpSpec("pages", "stateless", pages, cost_us=2, selectivity=1.0),
+        OpSpec("running_avg", "stateful", running_avg, init_state=lambda: None,
+               cost_us=3, selectivity=1.0),
+    ]
+    return specs, sources.clickstream(n, seed=seed, dt_s=4.0)
+
+
+# ----------------------------------------------------------------------- Q15
+def q15(n: int = 20000, seed: int = 0):
+    WEEK = 7 * 24 * 3600.0
+
+    def in_store(s):  # SL: filter to interesting stores
+        return [s] if s.store < 10 else []
+
+    def project(s):  # SL
+        return [(s.category, s.ts // WEEK, s.qty * s.price)]
+
+    def slope(state, key, t):  # PS by category: regression over weekly sums
+        cat, week, amount = t
+        weeks = state or {}
+        weeks[week] = weeks.get(week, 0.0) + amount
+        out = []
+        if len(weeks) >= 3:
+            xs = sorted(weeks)
+            ys = [weeks[x] for x in xs]
+            n_ = len(xs)
+            mx = sum(xs) / n_
+            my = sum(ys) / n_
+            denom = sum((x - mx) ** 2 for x in xs) or 1.0
+            b = sum((x - mx) * (y - my) for x, y in zip(xs, ys)) / denom
+            if b <= 0:
+                out = [(cat, b)]
+        return weeks, out
+
+    specs = [
+        OpSpec("in_store", "stateless", in_store, cost_us=2, selectivity=0.5),
+        OpSpec("project", "stateless", project, cost_us=3, selectivity=1.0),
+        OpSpec(
+            "slope", "partitioned", slope,
+            key_fn=lambda t: t[0], num_partitions=10,  # 10 categories (paper)
+            init_state=lambda: None, cost_us=9, selectivity=0.4,
+        ),
+    ]
+    return specs, sources.store_sales(n, seed=seed, dt_s=400.0)  # spans weeks
+
+
+QUERIES = {"q1": q1, "q2": q2, "q3": q3, "q4": q4, "q15": q15}
+
+
+def sim_ops(query: str):
+    """SimOp list mirroring a query's cost/selectivity profile (fig. 8 sims)."""
+    from repro.core.simulate import SimOp
+
+    specs, _src = QUERIES[query](n=1)
+    out = []
+    for s in specs:
+        out.append(
+            SimOp(
+                name=s.name,
+                kind=s.kind,
+                cost_us=s.cost_us,
+                selectivity=s.selectivity,
+                num_partitions=s.num_partitions,
+            )
+        )
+    return out

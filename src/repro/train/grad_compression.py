@@ -1,0 +1,99 @@
+"""Int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+Multi-pod training all-reduces gradients over the 'pod' axis (slower
+inter-pod links). This module quantizes each pod's gradient shard to int8
+with per-chunk scales, all-gathers the int8 payload (2 pods -> 2x int8 bytes
+= 0.5x of one fp32/bf16 all-reduce), dequantizes and sums locally, and keeps
+the quantization residual as error feedback added to the next step's
+gradient (Karimireddy et al., error feedback fixes signSGD-style bias).
+
+Exposed as a drop-in on the train step: compress_grads(grads, err) inside
+shard_map over the pod axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+try:
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_allreduce_leaf(
+    g: jax.Array, err: jax.Array, axis_name: str
+) -> tuple[jax.Array, jax.Array]:
+    """Inside shard_map: one leaf's compressed all-reduce over ``axis_name``.
+    Returns (summed gradient fp32, new error-feedback residual)."""
+    g32 = g.astype(jnp.float32) + err
+    q, scale = _quantize(g32)
+    new_err = g32 - _dequantize(q, scale)
+    # all_gather int8 payload + scales; sum dequantized locally
+    qs = jax.lax.all_gather(q, axis_name)  # (n_pods, ...)
+    scales = jax.lax.all_gather(scale, axis_name)  # (n_pods,)
+    total = jnp.tensordot(
+        scales, qs.astype(jnp.float32), axes=((0,), (0,))
+    )
+    return total.astype(g.dtype), new_err
+
+
+def make_compressed_psum(mesh: Mesh, param_pspecs: Any, abstract_params: Any):
+    """Returns fn(grads, err_state) -> (summed_grads, new_err) performing the
+    int8 error-feedback sum over the 'pod' axis via shard_map. Leaf specs are
+    the (sanitized) param specs with the pod axis absent (grads are computed
+    per-pod and replicated across 'pod' only after this sum)."""
+    from repro.sharding.partitioning import sanitize_spec
+
+    specs = jax.tree.map(
+        lambda s, a: sanitize_spec(mesh, s, a.shape),
+        param_pspecs,
+        abstract_params,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+    def summed(grads, err):
+        def leaf_fn(spec):
+            def fn(g, e):
+                return compress_allreduce_leaf(g, e, "pod")
+
+            return _shard_map(
+                fn,
+                mesh=mesh,
+                in_specs=(spec, spec),
+                out_specs=(spec, spec),
+                check_vma=False,
+            )
+
+        outs = jax.tree.map(
+            lambda g, e, s: leaf_fn(s)(g, e),
+            grads,
+            err,
+            specs,
+            is_leaf=lambda x: isinstance(x, jax.Array) or hasattr(x, "shape"),
+        )
+        new_grads = jax.tree.map(lambda t: t[0], outs, is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda t: t[1], outs, is_leaf=lambda x: isinstance(x, tuple))
+        return new_grads, new_err
+
+    return summed
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,133 @@
+"""AdamW with cosine schedule — pure-JAX pytree implementation.
+
+Moment dtype and fp32-master are config-switchable per architecture so the
+largest models (jamba-398B) fit the pod: moments in bf16 halve optimizer HBM;
+the fp32 master copy is optional. Optimizer state inherits each parameter's
+sharding, so state is fully FSDP/TP-sharded like the params.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32
+    master_fp32: bool = True
+
+
+def schedule(ocfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(ocfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - ocfg.warmup_steps) / jnp.maximum(ocfg.decay_steps - ocfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = ocfg.min_lr_frac + (1 - ocfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return ocfg.peak_lr * jnp.where(step < ocfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(ocfg: OptConfig, params: Any) -> dict:
+    zeros_like = lambda p: jnp.zeros(p.shape, ocfg.moment_dtype)
+    state = {
+        "mu": jax.tree.map(zeros_like, params),
+        "nu": jax.tree.map(zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if ocfg.master_fp32:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def abstract_opt_state(ocfg: OptConfig, abstract_params: Any) -> dict:
+    sds = lambda p, dt: jax.ShapeDtypeStruct(p.shape, dt)
+    state = {
+        "mu": jax.tree.map(lambda p: sds(p, ocfg.moment_dtype), abstract_params),
+        "nu": jax.tree.map(lambda p: sds(p, ocfg.moment_dtype), abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if ocfg.master_fp32:
+        state["master"] = jax.tree.map(lambda p: sds(p, jnp.float32), abstract_params)
+    return state
+
+
+def opt_state_pspecs(ocfg: OptConfig, param_pspecs: Any) -> dict:
+    from jax.sharding import PartitionSpec as P
+
+    state = {
+        "mu": param_pspecs,
+        "nu": param_pspecs,
+        "step": P(),
+    }
+    if ocfg.master_fp32:
+        state["master"] = param_pspecs
+    return state
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def apply_adamw(
+    ocfg: OptConfig, params: Any, grads: Any, state: dict
+) -> tuple[Any, dict, dict]:
+    step = state["step"] + 1
+    lr = schedule(ocfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = ocfg.b1, ocfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu, master):
+        g = g.astype(jnp.float32) * scale
+        mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g
+        nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        mhat = mu32 / bc1
+        vhat = nu32 / bc2
+        base = master.astype(jnp.float32) if master is not None else p.astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + ocfg.eps) + ocfg.weight_decay * base)
+        return new, mu32.astype(ocfg.moment_dtype), nu32.astype(ocfg.moment_dtype)
+
+    masters = state.get("master")
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = jax.tree.leaves(grads)
+    leaves_mu = jax.tree.leaves(state["mu"])
+    leaves_nu = jax.tree.leaves(state["nu"])
+    leaves_m = jax.tree.leaves(masters) if masters is not None else [None] * len(leaves_p)
+
+    new_p, new_mu, new_nu, new_master = [], [], [], []
+    for p, g, mu, nu, m in zip(leaves_p, leaves_g, leaves_mu, leaves_nu, leaves_m):
+        n, mu2, nu2 = upd(p, g, mu, nu, m)
+        new_p.append(n.astype(p.dtype))
+        new_mu.append(mu2)
+        new_nu.append(nu2)
+        if m is not None:
+            new_master.append(n)
+
+    new_state = {
+        "mu": jax.tree.unflatten(treedef, new_mu),
+        "nu": jax.tree.unflatten(treedef, new_nu),
+        "step": step,
+    }
+    if masters is not None:
+        new_state["master"] = jax.tree.unflatten(treedef, new_master)
+    params_out = jax.tree.unflatten(treedef, new_p)
+    return params_out, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,166 @@
+"""Train/serve step builders with explicit shardings for AOT lowering.
+
+``build_train_step(cfg, ocfg)`` returns a pure step fn + its in/out sharding
+trees; the launcher jits with donation so params/opt-state/caches update in
+place (crucial for the memory analysis to reflect reality).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer
+from repro.models.common import ModelConfig, abstract_params, param_pspecs
+from repro.sharding.partitioning import (
+    batch_spec,
+    cache_pspecs,
+    dp_axes,
+    named,
+    named_sanitized,
+)
+from .optimizer import (
+    OptConfig,
+    abstract_opt_state,
+    apply_adamw,
+    init_opt_state,
+    opt_state_pspecs,
+)
+
+
+# ----------------------------------------------------------------- train
+def make_train_step(cfg: ModelConfig, ocfg: OptConfig):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: transformer.loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        params, opt_state, opt_metrics = apply_adamw(ocfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_step_shardings(cfg: ModelConfig, ocfg: OptConfig, mesh: Mesh, shape):
+    """Returns (in_shardings, out_shardings) trees for jax.jit."""
+    pp = param_pspecs(cfg)
+    op = opt_state_pspecs(ocfg, pp)
+    B = shape.global_batch
+    batch_specs = {
+        "tokens": batch_spec(mesh, B, 1),
+        "labels": batch_spec(mesh, B, 1),
+    }
+    if cfg.num_encoder_tokens:
+        batch_specs["encoder_states"] = batch_spec(mesh, B, 2)
+    metrics_specs = {
+        "loss": P(),
+        "nll": P(),
+        "aux": P(),
+        "lr": P(),
+        "grad_norm": P(),
+    }
+    ap = abstract_params(cfg)
+    ao = abstract_opt_state(ocfg, ap)
+    pshard = named_sanitized(mesh, pp, ap)
+    oshard = named_sanitized(mesh, op, ao)
+    ins = (pshard, oshard, named(mesh, batch_specs))
+    outs = (pshard, oshard, named(mesh, metrics_specs))
+    return ins, outs
+
+
+def abstract_train_batch(cfg: ModelConfig, shape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {
+        "tokens": sds((B, S), jnp.int32),
+        "labels": sds((B, S), jnp.int32),
+    }
+    if cfg.num_encoder_tokens:
+        batch["encoder_states"] = sds(
+            (B, cfg.num_encoder_tokens, cfg.d_model), cfg.dtype
+        )
+    return batch
+
+
+# ----------------------------------------------------------------- prefill
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, cache = transformer.prefill(
+            cfg, params, batch["tokens"], batch.get("encoder_states")
+        )
+        return logits, cache
+
+    return prefill_step
+
+
+def prefill_shardings(cfg: ModelConfig, mesh: Mesh, shape):
+    pp = param_pspecs(cfg)
+    B = shape.global_batch
+    batch_specs = {"tokens": batch_spec(mesh, B, 1)}
+    if cfg.num_encoder_tokens:
+        batch_specs["encoder_states"] = batch_spec(mesh, B, 2)
+    ins = (
+        named_sanitized(mesh, pp, abstract_params(cfg)),
+        named(mesh, batch_specs),
+    )
+    outs = (
+        NamedSharding(mesh, batch_spec(mesh, B, 1)),  # logits (B, V)
+        named_sanitized(
+            mesh,
+            cache_pspecs(cfg, mesh, B, mode="prefill"),
+            transformer.abstract_cache(cfg, B, shape.seq_len),
+        ),
+    )
+    return ins, outs
+
+
+def abstract_prefill_batch(cfg: ModelConfig, shape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((B, S), jnp.int32)}
+    if cfg.num_encoder_tokens:
+        batch["encoder_states"] = sds(
+            (B, cfg.num_encoder_tokens, cfg.d_model), cfg.dtype
+        )
+    return batch
+
+
+# ----------------------------------------------------------------- decode
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: greedy-sample next token against the KV cache."""
+
+    def serve_step(params, cache, token, position):
+        logits, cache = transformer.decode_step(cfg, params, token, cache, position)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, cache
+
+    return serve_step
+
+
+def serve_shardings(cfg: ModelConfig, mesh: Mesh, shape):
+    pp = param_pspecs(cfg)
+    B = shape.global_batch
+    acache = transformer.abstract_cache(cfg, B, shape.seq_len)
+    cshard = named_sanitized(
+        mesh, cache_pspecs(cfg, mesh, B, mode="decode"), acache
+    )
+    tok_spec = batch_spec(mesh, B, 0)
+    ins = (
+        named_sanitized(mesh, pp, abstract_params(cfg)),
+        cshard,
+        NamedSharding(mesh, tok_spec),
+        NamedSharding(mesh, tok_spec),
+    )
+    outs = (NamedSharding(mesh, tok_spec), cshard)
+    return ins, outs
+
+
+def abstract_serve_inputs(cfg: ModelConfig, shape):
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    cache = transformer.abstract_cache(cfg, B, S)
+    return cache, sds((B,), jnp.int32), sds((B,), jnp.int32)

@@ -1,0 +1,139 @@
+"""Tests for partitioned-parallelism worklists (paper §4, Theorem 4.1)."""
+import collections
+import random
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hybrid import (
+    HybridQueueWorklist,
+    PartitionedQueueWorklist,
+    SharedQueueWorklist,
+    make_worklist,
+)
+
+
+def _mod_partitioner(num_partitions):
+    return lambda k: k % num_partitions
+
+
+@pytest.mark.parametrize("scheme", ["hybrid", "partitioned", "shared"])
+def test_single_worker_processes_all_in_key_order(scheme):
+    wl = make_worklist(scheme, 4, _mod_partitioner(4), num_workers=1)
+    n = 200
+    for s in range(1, n + 1):
+        wl.add(s, s % 7, s)
+    seen = collections.defaultdict(list)
+    total = wl.consume(0, lambda serial, key, v: seen[key].append(serial), 10**9)
+    assert total == n
+    for key, serials in seen.items():
+        assert serials == sorted(serials), f"key {key} out of order"
+    assert len(wl) == 0
+
+
+@pytest.mark.parametrize("n_workers", [2, 4, 8])
+def test_hybrid_concurrent_key_order_and_exactly_once(n_workers):
+    """Theorem 4.1: same-key tuples processed exactly once, in order, never
+    concurrently."""
+    p = 16
+    wl = HybridQueueWorklist(p, _mod_partitioner(p))
+    n = 2000
+    rng = random.Random(7)
+    keys = [rng.randrange(40) for _ in range(n)]
+
+    lock = threading.Lock()
+    seen: dict[int, list[int]] = collections.defaultdict(list)
+    active = [0] * p  # concurrency detector per partition
+    violations = []
+
+    def operate(serial, key, value):
+        part = key % p
+        with lock:
+            active[part] += 1
+            if active[part] > 1:
+                violations.append(part)
+        seen[key].append(serial)
+        with lock:
+            active[part] -= 1
+
+    for s, k in enumerate(keys, start=1):
+        wl.add(s, k, (s, k))
+
+    def worker(wid):
+        while wl.consume(wid, operate, 64):
+            pass
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(n_workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert not violations, f"concurrent same-partition processing: {violations}"
+    got = sorted(s for lst in seen.values() for s in lst)
+    assert got == list(range(1, n + 1)), "lost or duplicated tuples"
+    # per-key arrival order (serials ascending per key)
+    expect = collections.defaultdict(list)
+    for s, k in enumerate(keys, start=1):
+        expect[k].append(s)
+    for k, serials in seen.items():
+        assert serials == expect[k], f"key {k} processed out of order"
+
+
+def test_hybrid_delegation_happens_under_contention():
+    p = 1  # force every tuple into one partition -> heavy delegation
+    wl = HybridQueueWorklist(p, _mod_partitioner(p))
+    n = 500
+    for s in range(1, n + 1):
+        wl.add(s, 0, s)
+    order = []
+
+    def worker(wid):
+        while wl.consume(wid, lambda s, k, v: order.append(s), 32):
+            pass
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert order == list(range(1, n + 1))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    keys=st.lists(st.integers(min_value=0, max_value=9), min_size=1, max_size=300),
+    parts=st.sampled_from([1, 2, 3, 8]),
+    budget=st.sampled_from([1, 3, 1000]),
+)
+def test_property_hybrid_sequential_interleavings(keys, parts, budget):
+    """Round-robin workers with tiny budgets — per-key order + exactly-once hold
+    for any interleaving the budgeted consume loop can produce."""
+    wl = HybridQueueWorklist(parts, _mod_partitioner(parts))
+    for s, k in enumerate(keys, start=1):
+        wl.add(s, k, None)
+    seen = collections.defaultdict(list)
+    progressed = True
+    while len(wl) and progressed:
+        progressed = False
+        for wid in range(3):
+            if wl.consume(wid, lambda s, k, v: seen[k].append(s), budget):
+                progressed = True
+    assert progressed or not len(wl), "no progress"
+    expect = collections.defaultdict(list)
+    for s, k in enumerate(keys, start=1):
+        expect[k].append(s)
+    assert seen == expect
+
+
+def test_partitioned_queue_static_ownership():
+    """Volcano-style: a worker only drains its own buckets."""
+    p, w = 8, 4
+    wl = PartitionedQueueWorklist(p, _mod_partitioner(p), num_workers=w)
+    for s in range(1, 81):
+        wl.add(s, s % p, s)
+    got = []
+    wl.consume(0, lambda s, k, v: got.append(k % p), 10**9)
+    assert set(got) <= {0, 4}  # worker 0 owns buckets {0, 4}
+    assert len(wl) == 80 - len(got)

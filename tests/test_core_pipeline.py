@@ -1,0 +1,142 @@
+"""End-to-end ordered-execution tests (paper §5, Definition 5.1 / Theorem 5.2).
+
+The gold standard: a concurrent execution's egress sequence must equal the
+sequential execution's egress sequence, for any pipeline composition and any
+scheduler heuristic.
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import OpSpec, run_pipeline
+from repro.core.pipeline import CompiledPipeline
+
+
+def _sequential_reference(specs, source):
+    """Single-threaded oracle: process tuples one at a time, to completion."""
+    states = [
+        {} if s.kind == "partitioned" else (s.init_state() if s.kind == "stateful" else None)
+        for s in specs
+    ]
+
+    def run_op(i, value):
+        s = specs[i]
+        if s.kind == "stateless":
+            return s.fn(value)
+        if s.kind == "stateful":
+            states[i], outs = s.fn(states[i], value)
+            return outs
+        key = s.key_fn(value)
+        st_ = states[i].get(key)  # per-KEY state (paper semantics)
+        if st_ is None:
+            st_ = s.init_state()
+        st_, outs = s.fn(st_, key, value)
+        states[i][key] = st_
+        return outs
+
+    def recurse(i, value):
+        if i == len(specs):
+            out.append(value)
+            return
+        for o in run_op(i, value):
+            recurse(i + 1, o)
+
+    out = []
+    for v in source:
+        recurse(0, v)
+    return out
+
+
+def _specs_basic():
+    return [
+        OpSpec("double", "stateless", lambda v: [v * 2], selectivity=1.0),
+        OpSpec(
+            "running_key_sum",
+            "partitioned",
+            lambda s, k, v: (s + v, [(k, s + v)]),
+            key_fn=lambda v: v % 5,
+            num_partitions=8,
+            init_state=lambda: 0,
+        ),
+        OpSpec("odd_filter", "stateless", lambda kv: [kv] if kv[1] % 2 == 0 else [], selectivity=0.5),
+        OpSpec(
+            "count",
+            "stateful",
+            lambda s, kv: (s + 1, [(kv[0], kv[1], s + 1)]),
+            init_state=lambda: 0,
+        ),
+    ]
+
+
+@pytest.mark.parametrize("heuristic", ["ct", "lp", "et", "qst"])
+@pytest.mark.parametrize("workers", [1, 4])
+def test_pipeline_matches_sequential_oracle(heuristic, workers):
+    source = list(range(1, 400))
+    specs = _specs_basic()
+    expected = _sequential_reference(_specs_basic(), source)
+    pipe, report = run_pipeline(
+        specs,
+        source,
+        num_workers=workers,
+        heuristic=heuristic,
+        collect_outputs=True,
+    )
+    assert pipe.outputs == expected
+    assert report.tuples_in == len(source)
+
+
+@pytest.mark.parametrize("worklist_scheme", ["hybrid", "partitioned", "shared"])
+@pytest.mark.parametrize("reorder_scheme", ["non_blocking", "lock_based"])
+def test_pipeline_all_scheme_combinations(worklist_scheme, reorder_scheme):
+    source = list(range(1, 250))
+    expected = _sequential_reference(_specs_basic(), source)
+    pipe, _ = run_pipeline(
+        _specs_basic(),
+        source,
+        num_workers=3,
+        worklist_scheme=worklist_scheme,
+        reorder_scheme=reorder_scheme,
+        collect_outputs=True,
+    )
+    assert pipe.outputs == expected
+
+
+def test_high_selectivity_flatmap_order():
+    """flat-map (selectivity 5) outputs must stay grouped and ordered."""
+    specs = [
+        OpSpec("fan", "stateless", lambda v: [(v, j) for j in range(5)], selectivity=5.0),
+        OpSpec("id", "stateless", lambda v: [v]),
+    ]
+    source = list(range(30))
+    pipe, _ = run_pipeline(specs, source, num_workers=4, collect_outputs=True)
+    assert pipe.outputs == [(v, j) for v in source for j in range(5)]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    vals=st.lists(st.integers(min_value=0, max_value=100), min_size=1, max_size=120),
+    workers=st.sampled_from([1, 2, 5]),
+    reorder_size=st.sampled_from([2, 16, 1024]),
+)
+def test_property_ordered_execution(vals, workers, reorder_size):
+    """Def. 5.1 as a hypothesis property over random inputs/workers/ring sizes."""
+    expected = _sequential_reference(_specs_basic(), vals)
+    pipe = CompiledPipeline(
+        _specs_basic(),
+        num_workers=workers,
+        reorder_size=reorder_size,
+        collect_outputs=True,
+    )
+    from repro.core.runtime import StreamRuntime
+
+    rt = StreamRuntime(pipe, num_workers=workers, heuristic="ct")
+    rt.run(vals)
+    assert pipe.outputs == expected
+
+
+def test_latency_markers_recorded():
+    source = list(range(1, 1000))
+    pipe, report = run_pipeline(
+        _specs_basic(), source, num_workers=2, marker_interval=16
+    )
+    assert report.mean_latency > 0
+    assert report.tuples_in == 999

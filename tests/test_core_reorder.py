@@ -1,0 +1,145 @@
+"""Unit + property tests for the reordering schemes (paper §3, Theorem 3.1)."""
+import random
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reorder import (
+    LockBasedReorderBuffer,
+    NonBlockingReorderBuffer,
+    make_reorder_buffer,
+)
+
+
+@pytest.mark.parametrize("scheme", ["non_blocking", "lock_based"])
+def test_in_order_single_thread(scheme):
+    out = []
+    buf = make_reorder_buffer(scheme, out.append, size=8)
+    for t in range(1, 20):
+        assert buf.send(t, t)
+    assert out == list(range(1, 20))
+
+
+def test_out_of_order_single_thread():
+    out = []
+    buf = NonBlockingReorderBuffer(out.append, size=16)
+    order = list(range(1, 17))
+    random.Random(0).shuffle(order)
+    for t in order:
+        buf.send(t, t)
+    assert out == list(range(1, 17))
+
+
+def test_entry_condition_rejects_far_future():
+    out = []
+    buf = NonBlockingReorderBuffer(out.append, size=4)
+    assert not buf.send(5, 5)  # next=1, window [1,5) excludes 5
+    assert buf.rejected_adds == 1
+    assert buf.send(1, 1)
+    assert out == [1]
+    assert buf.send(5, 5)  # window now [2,6)
+    assert out == [1]  # 5 buffered, waiting on 2..4
+
+
+def test_ring_wraparound():
+    out = []
+    buf = NonBlockingReorderBuffer(out.append, size=4)
+    for t in range(1, 101):
+        assert buf.send(t, t * 10)
+    assert out == [t * 10 for t in range(1, 101)]
+
+
+@pytest.mark.parametrize("scheme", ["non_blocking", "lock_based"])
+@pytest.mark.parametrize("n_threads", [2, 4, 8])
+def test_concurrent_ordering(scheme, n_threads):
+    """Theorem 3.1: outputs sent downstream in serial order under concurrency.
+
+    Workers model the paper's execution: each dequeues the next input from a
+    shared FIFO worklist, "processes" it, and retries send until accepted.
+    (The smallest in-flight serial is always held by some worker, which is why
+    the bounded ring cannot deadlock — the paper's §3 progress argument.)
+    """
+    import collections
+
+    n = 600
+    out = []
+    buf = make_reorder_buffer(scheme, out.append, size=16)
+    worklist = collections.deque(range(1, n + 1))
+
+    def worker(wid):
+        rng = random.Random(wid)
+        while True:
+            try:
+                t = worklist.popleft()
+            except IndexError:
+                return
+            if rng.random() < 0.2:
+                threading.Event().wait(rng.random() * 1e-4)  # processing skew
+            buf.send_blocking(t, t)
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert out == list(range(1, n + 1))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    perm=st.permutations(list(range(1, 33))),
+    size=st.sampled_from([1, 2, 4, 7, 32, 64]),
+)
+def test_property_any_permutation_any_ring(perm, size):
+    """Property: for any completion permutation and ring size, egress is ordered
+    and exactly-once (sequential adversarial schedule)."""
+    out = []
+    buf = NonBlockingReorderBuffer(out.append, size=size)
+    pending = list(perm)
+    while pending:
+        nxt = []
+        for t in pending:
+            if not buf.send(t, t):
+                nxt.append(t)  # ring full for t; retry in a later round
+        assert len(nxt) < len(pending), "no progress — liveness violated"
+        pending = nxt
+    assert out == sorted(perm)
+
+
+def test_nonblocking_adders_do_not_wait():
+    """The non-blocking property: while one worker drains a long prefix, another
+    worker's add must complete without taking the drain path's flag."""
+    out = []
+    gate = threading.Event()
+    slow_sent = []
+
+    def slow_downstream(v):
+        slow_sent.append(v)
+        gate.wait(0.2)  # drainer is slow
+
+    buf = NonBlockingReorderBuffer(slow_downstream, size=64)
+    for t in range(2, 10):
+        buf.send(t, t)  # buffered, next=1 missing
+
+    t_done = threading.Event()
+
+    def drainer():
+        buf.send(1, 1)  # triggers drain of 1..9, slow
+        t_done.set()
+
+    th = threading.Thread(target=drainer)
+    th.start()
+    while not slow_sent:  # wait until drain started
+        threading.Event().wait(1e-4)
+    # adder: must return promptly even though drain is in progress
+    import time
+
+    t0 = time.perf_counter()
+    assert buf.send(10, 10)
+    add_latency = time.perf_counter() - t0
+    gate.set()
+    th.join()
+    assert add_latency < 0.1, f"adder blocked for {add_latency}s"
+    assert out == []  # all sends went to slow_downstream
+    assert slow_sent == list(range(1, 11))

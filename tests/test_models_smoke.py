@@ -1,0 +1,108 @@
+"""Per-architecture smoke tests (deliverable f): reduced configs of each
+family run one forward/train step + prefill/decode consistency on CPU."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, applicable_shapes, get_config, smoke_config
+from repro.models.common import count_params, init_params
+from repro.models.transformer import (
+    decode_step,
+    forward_train,
+    generate,
+    loss_fn,
+    prefill,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=24):
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.num_encoder_tokens:
+        batch["encoder_states"] = jax.random.normal(
+            KEY, (B, cfg.num_encoder_tokens, cfg.d_model), cfg.dtype
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = smoke_config(arch)
+    params = init_params(cfg, KEY)
+    batch = _batch(cfg)
+    logits, aux = forward_train(cfg, params, batch["tokens"], batch.get("encoder_states"))
+    assert logits.shape == (2, 24, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[..., : cfg.vocab_size])))
+    loss, metrics = loss_fn(cfg, params, batch)
+    assert bool(jnp.isfinite(loss))
+    grads = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g).astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_matches_forward(arch):
+    cfg = dataclasses.replace(smoke_config(arch), capacity_factor=64.0)
+    params = init_params(cfg, KEY)
+    B, S = 2, 24
+    batch = _batch(cfg, B, S)
+    toks = batch["tokens"]
+    enc = batch.get("encoder_states")
+    full_logits, _ = forward_train(cfg, params, toks, enc)
+    lg_p, cache = prefill(cfg, params, toks[:, : S - 1], enc, max_len=S + 4)
+    lg_d, _ = decode_step(
+        cfg, params, toks[:, S - 1], cache, jnp.full((B,), S - 1, jnp.int32)
+    )
+    scale = float(jnp.abs(full_logits[:, S - 1]).max())
+    err_p = float(jnp.abs(lg_p - full_logits[:, S - 2]).max())
+    err_d = float(jnp.abs(lg_d - full_logits[:, S - 1]).max())
+    # mamba-family decode uses a different (recurrent) numeric path in bf16
+    tol = 0.15 * max(scale, 1.0) if cfg.has("mamba") else 3e-2 * max(scale, 1.0)
+    assert err_p <= tol, f"prefill mismatch {err_p} (scale {scale})"
+    assert err_d <= tol, f"decode mismatch {err_d} (scale {scale})"
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "mamba2-780m", "qwen2-moe-a2.7b"])
+def test_smoke_generate(arch):
+    cfg = smoke_config(arch)
+    params = init_params(cfg, KEY)
+    prompt = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    out = generate(cfg, params, prompt, num_steps=4)
+    assert out.shape == (2, 5)
+    assert bool(jnp.all((out >= 0) & (out < cfg.padded_vocab)))
+
+
+def test_full_configs_param_counts():
+    """Exact assigned configs must hit their published sizes (sanity that the
+    configs are the assignment, not approximations)."""
+    expect = {
+        "llama-3.2-vision-90b": (80, 95),
+        "jamba-1.5-large-398b": (380, 410),
+        "phi3.5-moe-42b-a6.6b": (40, 44),
+        "qwen2-moe-a2.7b": (13, 16),
+        "starcoder2-15b": (14, 17),
+        "glm4-9b": (8.5, 10),
+        "chatglm3-6b": (5.5, 7),
+        "musicgen-large": (2.0, 2.8),
+        "olmo-1b": (1.0, 1.5),
+        "mamba2-780m": (0.7, 1.0),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = count_params(get_config(arch)) / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+
+
+def test_applicable_shapes_rules():
+    assert "long_500k" in applicable_shapes(get_config("mamba2-780m"))
+    assert "long_500k" in applicable_shapes(get_config("jamba-1.5-large-398b"))
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        if cfg.family not in ("ssm", "hybrid"):
+            assert "long_500k" not in applicable_shapes(cfg)
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(applicable_shapes(cfg))

@@ -1,0 +1,21 @@
+"""Thread-runtime run with real-compute parametric operators (paper §7's
+micro-benchmark substrate) — ordering holds with real work in the loop."""
+from repro.core import run_pipeline
+from repro.streams.parametric import partitioned_parametric, stateless_parametric
+
+
+def test_parametric_pipeline_ordered_under_threads():
+    specs = [
+        stateless_parametric(matrix_n=8, selectivity=1.0),
+        partitioned_parametric(matrix_n=8, num_partitions=32),
+    ]
+    source = [i % 64 for i in range(2000)]  # 64 recurring keys
+    pipe, report = run_pipeline(
+        specs, source, num_workers=4, heuristic="ct", collect_outputs=True
+    )
+    assert report.tuples_out == 2000
+    # per-KEY state: each key's counter must be the arrival-ordered 1,2,3,...
+    seen = {}
+    for key, count in pipe.outputs:
+        assert count == seen.get(key, 0.0) + 1.0, "per-key order violated"
+        seen[key] = count

@@ -1,0 +1,111 @@
+"""Simulator sanity (qualitative paper claims) + TPCx-BB query correctness."""
+import pytest
+
+from repro.core.simulate import SimConfig, SimOp, simulate
+from repro.core import run_pipeline
+from repro.streams.tpcxbb import QUERIES, sim_ops
+
+
+# ------------------------------------------------------------------ simulator
+def test_sim_perfect_scaling_stateless():
+    ops = [SimOp("op", "stateless", cost_us=100.0)]
+    r1 = simulate(ops, 2000, SimConfig(num_workers=1, heuristic="lp"))
+    r8 = simulate(
+        [SimOp("op", "stateless", cost_us=100.0)], 2000,
+        SimConfig(num_workers=8, heuristic="lp"),
+    )
+    assert r1["makespan_us"] / r8["makespan_us"] > 7.0
+
+
+def test_sim_stateful_caps_at_one_worker():
+    ops = [SimOp("sf", "stateful", cost_us=50.0)]
+    r1 = simulate(ops, 1000, SimConfig(num_workers=1))
+    r8 = simulate([SimOp("sf", "stateful", cost_us=50.0)], 1000, SimConfig(num_workers=8))
+    assert r1["makespan_us"] / r8["makespan_us"] < 1.2  # no speedup possible
+
+
+def test_sim_nonblocking_beats_lockbased_under_contention():
+    def go(scheme):
+        return simulate(
+            [SimOp("light", "stateless", cost_us=10.0)],
+            20_000,
+            SimConfig(num_workers=16, reorder_scheme=scheme, heuristic="lp"),
+        )
+
+    nb, lb = go("non_blocking"), go("lock_based")
+    assert nb["makespan_us"] < lb["makespan_us"]
+    assert lb["blocked_us"] > 10 * nb["blocked_us"]
+
+
+def test_sim_hybrid_beats_partitioned_under_skew():
+    import random
+
+    def gaussian_key_sampler(sigma, key_space):
+        def sample(rng: random.Random) -> int:
+            v = ((rng.gauss(0.0, sigma) + 1.0) % 2.0) - 1.0
+            return int((v + 1.0) / 2.0 * (key_space - 1))
+
+        return sample
+
+    def go(scheme, parts):
+        return simulate(
+            [SimOp("ps", "partitioned", cost_us=100.0, num_partitions=parts)],
+            10_000,
+            SimConfig(num_workers=8, worklist_scheme=scheme, heuristic="lp"),
+            key_sampler=gaussian_key_sampler(0.2, key_space=parts),
+        )
+
+    hy = go("hybrid", 100)
+    pq = go("partitioned", 8)
+    assert hy["makespan_us"] * 1.5 < pq["makespan_us"]
+
+
+def test_sim_conservation():
+    """Tuples in == tuples out x selectivity along the chain."""
+    ops = [
+        SimOp("a", "stateless", cost_us=5.0, selectivity=2.0),
+        SimOp("b", "partitioned", cost_us=5.0, num_partitions=16, selectivity=1.0),
+        SimOp("c", "stateless", cost_us=5.0, selectivity=0.5),
+    ]
+    r = simulate(ops, 1000, SimConfig(num_workers=4))
+    assert r["egress"] == 1000 * 2 * 1 * 0.5
+
+
+# ------------------------------------------------------------------ tpcxbb
+@pytest.mark.parametrize("qname", list(QUERIES))
+def test_tpcxbb_queries_run_ordered(qname):
+    n = 6000
+    specs, source = QUERIES[qname](n=n)
+    pipe, report = run_pipeline(
+        specs, list(source), num_workers=3, heuristic="ct", collect_outputs=True
+    )
+    # sequential oracle comparison
+    from test_core_pipeline import _sequential_reference
+
+    specs2, source2 = QUERIES[qname](n=n)
+    expected = _sequential_reference(specs2, list(source2))
+    assert pipe.outputs == expected, f"{qname}: concurrent != sequential"
+    assert pipe.egress_count > 0, f"{qname}: query produced no output"
+
+
+@pytest.mark.parametrize("qname", list(QUERIES))
+def test_tpcxbb_sim_profiles(qname):
+    ops = sim_ops(qname)
+    assert len(ops) >= 3
+    r = simulate(ops, 2000, SimConfig(num_workers=4, heuristic="ct"),
+                 key_sampler=lambda rng: rng.randrange(1 << 30))
+    assert r["throughput_per_s"] > 0
+    assert r["egress"] >= 0
+
+
+# ------------------------------------------------------------------ scheduler
+def test_ct_beats_qst_on_long_pipeline():
+    """The paper's headline scheduling claim, in simulation."""
+    def go(h):
+        return simulate(
+            sim_ops("q2"), 10_000, SimConfig(num_workers=8, heuristic=h),
+            key_sampler=lambda rng: rng.randrange(1 << 30),
+        )
+
+    ct, qst = go("ct"), go("qst")
+    assert ct["throughput_per_s"] >= qst["throughput_per_s"] * 0.95
