@@ -1,10 +1,15 @@
 """Fig. 11 — partitioning schemes on the TPCx-BB pipeline queries (CT
 heuristic, 8 workers): peak throughput and latency, HYBRID vs PARTITIONED.
+
+The DAG section runs the same scheme comparison on the DAG query forms
+through the thread runtime: the worklist scheme applies to the partitioned
+operators *inside* split/merge branches.
 """
 from __future__ import annotations
 
+from repro.core import run_graph
 from repro.core.simulate import SimConfig, simulate
-from repro.streams.tpcxbb import sim_ops
+from repro.streams.tpcxbb import DAG_QUERIES, sim_ops
 
 from .common import fmt_row
 
@@ -26,6 +31,26 @@ def run(print_fn=print, n_tuples=15_000):
                     best_thru = r["throughput_per_s"]
                     best_lat = r["mean_latency_us"] / 1e3
             print_fn(fmt_row("fig11", q, scheme, f"{best_thru:.0f}", f"{best_lat:.3f}"))
+    run_dag(print_fn, n_tuples=min(n_tuples, 6000))
+
+
+def run_dag(print_fn=print, n_tuples=6000):
+    """Worklist schemes on DAG topologies (thread runtime, ordered egress)."""
+    for q, builder in DAG_QUERIES.items():
+        for scheme in ("hybrid", "partitioned"):
+            best_thru, best_lat = 0.0, 0.0
+            for w in (2, 4):
+                nodes, edges, src = builder(n=n_tuples)
+                _, r = run_graph(
+                    nodes, edges, list(src),
+                    num_workers=w, heuristic="ct", worklist_scheme=scheme,
+                )
+                if r.throughput > best_thru:
+                    best_thru = r.throughput
+                    best_lat = r.mean_latency * 1e3
+            print_fn(
+                fmt_row("fig11dag", q, scheme, f"{best_thru:.0f}", f"{best_lat:.3f}")
+            )
 
 
 if __name__ == "__main__":

@@ -1,17 +1,23 @@
 """Fig. 8a/8b — scheduling heuristics (CT/LP/ET/QST) on TPCx-BB queries:
 throughput and mean processing latency as cores scale (discrete-event sim
 mirroring each query's operator cost/selectivity profile).
+
+The DAG section additionally drives the *thread* runtime on the DAG forms of
+the queries (keyed split -> parallel branches -> ordered merge), including the
+``adaptive`` heuristic whose controller resizes per-node parallelism caps.
 """
 from __future__ import annotations
 
+from repro.core import run_graph
 from repro.core.simulate import SimConfig, simulate
-from repro.streams.tpcxbb import sim_ops
+from repro.streams.tpcxbb import DAG_QUERIES, sim_ops
 
 from .common import fmt_row
 
 N_TUPLES = 15_000
 QUERIES = ("q1", "q2", "q3", "q4", "q15")
 HEURISTICS = ("ct", "lp", "et", "qst")
+DAG_HEURISTICS = ("ct", "lp", "et", "qst", "adaptive")
 
 
 def run(print_fn=print, workers=(2, 4, 8, 16), n_tuples=N_TUPLES):
@@ -32,6 +38,24 @@ def run(print_fn=print, workers=(2, 4, 8, 16), n_tuples=N_TUPLES):
                         f"{r['throughput_per_s']:.0f}",
                         f"{r['mean_latency_us']/1e3:.3f}",
                         f"{r['p99_latency_us']/1e3:.3f}",
+                    )
+                )
+    run_dag(print_fn, n_tuples=min(n_tuples, 6000))
+
+
+def run_dag(print_fn=print, workers=(2, 4), n_tuples=6000):
+    """DAG topologies on the thread runtime (real threads, ordered egress)."""
+    for q, builder in DAG_QUERIES.items():
+        for h in DAG_HEURISTICS:
+            for w in workers:
+                nodes, edges, src = builder(n=n_tuples)
+                _, r = run_graph(nodes, edges, list(src), num_workers=w, heuristic=h)
+                print_fn(
+                    fmt_row(
+                        "fig8dag", q, h, w,
+                        f"{r.throughput:.0f}",
+                        f"{r.mean_latency*1e3:.3f}",
+                        f"{r.p99_latency*1e3:.3f}",
                     )
                 )
 

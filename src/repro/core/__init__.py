@@ -10,6 +10,7 @@ from .serial import AtomicFlag, AtomicLong, SerialAssigner
 from .reorder import (
     LockBasedReorderBuffer,
     NonBlockingReorderBuffer,
+    ParkingReorderBuffer,
     ReorderBuffer,
     make_reorder_buffer,
 )
@@ -20,9 +21,16 @@ from .hybrid import (
     make_worklist,
 )
 from .operators import OpSpec, OperatorNode, OpStats, PARTITIONED, STATEFUL, STATELESS
-from .pipeline import CompiledPipeline, compile_pipeline
+from .pipeline import (
+    CompiledPipeline,
+    GraphPipeline,
+    Merge,
+    Split,
+    compile_graph,
+    compile_pipeline,
+)
 from .scheduler import HEURISTICS, Scheduler
-from .runtime import RunReport, StreamRuntime, run_pipeline
+from .runtime import RunReport, StreamRuntime, run_graph, run_pipeline
 
 __all__ = [
     "AtomicFlag",
@@ -30,6 +38,7 @@ __all__ = [
     "SerialAssigner",
     "LockBasedReorderBuffer",
     "NonBlockingReorderBuffer",
+    "ParkingReorderBuffer",
     "ReorderBuffer",
     "make_reorder_buffer",
     "HybridQueueWorklist",
@@ -43,10 +52,15 @@ __all__ = [
     "STATEFUL",
     "STATELESS",
     "CompiledPipeline",
+    "GraphPipeline",
+    "Split",
+    "Merge",
+    "compile_graph",
     "compile_pipeline",
     "HEURISTICS",
     "Scheduler",
     "RunReport",
     "StreamRuntime",
+    "run_graph",
     "run_pipeline",
 ]

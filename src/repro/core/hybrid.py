@@ -94,8 +94,11 @@ class PartitionedQueueWorklist(Worklist):
         self._size = AtomicLong(0)
 
     def add(self, serial, key, item):
-        self._queues[self._partitioner(key)].append((serial, key, item))
+        # Count BEFORE publishing: a consumer may process-and-decrement the
+        # moment the tuple is visible, and a transiently negative size makes
+        # __len__ raise (len() must be >= 0), killing the worker thread.
         self._size.fetch_add(1)
+        self._queues[self._partitioner(key)].append((serial, key, item))
 
     def consume(self, worker_id, operate, budget):
         done = 0
@@ -115,7 +118,7 @@ class PartitionedQueueWorklist(Worklist):
         return done
 
     def __len__(self):
-        return self._size.load()
+        return max(self._size.load(), 0)
 
 
 class HybridQueueWorklist(Worklist):
@@ -137,9 +140,9 @@ class HybridQueueWorklist(Worklist):
     # fig. 7 addInput
     def add(self, serial, key, item):
         p = self._partitioner(key)
+        self._size.fetch_add(1)  # before publishing (see PartitionedQueue.add)
         self._partition_queues[p].append((serial, key, item))
         self._master.append(p)
-        self._size.fetch_add(1)
 
     # fig. 7 consumeInputs (+ scheduler budget)
     def consume(self, worker_id, operate, budget):
@@ -158,13 +161,23 @@ class HybridQueueWorklist(Worklist):
                     done += 1
                     if self._count[p].fetch_sub(1) <= 1:
                         break
+                    if done >= budget:
+                        # Time slice exhausted with delegations pending: hand
+                        # the partition off instead of overrunning the budget.
+                        # exchange(0) releases exclusivity (a future fetch_add
+                        # sees 0 and becomes active); one master token per
+                        # abandoned tuple restores the token<->tuple invariant.
+                        pending = self._count[p].exchange(0)
+                        for _ in range(pending):
+                            self._master.append(p)
+                        return done
             else:
                 self.delegated += 1
                 # delegated to the active worker; move on (non-blocking)
         return done
 
     def __len__(self):
-        return self._size.load()
+        return max(self._size.load(), 0)
 
 
 def make_worklist(

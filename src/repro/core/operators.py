@@ -19,7 +19,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Hashable, Optional
 
 from .hybrid import make_worklist
-from .reorder import make_reorder_buffer
+from .reorder import ParkingReorderBuffer, make_reorder_buffer
 from .serial import AtomicLong, SerialAssigner
 
 STATELESS = "stateless"
@@ -100,6 +100,9 @@ class OperatorNode:
         self.downstream: Optional[Callable[[Any, Optional[_Marker]], None]] = None
         self.stats = OpStats()
         self.workers = AtomicLong(0)  # currently allotted workers (w_i)
+        # Effective parallelism cap M_i: the adaptive controller lowers this
+        # below max_dop to match the operator's estimated load share.
+        self.dop_cap = 1 << 30
         self._serials = SerialAssigner()
         self._stats_lock = threading.Lock()
 
@@ -111,8 +114,12 @@ class OperatorNode:
         elif spec.kind == STATELESS:
             self.max_dop = 1 << 30  # effectively ∞ (capped by cores)
             self._queue = collections.deque()
-            self._reorder = make_reorder_buffer(
-                reorder_scheme, self._emit, size=reorder_size
+            # Parking wrapper: non-FIFO worklists (Volcano bucket ownership,
+            # hybrid budget handoffs) can pull a serial arbitrarily far ahead
+            # of the ring window; spinning on the reject would deadlock once
+            # every worker holds a far-future serial.
+            self._reorder = ParkingReorderBuffer(
+                make_reorder_buffer(reorder_scheme, self._emit, size=reorder_size)
             )
         else:  # PARTITIONED
             self.max_dop = spec.num_partitions
@@ -123,8 +130,8 @@ class OperatorNode:
                 spec.partitioner,
                 num_workers=num_workers,
             )
-            self._reorder = make_reorder_buffer(
-                reorder_scheme, self._emit, size=reorder_size
+            self._reorder = ParkingReorderBuffer(
+                make_reorder_buffer(reorder_scheme, self._emit, size=reorder_size)
             )
 
     # ---- producer side ----------------------------------------------------
@@ -143,7 +150,8 @@ class OperatorNode:
         return len(self._queue)
 
     def schedulable(self) -> bool:
-        return self.workers.load() < self.max_dop and self.worklist_size() > 0
+        cap = min(self.max_dop, self.dop_cap)
+        return self.workers.load() < cap and self.worklist_size() > 0
 
     # ---- worker side --------------------------------------------------------
     def work(self, worker_id: int, budget: int) -> int:
@@ -174,7 +182,7 @@ class OperatorNode:
         if self._reorder is None:
             self._emit((outs, marker))
         else:
-            self._reorder.send_blocking(serial, (outs, marker))
+            self._reorder.send(serial, (outs, marker))
 
     def _operate_partitioned(self, serial: int, key: Hashable, item) -> None:
         value, marker = item
@@ -191,7 +199,10 @@ class OperatorNode:
         self._states[key] = state
         dt = time.perf_counter() - t0
         self._account(dt, len(outs))
-        self._reorder.send_blocking(serial, (outs, marker))
+        self._reorder.send(serial, (outs, marker))
+
+    def overflow_count(self) -> int:
+        return 0 if self._reorder is None else self._reorder.parked_count()
 
     def _account(self, dt: float, n_out: int) -> None:
         with self._stats_lock:

@@ -12,9 +12,16 @@ serial number before they are sent downstream.
 ``send(t, output)`` returns False when the bounded ring cannot yet accept serial
 ``t`` (entry condition ``next <= t < next + s``); the caller must retry later —
 this is the paper's back-pressure mechanism.
+
+:class:`ParkingReorderBuffer` wraps either scheme with a spin-free overflow
+side channel for callers that must never block *or* fail: rejected serials
+park in a host-side heap and are re-sent once later traffic advances the
+window.  Needed wherever in-flight serials can outrun the ring arbitrarily
+(non-FIFO worklists, single-threaded engines, merge fan-in).
 """
 from __future__ import annotations
 
+import heapq
 import threading
 import time
 from typing import Any, Callable, Optional
@@ -46,6 +53,10 @@ class ReorderBuffer:
         while not self.send(t, output):
             if spin:
                 time.sleep(spin)
+
+    def accepts(self, t: int) -> bool:
+        """Whether a send of serial ``t`` would be admitted right now."""
+        return True  # unbounded schemes always accept
 
 
 class LockBasedReorderBuffer(ReorderBuffer):
@@ -93,6 +104,10 @@ class NonBlockingReorderBuffer(ReorderBuffer):
         self.blocked_time = 0.0  # always ~0; kept for symmetric instrumentation
         self.rejected_adds = 0  # entry-condition failures (ring full for t)
 
+    def accepts(self, t: int) -> bool:
+        n = self._next.load()
+        return n <= t < n + self._size
+
     # -- paper fig. 4 ------------------------------------------------------
     def send(self, t: int, output: Any) -> bool:
         success = self._try_add(t, output)
@@ -126,6 +141,64 @@ class NonBlockingReorderBuffer(ReorderBuffer):
             # Re-check: an add may have raced with the flag clear (fig. 4 L39-42).
             if self._buffer[i] is _EMPTY:
                 return
+
+
+class ParkingReorderBuffer:
+    """Reliable, never-blocking facade over a :class:`ReorderBuffer`.
+
+    A bounded ring rejects serials beyond its window; spinning on the reject
+    deadlocks as soon as every worker holds a far-future serial (non-FIFO
+    worklists make that reachable) or the caller is single threaded.  Here a
+    rejected serial parks in a min-heap instead, and :meth:`flush` re-sends
+    parked serials once the window reaches them — every successful send calls
+    it, so parked output drains as the stream progresses.
+
+    Concurrency: a parked serial is *claimed* (popped) under the lock before
+    the re-send, so exactly one thread ever sends a given serial — a duplicate
+    send could otherwise re-populate a drained ring slot and corrupt the
+    sequence one window later.  If the claimed send is rejected the entry is
+    re-parked; the subsequent ``accepts`` check closes the race where the
+    window advanced (and its owner's flush missed the re-parked entry) in
+    between.
+    """
+
+    def __init__(self, inner: ReorderBuffer):
+        self._inner = inner
+        self._parked: dict[int, Any] = {}
+        self._heap: list[int] = []  # min-heap of parked serials (lazy deletes)
+        self._lock = threading.Lock()
+
+    def send(self, t: int, output: Any) -> None:
+        if not self._inner.send(t, output):
+            with self._lock:
+                self._parked[t] = output
+                heapq.heappush(self._heap, t)
+        self.flush()
+
+    def flush(self) -> None:
+        while True:
+            with self._lock:
+                while self._heap and self._heap[0] not in self._parked:
+                    heapq.heappop(self._heap)  # claimed by another flusher
+                if not self._heap:
+                    return
+                t = self._heap[0]
+                payload = self._parked.pop(t)  # claim: we are t's only sender
+            if self._inner.send(t, payload):
+                continue
+            with self._lock:
+                self._parked[t] = payload
+                # Re-push: a concurrent flusher may have lazily popped t's
+                # heap entry while it was claimed (t absent from the dict);
+                # without this the entry would be unreachable forever.
+                heapq.heappush(self._heap, t)
+            if not self._inner.accepts(t):
+                return  # window still short; a later send will flush
+            # window advanced during the re-park: retry, we may be last
+
+    def parked_count(self) -> int:
+        with self._lock:
+            return len(self._parked)
 
 
 def make_reorder_buffer(

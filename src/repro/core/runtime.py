@@ -3,6 +3,12 @@
 Workers loop: query scheduler -> work a time slice on the chosen operator ->
 update stats -> repeat. Ingress can be driven externally (``pipeline.push``)
 or by a source callable pumping tuples at a target rate.
+
+With ``heuristic="adaptive"`` the runtime additionally starts an adaptive
+controller thread that periodically calls :meth:`Scheduler.adapt` — it
+re-estimates per-operator cost/selectivity from live stats and resizes each
+node's effective parallelism cap M_i to its load share, dynamically mapping
+the computation's exposed parallelism onto the machine's (paper §2/§6).
 """
 from __future__ import annotations
 
@@ -11,7 +17,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Iterable, Optional
 
-from .pipeline import CompiledPipeline
+from .pipeline import CompiledPipeline, GraphPipeline
 from .scheduler import Scheduler
 
 
@@ -36,16 +42,20 @@ class RunReport:
 class StreamRuntime:
     def __init__(
         self,
-        pipeline: CompiledPipeline,
+        pipeline: GraphPipeline,
         num_workers: int = 4,
         heuristic: str = "ct",
         **sched_kw,
     ):
         self.pipeline = pipeline
         self.num_workers = num_workers
-        self.scheduler = Scheduler(pipeline.nodes, heuristic, **sched_kw)
+        sched_kw.setdefault("edges", getattr(pipeline, "sched_edges", None))
+        self.scheduler = Scheduler(
+            pipeline.nodes, heuristic, num_workers=num_workers, **sched_kw
+        )
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
+        self._controller: Optional[threading.Thread] = None
         self._busy = [0.0] * num_workers
 
     # ------------------------------------------------------------------ workers
@@ -63,6 +73,13 @@ class StreamRuntime:
                 self.scheduler.release(node)
             self._busy[wid] += time.perf_counter() - t0
 
+    def _controller_loop(self) -> None:
+        """Adaptive controller (heuristic="adaptive"): periodically re-estimate
+        operator cost/selectivity and resize per-node parallelism caps."""
+        while not self._stop.is_set():
+            self.scheduler.adapt()
+            self._stop.wait(self.scheduler.adapt_interval)
+
     def start(self) -> None:
         self._stop.clear()
         self._threads = [
@@ -71,11 +88,19 @@ class StreamRuntime:
         ]
         for t in self._threads:
             t.start()
+        if self.scheduler.heuristic == "adaptive":
+            self._controller = threading.Thread(
+                target=self._controller_loop, daemon=True
+            )
+            self._controller.start()
 
     def stop(self) -> None:
         self._stop.set()
         for t in self._threads:
             t.join(timeout=5.0)
+        if self._controller is not None:
+            self._controller.join(timeout=5.0)
+            self._controller = None
 
     # ------------------------------------------------------------------ drive
     def run(
@@ -133,6 +158,34 @@ def run_pipeline(
     """Convenience one-shot: compile, run to drain, report."""
     pipe = CompiledPipeline(
         specs,
+        reorder_scheme=reorder_scheme,
+        worklist_scheme=worklist_scheme,
+        num_workers=num_workers,
+        collect_outputs=collect_outputs,
+        marker_interval=marker_interval,
+    )
+    rt = StreamRuntime(pipe, num_workers=num_workers, heuristic=heuristic, **kw)
+    report = rt.run(source)
+    return pipe, report
+
+
+def run_graph(
+    nodes,
+    edges,
+    source: Iterable,
+    *,
+    num_workers: int = 4,
+    heuristic: str = "ct",
+    reorder_scheme: str = "non_blocking",
+    worklist_scheme: str = "hybrid",
+    collect_outputs: bool = False,
+    marker_interval: int = 64,
+    **kw,
+) -> tuple[GraphPipeline, RunReport]:
+    """Convenience one-shot for DAG pipelines: compile, run to drain, report."""
+    pipe = GraphPipeline(
+        nodes,
+        edges,
         reorder_scheme=reorder_scheme,
         worklist_scheme=worklist_scheme,
         num_workers=num_workers,

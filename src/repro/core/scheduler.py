@@ -1,26 +1,39 @@
-"""Dynamic scheduling heuristics (paper §6).
+"""Dynamic scheduling heuristics (paper §6), generalized to DAG dataflow.
 
 The central scheduler answers: which operator next, and how many tuples
 (= constant time slice s / per-tuple cost c_i). Heuristics:
 
-- QST (§6.1): queue-size throttling — earliest operator whose *output* queue is
-  below its selectivity-scaled threshold T_i = C·cs_i / Σ cs_j.
-- LP  (§6.2): last-in-pipeline — latest schedulable operator.
+- QST (§6.1): queue-size throttling — earliest operator whose *output* queues
+  are below its selectivity-scaled threshold T_i = C·cs_i / Σ cs_j.
+- LP  (§6.2): last-in-pipeline — latest (topologically) schedulable operator.
 - ET  (§6.3): estimated worklist completion time p_i = I_i·c_i/(w_i+1), max wins.
 - CT  (§6.4): normalized current-window throughput n_i = (T_i^w + w_i·s)/(c_i·cs_i),
   min wins (the bottleneck operator).
+- ADAPTIVE: CT's pick, plus a periodic controller (:meth:`Scheduler.adapt`)
+  that re-estimates per-operator cost/selectivity, recomputes each node's
+  share of total load, and resizes the effective parallelism cap M_i
+  (``node.dop_cap``) — the paper's dynamic mapping of exposed parallelism
+  onto machine parallelism (§2/§6).
 
-All consider only *schedulable* operators: w_i < M_i and non-empty worklist.
+Topology awareness: the pipeline hands the scheduler weighted op-to-op edges
+``(u, v, w)`` (routing nodes collapsed; a B-way split contributes w=1/B).
+``cs_i`` becomes the *flow rate* out of operator i per source tuple, computed
+by propagating estimated selectivities through the graph — for a linear chain
+this reduces exactly to the cumulative-selectivity product of the paper.
+
+All heuristics consider only *schedulable* operators: w_i < M_i and non-empty
+worklist.
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from .operators import OperatorNode
 
-HEURISTICS = ("qst", "lp", "et", "ct")
+HEURISTICS = ("qst", "lp", "et", "ct", "adaptive")
 
 
 class Scheduler:
@@ -34,6 +47,9 @@ class Scheduler:
         time_slice: float = 0.002,  # s, the constant slice (paper §6)
         capacity: int = 4096,  # C for QST
         window: float = 0.05,  # w for CT
+        edges: Optional[Sequence[Tuple[int, int, float]]] = None,
+        num_workers: int = 4,  # machine parallelism (adaptive controller)
+        adapt_interval: float = 0.02,  # s between controller re-estimations
     ):
         if heuristic not in HEURISTICS:
             raise ValueError(f"unknown heuristic {heuristic!r}; pick from {HEURISTICS}")
@@ -42,10 +58,28 @@ class Scheduler:
         self.time_slice = time_slice
         self.capacity = capacity
         self.window = window
+        self.num_workers = num_workers
+        self.adapt_interval = adapt_interval
+        self.adaptations = 0  # controller invocations (instrumentation)
         self._lock = threading.Lock()
         self._window_start = time.perf_counter()
-        # cumulative selectivity cs_i = prod_{k<=i} s_k (priors blended w/ estimates)
-        self._cs_cache: list[float] = [1.0] * len(nodes)
+        # Weighted op->op edges; default: linear chain with unit weights.
+        if edges is None:
+            edges = [(i, i + 1, 1.0) for i in range(len(nodes) - 1)]
+        self._edges = list(edges)
+        self._out: list[list[tuple[int, float]]] = [[] for _ in nodes]
+        has_in = [False] * len(nodes)
+        self._ingress_flow = [0.0] * len(nodes)
+        for u, v, w in self._edges:
+            if u < 0:  # ingress fraction edge (source is a routing node)
+                self._ingress_flow[v] += w
+                has_in[v] = True
+            else:
+                self._out[u].append((v, w))
+                has_in[v] = True
+        for i, seen in enumerate(has_in):
+            if not seen:
+                self._ingress_flow[i] = 1.0
 
     # ------------------------------------------------------------------ utils
     def _cost(self, i: int) -> float:
@@ -56,12 +90,19 @@ class Scheduler:
         n = self.nodes[i]
         return n.stats.selectivity(n.spec.selectivity)
 
-    def _cum_selectivities(self) -> list[float]:
-        cs, acc = [], 1.0
+    def _flows(self) -> tuple[list[float], list[float]]:
+        """(in_rate, out_rate) per op, per source tuple, via the weighted DAG.
+
+        Node indices are in topological order, so a single ascending pass
+        propagates flow correctly.
+        """
+        in_rate = list(self._ingress_flow)
+        out_rate = [0.0] * len(self.nodes)
         for i in range(len(self.nodes)):
-            acc *= self._selectivity(i)
-            cs.append(max(acc, 1e-9))
-        return cs
+            out_rate[i] = max(in_rate[i] * self._selectivity(i), 1e-9)
+            for v, w in self._out[i]:
+                in_rate[v] += out_rate[i] * w
+        return in_rate, out_rate
 
     def _budget(self, i: int) -> int:
         return max(1, int(self.time_slice / self._cost(i)))
@@ -83,6 +124,24 @@ class Scheduler:
     def release(self, node: OperatorNode) -> None:
         node.workers.fetch_sub(1)
 
+    # ------------------------------------------------------------- controller
+    def adapt(self) -> None:
+        """One adaptive-controller step: re-estimate cost/selectivity, then
+        resize each operator's effective parallelism cap M_i proportionally to
+        its share of total load (in_rate_i · c_i), bounded by its max DOP.
+
+        Estimates refresh implicitly: :meth:`OpStats.cost`/``selectivity``
+        fold in measured busy time and tuple counts once warmed up.
+        """
+        in_rate, _ = self._flows()
+        loads = [in_rate[i] * self._cost(i) for i in range(len(self.nodes))]
+        total = sum(loads) or 1.0
+        for i, node in enumerate(self.nodes):
+            share = loads[i] / total
+            cap = max(1, math.ceil(self.num_workers * share))
+            node.dop_cap = min(cap, node.max_dop)
+        self.adaptations += 1
+
     # ----------------------------------------------------------------- picks
     def _pick(self) -> Optional[int]:
         cand = self._schedulable()
@@ -94,16 +153,17 @@ class Scheduler:
             return self._pick_qst(cand)
         if self.heuristic == "et":
             return self._pick_et(cand)
-        return self._pick_ct(cand)
+        return self._pick_ct(cand)  # ct + adaptive
 
     def _pick_qst(self, cand: list[int]) -> Optional[int]:
-        cs = self._cum_selectivities()
-        total = sum(cs)
+        _, out_rate = self._flows()
+        total = sum(out_rate)
         for i in cand:
-            if i + 1 >= len(self.nodes):
-                return i  # last operator: egress is unbounded
-            threshold = self.capacity * cs[i] / total
-            if self.nodes[i + 1].worklist_size() < max(threshold, 1.0):
+            succ = self._out[i]
+            if not succ:
+                return i  # egress operator: output is unbounded
+            threshold = max(self.capacity * out_rate[i] / total, 1.0)
+            if all(self.nodes[v].worklist_size() < threshold for v, _ in succ):
                 return i
         return cand[0]  # all throttled: fall back to earliest (keeps progress)
 
@@ -122,12 +182,12 @@ class Scheduler:
             for n in self.nodes:
                 n.stats.window_busy = 0.0
             self._window_start = now
-        cs = self._cum_selectivities()
+        _, out_rate = self._flows()
         best, best_n = cand[0], float("inf")
         for i in cand:
             n = self.nodes[i]
             eff = (n.stats.window_busy + n.workers.load() * self.time_slice) / (
-                self._cost(i) * cs[i]
+                self._cost(i) * out_rate[i]
             )
             if eff < best_n:
                 best, best_n = i, eff

@@ -38,6 +38,13 @@ class AtomicLong:
         with self._lock:
             self._value = value
 
+    def exchange(self, value: int) -> int:
+        """Atomically set to ``value`` and return the previous value."""
+        with self._lock:
+            old = self._value
+            self._value = value
+            return old
+
 
 class AtomicFlag:
     """test_and_set / clear, as used by the non-blocking reorder buffer."""

@@ -43,12 +43,18 @@ def _flash_kernel(
 
     def body(kb, carry):
         m, l, acc = carry
+        # int indices are rejected by pallas load on this jax version; use
+        # size-1 dynamic slices and drop the unit axes after the load.
         k = pl.load(
-            k_ref, (0, pl.dslice(kb * block_k, block_k), 0, slice(None))
-        ).astype(jnp.float32)
+            k_ref,
+            (pl.dslice(0, 1), pl.dslice(kb * block_k, block_k), pl.dslice(0, 1),
+             slice(None)),
+        )[0, :, 0, :].astype(jnp.float32)
         v = pl.load(
-            v_ref, (0, pl.dslice(kb * block_k, block_k), 0, slice(None))
-        ).astype(jnp.float32)
+            v_ref,
+            (pl.dslice(0, 1), pl.dslice(kb * block_k, block_k), pl.dslice(0, 1),
+             slice(None)),
+        )[0, :, 0, :].astype(jnp.float32)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (Bq, Bk)
         if causal:
             k_pos = kb * block_k + jax.lax.broadcasted_iota(

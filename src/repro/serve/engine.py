@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.reorder import NonBlockingReorderBuffer
+from repro.core.reorder import NonBlockingReorderBuffer, ParkingReorderBuffer
 from repro.core.serial import SerialAssigner
 from repro.models import transformer
 from repro.models.common import ModelConfig
@@ -64,8 +64,13 @@ class OrderedServingEngine:
         self._serials = SerialAssigner()
         self.pending: list[Request] = []
         self.completions: list[Completion] = []
-        self._reorder = NonBlockingReorderBuffer(
-            self._emit, size=reorder_size
+        # Parking wrapper: a slow head-of-line request can hold ``next`` back
+        # while more than reorder_size later requests complete. The engine is
+        # single threaded, so spinning in send_blocking would livelock —
+        # out-of-window completions park host-side and drain as the ring
+        # window advances.
+        self._reorder = ParkingReorderBuffer(
+            NonBlockingReorderBuffer(self._emit, size=reorder_size)
         )
 
         # slot state (host-side bookkeeping; device-side cache batch = slots)
@@ -155,8 +160,9 @@ class OrderedServingEngine:
                     time.perf_counter() - self.slot_t0[b],
                 )
                 # ordered egress: the reorder buffer holds it until all
-                # earlier-arrived requests have been emitted
-                self._reorder.send_blocking(comp.serial, comp)
+                # earlier-arrived requests have been emitted; out-of-window
+                # completions park (never spin) and drain on later sends
+                self._reorder.send(comp.serial, comp)
                 self.active[b] = False
                 self.slot_serial[b] = -1
 

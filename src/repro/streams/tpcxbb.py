@@ -10,13 +10,22 @@ stateful, SF = stateful):
 
 Each builder returns (specs, source_iterator). Specs carry per-op cost/
 selectivity priors used by the scheduler and the discrete-event simulator.
+
+DAG forms (``q1_dag``/``q4_dag``/``q15_dag``, registry ``DAG_QUERIES``)
+restructure a query's partitioned hot spot as a genuine dataflow DAG:
+a keyed ``Split`` fans tuples across B parallel copies of the partitioned
+operator (same key routes to the same branch, so per-key state is preserved)
+and a ``Merge`` re-interleaves the branch outputs in split-ingress order —
+egress is identical to the linear form, but the hot operator's exposed
+parallelism is B-fold. Builders return (nodes, edges, source_iterator) for
+:class:`repro.core.GraphPipeline`.
 """
 from __future__ import annotations
 
 import itertools
 from typing import Iterable
 
-from repro.core import OpSpec
+from repro.core import Merge, OpSpec, Split
 
 from . import sources
 
@@ -239,6 +248,66 @@ def q15(n: int = 20000, seed: int = 0):
 
 
 QUERIES = {"q1": q1, "q2": q2, "q3": q3, "q4": q4, "q15": q15}
+
+
+# ------------------------------------------------------------------ DAG forms
+def q1_dag(n: int = 20000, seed: int = 0, branches: int = 2):
+    """Q1 as a DAG: the basket_pairs hot spot runs on ``branches`` parallel
+    keyed branches (split by basket -> per-key state stays consistent)."""
+    specs, src = q1(n=n, seed=seed)
+    project, basket_pairs, pair_count, hourly_top100 = specs
+    nodes = {"project": project, "split": Split("keyed", key_fn=lambda t: t[1])}
+    edges = [("project", "split")]
+    for b in range(branches):
+        nodes[f"pairs{b}"] = basket_pairs
+        edges += [("split", f"pairs{b}"), (f"pairs{b}", "merge")]
+    nodes["merge"] = Merge()
+    nodes["pair_count"] = pair_count
+    nodes["top100"] = hourly_top100
+    edges += [("merge", "pair_count"), ("pair_count", "top100")]
+    return nodes, edges, src
+
+
+def q4_dag(n: int = 20000, seed: int = 0, branches: int = 2):
+    """Q4 as a DAG: whole sessionize->pages sub-chains run per branch (split
+    keyed by user), merged back in arrival order before the running average."""
+    specs, src = q4(n=n, seed=seed)
+    project, abandoned, pages, running_avg = specs
+    nodes = {"project": project, "split": Split("keyed", key_fn=lambda t: t[0])}
+    edges = [("project", "split")]
+    for b in range(branches):
+        nodes[f"abandoned{b}"] = abandoned
+        nodes[f"pages{b}"] = pages
+        edges += [
+            ("split", f"abandoned{b}"),
+            (f"abandoned{b}", f"pages{b}"),
+            (f"pages{b}", "merge"),
+        ]
+    nodes["merge"] = Merge()
+    nodes["avg"] = running_avg
+    edges += [("merge", "avg")]
+    return nodes, edges, src
+
+
+def q15_dag(n: int = 20000, seed: int = 0, branches: int = 2):
+    """Q15 as a DAG: regression slopes computed on parallel keyed branches;
+    the merge is the egress node (ordered fan-in straight to the collector)."""
+    specs, src = q15(n=n, seed=seed)
+    in_store, project, slope = specs
+    nodes = {
+        "in_store": in_store,
+        "project": project,
+        "split": Split("keyed", key_fn=lambda t: t[0]),
+        "merge": Merge(),
+    }
+    edges = [("in_store", "project"), ("project", "split")]
+    for b in range(branches):
+        nodes[f"slope{b}"] = slope
+        edges += [("split", f"slope{b}"), (f"slope{b}", "merge")]
+    return nodes, edges, src
+
+
+DAG_QUERIES = {"q1": q1_dag, "q4": q4_dag, "q15": q15_dag}
 
 
 def sim_ops(query: str):

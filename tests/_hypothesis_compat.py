@@ -1,0 +1,109 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The offline test environment has no ``hypothesis`` wheel, so the property
+tests degrade to seeded randomized sampling: ``@given`` draws
+``max_examples`` pseudo-random examples from the declared strategies (plus a
+deterministic "minimal" first example) and runs the test once per draw.  No
+shrinking, no database — just deterministic coverage so the properties still
+execute as tests instead of erroring at import.
+
+Usage (mirrors the real API surface the suite needs)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import random
+from types import SimpleNamespace
+
+_DEFAULT_MAX_EXAMPLES = 25
+_SEED = 0xA5C3
+
+
+class _Strategy:
+    def __init__(self, draw, minimal):
+        self._draw = draw
+        self._minimal = minimal
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def minimal(self):
+        return self._minimal()
+
+
+def integers(min_value=None, max_value=None) -> _Strategy:
+    lo = -(1 << 16) if min_value is None else min_value
+    hi = (1 << 16) if max_value is None else max_value
+    return _Strategy(lambda rng: rng.randint(lo, hi), lambda: lo)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements), lambda: elements[0])
+
+
+def lists(elements: _Strategy, min_size=0, max_size=None) -> _Strategy:
+    hi = min_size + 20 if max_size is None else max_size
+
+    def draw(rng):
+        return [elements.draw(rng) for _ in range(rng.randint(min_size, hi))]
+
+    return _Strategy(draw, lambda: [elements.minimal() for _ in range(min_size)])
+
+
+def permutations(values) -> _Strategy:
+    values = list(values)
+
+    def draw(rng):
+        out = list(values)
+        rng.shuffle(out)
+        return out
+
+    return _Strategy(draw, lambda: list(values))
+
+
+strategies = SimpleNamespace(
+    integers=integers,
+    lists=lists,
+    sampled_from=sampled_from,
+    permutations=permutations,
+)
+
+
+def given(**strategy_kw):
+    def decorate(fn):
+        def runner(*args, **kw):
+            cfg = getattr(runner, "_hc_settings", {})
+            n = cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            # example 0: the minimal draw (catches empty/degenerate cases)
+            fn(*args, **{k: s.minimal() for k, s in strategy_kw.items()}, **kw)
+            for _ in range(max(n - 1, 0)):
+                drawn = {k: s.draw(rng) for k, s in strategy_kw.items()}
+                try:
+                    fn(*args, **drawn, **kw)
+                except Exception:
+                    print(f"falsifying example: {drawn!r}")
+                    raise
+
+        # Copy identity but NOT __wrapped__: pytest must not see the strategy
+        # parameters in the signature (they are not fixtures).
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner._hc_given = True
+        return runner
+
+    return decorate
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._hc_settings = {"max_examples": max_examples}
+        return fn
+
+    return decorate

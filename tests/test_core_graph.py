@@ -1,0 +1,311 @@
+"""DAG dataflow tests: split/merge ordered egress (Def. 5.1 generalized to
+graphs) + scheduler-budget contract regressions for the hybrid worklist."""
+import collections
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    GraphPipeline,
+    HybridQueueWorklist,
+    Merge,
+    OpSpec,
+    Split,
+    StreamRuntime,
+    run_graph,
+    run_pipeline,
+)
+
+
+# ------------------------------------------------------- sequential DAG oracle
+def _graph_sequential_reference(nodes, edges, source):
+    """Single-threaded oracle for a GraphPipeline: route each tuple through
+    the graph depth-first, one at a time, with keyed/round-robin splits."""
+    succ = collections.defaultdict(list)
+    pred = collections.defaultdict(list)
+    for u, v in edges:
+        succ[u].append(v)
+        pred[v].append(u)
+    (src_name,) = [n for n in nodes if not pred[n]]
+    states = {n: {} for n in nodes}
+    rr = {n: 0 for n, s in nodes.items() if isinstance(s, Split)}
+    out = []
+
+    def run_spec(name, value):
+        s = nodes[name]
+        if s.kind == "stateless":
+            return s.fn(value)
+        if s.kind == "stateful":
+            st = states[name].get("_", s.init_state())
+            st, outs = s.fn(st, value)
+            states[name]["_"] = st
+            return outs
+        key = s.key_fn(value)
+        st = states[name].get(key)
+        if st is None:
+            st = s.init_state()
+        st, outs = s.fn(st, key, value)
+        states[name][key] = st
+        return outs
+
+    def visit(name, value):
+        spec = nodes[name]
+        if isinstance(spec, Split):
+            if spec.policy == "round_robin":
+                b = rr[name] % len(succ[name])
+                rr[name] += 1
+            else:
+                b = hash(spec.key_fn(value)) % len(succ[name])
+            visit(succ[name][b], value)
+            return
+        if isinstance(spec, Merge):
+            nxt = succ[name]
+            if nxt:
+                visit(nxt[0], value)
+            else:
+                out.append(value)
+            return
+        for o in run_spec(name, value):
+            if succ[name]:
+                visit(succ[name][0], o)
+            else:
+                out.append(o)
+
+    for v in source:
+        visit(src_name, v)
+    return out
+
+
+def _diamond(policy="round_robin", reorder_size=16):
+    """split -> (flat-map branch || filter branch) -> merge -> count."""
+    key_fn = (lambda v: v % 2) if policy == "keyed" else None
+    return {
+        "ingest": OpSpec("ingest", "stateless", lambda v: [v]),
+        "split": Split(policy, key_fn=key_fn),
+        "fan": OpSpec(
+            "fan", "stateless", lambda v: [(v, j) for j in range(3)], selectivity=3.0
+        ),
+        "filt": OpSpec(
+            "filt", "stateless", lambda v: [(v, -1)] if v % 3 else [], selectivity=0.6
+        ),
+        "merge": Merge(reorder_size=reorder_size),
+        "count": OpSpec(
+            "count",
+            "stateful",
+            lambda s, t: (s + 1, [(t, s + 1)]),
+            init_state=lambda: 0,
+        ),
+    }, [
+        ("ingest", "split"),
+        ("split", "fan"),
+        ("split", "filt"),
+        ("fan", "merge"),
+        ("filt", "merge"),
+        ("merge", "count"),
+    ]
+
+
+@pytest.mark.parametrize("policy", ["round_robin", "keyed"])
+@pytest.mark.parametrize("workers", [1, 4, 6])
+def test_dag_split_merge_matches_sequential_oracle(policy, workers):
+    nodes, edges = _diamond(policy)
+    source = list(range(1, 500))
+    expected = _graph_sequential_reference(*_diamond(policy), source)
+    pipe, report = run_graph(
+        nodes, edges, source, num_workers=workers, collect_outputs=True
+    )
+    assert pipe.outputs == expected
+    assert report.tuples_in == len(source)
+
+
+@pytest.mark.parametrize("heuristic", ["ct", "lp", "et", "qst", "adaptive"])
+def test_dag_all_heuristics_ordered(heuristic):
+    nodes, edges = _diamond("round_robin")
+    source = list(range(1, 300))
+    expected = _graph_sequential_reference(*_diamond("round_robin"), source)
+    pipe, _ = run_graph(
+        nodes, edges, source, num_workers=4, heuristic=heuristic, collect_outputs=True
+    )
+    assert pipe.outputs == expected
+
+
+def test_dag_tiny_merge_ring_no_livelock_single_worker():
+    """A merge ring much smaller than the in-flight ticket count must not
+    livelock a lone worker (overflow completions park, never spin)."""
+    nodes, edges = _diamond("round_robin", reorder_size=2)
+    source = list(range(1, 400))
+    expected = _graph_sequential_reference(
+        *_diamond("round_robin", reorder_size=2), source
+    )
+    pipe, _ = run_graph(nodes, edges, source, num_workers=1, collect_outputs=True)
+    assert pipe.outputs == expected
+
+
+def test_dag_keyed_split_partitioned_branches_per_key_state():
+    """Partitioned-stateful ops inside keyed branches keep per-key state and
+    arrival order; merge restores the global serial order."""
+
+    def running_sum(state, key, v):
+        s = (state or 0) + v
+        return s, [(key, s)]
+
+    def mk():
+        return {
+            "split": Split("keyed", key_fn=lambda v: v % 5),
+            "a": OpSpec(
+                "sum_a", "partitioned", running_sum,
+                key_fn=lambda v: v % 5, num_partitions=8, init_state=lambda: 0,
+            ),
+            "b": OpSpec(
+                "sum_b", "partitioned", running_sum,
+                key_fn=lambda v: v % 5, num_partitions=8, init_state=lambda: 0,
+            ),
+            "merge": Merge(),
+        }, [("split", "a"), ("split", "b"), ("a", "merge"), ("b", "merge")]
+
+    source = list(range(1, 1000))
+    expected = _graph_sequential_reference(*mk(), source)
+    pipe, _ = run_graph(*mk(), source, num_workers=4, collect_outputs=True)
+    assert pipe.outputs == expected
+
+
+def test_dag_equals_linear_tpcxbb():
+    """DAG forms of the TPCx-BB queries produce byte-identical egress to the
+    linear single-threaded reference (acceptance criterion)."""
+    from repro.streams.tpcxbb import DAG_QUERIES, QUERIES
+
+    for qname, builder in DAG_QUERIES.items():
+        n = 2500
+        specs, src = QUERIES[qname](n=n)
+        lin, _ = run_pipeline(specs, list(src), num_workers=1, collect_outputs=True)
+        nodes, edges, src2 = builder(n=n)
+        dag, _ = run_graph(nodes, edges, list(src2), num_workers=4, collect_outputs=True)
+        assert dag.outputs == lin.outputs, qname
+
+
+def test_compiled_pipeline_is_graph_wrapper():
+    from repro.core import CompiledPipeline
+
+    pipe = CompiledPipeline(
+        [OpSpec("double", "stateless", lambda v: [v * 2])], collect_outputs=True
+    )
+    assert isinstance(pipe, GraphPipeline)
+    rt = StreamRuntime(pipe, num_workers=2)
+    rt.run(range(50))
+    assert pipe.outputs == [v * 2 for v in range(50)]
+
+
+def test_adaptive_controller_resizes_caps():
+    nodes, edges = _diamond("round_robin")
+    g = GraphPipeline(nodes, edges, num_workers=4, collect_outputs=True)
+    rt = StreamRuntime(g, num_workers=4, heuristic="adaptive", adapt_interval=0.001)
+    rt.run(list(range(1, 2000)))
+    assert rt.scheduler.adaptations > 0
+    # caps were resized to finite values and never below 1
+    assert all(1 <= n.dop_cap for n in g.nodes)
+    assert any(n.dop_cap <= 4 for n in g.nodes)
+
+
+# ----------------------------------------------------- hybrid budget contract
+def test_hybrid_consume_respects_budget_under_delegation():
+    """Regression: the active worker's drain loop must stop at ``budget`` even
+    under sustained delegation (scheduler time-slice contract)."""
+    wl = HybridQueueWorklist(1, lambda k: 0)
+    n = 3000
+    for s in range(1, n + 1):
+        wl.add(s, 0, s)
+
+    budget = 16
+    overruns = []
+    processed = collections.defaultdict(list)
+
+    def worker(wid):
+        while True:
+            got = wl.consume(
+                wid, lambda s, k, v: processed[wid].append(s), budget
+            )
+            if got > budget:
+                overruns.append((wid, got))
+            if got == 0 and len(wl) == 0:
+                return
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not overruns, f"consume exceeded budget: {overruns[:5]}"
+    everything = sorted(s for lst in processed.values() for s in lst)
+    assert everything == list(range(1, n + 1)), "lost/duplicated tuples on handoff"
+
+
+def test_hybrid_budget_handoff_preserves_order():
+    """Deterministic handoff: a worker whose slice expires mid-drain (with
+    delegations pending) returns exactly ``budget``; the abandoned tuples are
+    re-tokenized and processed exactly once, in arrival order, by later
+    consumers."""
+    wl = HybridQueueWorklist(1, lambda k: 0)
+    n = 20
+    for s in range(1, n + 1):
+        wl.add(s, 0, s)
+
+    order = []
+    started = threading.Event()
+    go = threading.Event()
+
+    def slow_op(serial, key, v):
+        order.append(serial)
+        if len(order) == 1:
+            started.set()
+            go.wait(10)  # hold the partition while the main thread delegates
+
+    result = {}
+
+    def t1():
+        result["got"] = wl.consume(0, slow_op, 2)
+
+    th = threading.Thread(target=t1)
+    th.start()
+    assert started.wait(10)
+    # main thread: every pop now delegates to the (stalled) active worker
+    assert wl.consume(1, slow_op, 10**9) == 0
+    assert wl.delegated > 0
+    go.set()
+    th.join(timeout=10)
+    # slice contract: exactly budget tuples processed, then handoff
+    assert result["got"] == 2
+    # the re-appended tokens let later consumers finish the partition
+    while len(wl):
+        wl.consume(1, lambda s, k, v: order.append(s), 7)
+    assert order == list(range(1, n + 1))
+
+
+def test_concurrent_producers_inject_all_markers():
+    """Regression: ingress counting is atomic — concurrent producers must not
+    lose marker injections."""
+    pipe = GraphPipeline(
+        {"id": OpSpec("id", "stateless", lambda v: [v])},
+        [],
+        marker_interval=10,
+        collect_outputs=True,
+    )
+    rt = StreamRuntime(pipe, num_workers=2)
+    rt.start()
+    n_per, threads = 500, 4
+
+    def producer():
+        for i in range(n_per):
+            pipe.push(i)
+
+    ps = [threading.Thread(target=producer) for _ in range(threads)]
+    for p in ps:
+        p.start()
+    for p in ps:
+        p.join()
+    deadline = time.time() + 30
+    while not pipe.drained() and time.time() < deadline:
+        time.sleep(1e-3)
+    rt.stop()
+    assert pipe.egress_count == n_per * threads
+    assert len(pipe.markers) == (n_per * threads) // 10

@@ -4,7 +4,11 @@ import random
 import threading
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline env: degrade to seeded randomized sampling
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.hybrid import (
     HybridQueueWorklist,

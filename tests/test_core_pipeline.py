@@ -5,7 +5,11 @@ sequential execution's egress sequence, for any pipeline composition and any
 scheduler heuristic.
 """
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline env: degrade to seeded randomized sampling
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import OpSpec, run_pipeline
 from repro.core.pipeline import CompiledPipeline

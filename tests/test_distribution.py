@@ -38,7 +38,10 @@ with mesh, use_mesh(mesh):
     compiled = jax.jit(step, in_shardings=ins, out_shardings=outs,
                        donate_argnums=(0, 1)).lower(*args).compile()
 results["train_compiles"] = True
-results["train_flops"] = compiled.cost_analysis().get("flops", 0)
+ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):  # older jax: one entry per device program
+    ca = ca[0] if ca else {}
+results["train_flops"] = ca.get("flops", 0)
 
 # --- multi-pod test mesh (2,2,2): pod axis must shard
 cfg2 = smoke_config("qwen2-moe-a2.7b")
@@ -80,10 +83,16 @@ err = jnp.zeros((2, 8))
 def fn(gl, el):
     s, e = compress_allreduce_leaf(gl[0], el[0], "pod")
     return s[None], e[None]
+import inspect
+_sm_kw = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(shard_map).parameters
+    else {"check_rep": False}  # pre-0.5 jax spelling
+)
 with mesh2:
     summed, new_err = shard_map(
         fn, mesh=mesh2, in_specs=(P("pod", None), P("pod", None)),
-        out_specs=(P("pod", None), P("pod", None)), check_vma=False,
+        out_specs=(P("pod", None), P("pod", None)), **_sm_kw,
     )(g, err)
 true_sum = g.sum(axis=0)
 rel = float(jnp.linalg.norm(summed[0] - true_sum) / (jnp.linalg.norm(true_sum)))

@@ -149,6 +149,28 @@ def test_serving_matches_generate_reference():
     np.testing.assert_array_equal(comps[0].tokens, np.asarray(ref[0]))
 
 
+def test_serving_engine_small_reorder_ring_no_livelock():
+    """Regression: with a slow head-of-line request and a reorder ring smaller
+    than the number of later completions, the single-threaded engine used to
+    spin forever in send_blocking. Overflow completions must park host-side
+    and the engine must terminate in bounded steps with ordered egress."""
+    from repro.serve.engine import OrderedServingEngine
+
+    cfg = smoke_config("olmo-1b")
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    eng = OrderedServingEngine(cfg, params, max_slots=4, max_len=64, reorder_size=4)
+    rng = np.random.RandomState(1)
+    prompt = rng.randint(0, cfg.vocab_size, size=6)
+    serials = []
+    for i in range(64):
+        # request 0 is the long head-of-line straggler; the rest finish fast
+        serials.append(eng.submit(prompt, max_new_tokens=40 if i == 0 else 2))
+    comps = eng.run_to_completion(max_steps=5000)
+    assert [c.serial for c in comps] == sorted(serials)
+    assert eng._reorder.parked_count() == 0
+    assert eng.stats["emitted"] == 64
+
+
 # ----------------------------------------------------------------- trainer
 def test_train_driver_end_to_end_with_resume(tmp_path):
     from repro.launch.train import main
