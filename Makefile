@@ -1,0 +1,11 @@
+# Convenience targets; the source of truth is scripts/verify.sh (ROADMAP.md).
+.PHONY: verify test bench
+
+verify:
+	./scripts/verify.sh
+
+test:
+	./scripts/verify.sh --fast
+
+bench:
+	PYTHONPATH=src python -m benchmarks.bench_core

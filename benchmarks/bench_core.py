@@ -1,0 +1,134 @@
+"""Core-runtime perf tracker: thread vs process backends, batch 1 vs 32.
+
+Runs a fixed wall-clock-sized (default ~10 s per config) fig. 8-style
+CPU-bound synthetic query (pure-Python compute stages, GIL-bound) through:
+
+  - backend=thread, batch_size=1   (the paper-faithful baseline)
+  - backend=thread, batch_size=32  (micro-batched tuple path)
+  - backend=process                (OS-process workers + shared-memory rings)
+
+and writes ``BENCH_core.json`` (throughput, egress throughput, p99 latency,
+busy fraction, plus the two headline ratios) so the perf trajectory is
+tracked across PRs.  Each config's tuple count is auto-calibrated from a
+short probe run so every row measures a comparable wall-clock window.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_core [--smoke] [--seconds S]
+                                                 [--out PATH] [--workers N]
+
+``--smoke`` shrinks the window to ~1 s per config — used by ``make verify``
+to keep the perf plumbing from rotting without a 30 s bill.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+
+from repro.core import run_pipeline
+from repro.streams.parametric import cpu_bound_chain
+
+SPIN = 100  # ~24 µs of GIL-bound work per tuple across the 3-stage chain
+STAGES = 3
+CONFIGS = (
+    {"backend": "thread", "batch_size": 1},
+    {"backend": "thread", "batch_size": 32},
+    {"backend": "process", "batch_size": 1},
+)
+
+
+def _run_config(backend: str, batch_size: int, seconds: float, workers: int):
+    kw = dict(num_workers=workers, backend=backend, batch_size=batch_size)
+    # probe: size the real run to ~`seconds` of wall clock
+    probe_n = 2000
+    _, probe = run_pipeline(cpu_bound_chain(stages=STAGES, spin=SPIN),
+                            range(probe_n), **kw)
+    n = max(int(probe.throughput * seconds), probe_n)
+    _, report = run_pipeline(cpu_bound_chain(stages=STAGES, spin=SPIN),
+                             range(n), **kw)
+    if not (0.7 * seconds <= report.wall_time <= 1.3 * seconds):
+        # the short probe misjudged the sustained rate (startup effects);
+        # rescale once so every config measures a comparable window
+        scale = min(max(seconds / max(report.wall_time, 1e-9), 0.25), 4.0)
+        n = max(int(n * scale), probe_n)
+        _, report = run_pipeline(cpu_bound_chain(stages=STAGES, spin=SPIN),
+                                 range(n), **kw)
+    return {
+        "backend": backend,
+        "batch_size": batch_size,
+        "workers": workers,
+        "tuples": n,
+        "wall_s": round(report.wall_time, 3),
+        "throughput_per_s": round(report.throughput, 1),
+        "egress_throughput_per_s": round(report.egress_throughput, 1),
+        "p99_latency_ms": round(report.p99_latency * 1e3, 3),
+        "mean_latency_ms": round(report.mean_latency * 1e3, 3),
+        "busy_frac": round(report.worker_busy_frac, 3),
+    }
+
+
+def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
+        print_fn=print):
+    rows = []
+    for cfg in CONFIGS:
+        row = _run_config(cfg["backend"], cfg["batch_size"], seconds, workers)
+        rows.append(row)
+        print_fn(
+            f"{row['backend']:>7} batch={row['batch_size']:<3} "
+            f"thru={row['throughput_per_s']:>10,.0f}/s "
+            f"p99={row['p99_latency_ms']:.3f}ms busy={row['busy_frac']:.2f} "
+            f"({row['tuples']} tuples / {row['wall_s']}s)"
+        )
+
+    def thru(backend, batch):
+        for r in rows:
+            if r["backend"] == backend and r["batch_size"] == batch:
+                return r["throughput_per_s"]
+        return 0.0
+
+    ratios = {
+        "process_vs_thread": round(thru("process", 1) / max(thru("thread", 1), 1e-9), 3),
+        "thread_batch32_vs_batch1": round(
+            thru("thread", 32) / max(thru("thread", 1), 1e-9), 3
+        ),
+    }
+    doc = {
+        "meta": {
+            "workload": f"fig8-style CPU-bound chain ({STAGES} stages, spin={SPIN})",
+            "seconds_per_config": seconds,
+            "cpu_count": os.cpu_count(),
+            "python": platform.python_version(),
+            "unix_time": int(time.time()),
+        },
+        "results": rows,
+        "ratios": ratios,
+    }
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print_fn(
+        f"ratios: process/thread={ratios['process_vs_thread']}x  "
+        f"batch32/batch1={ratios['thread_batch32_vs_batch1']}x  -> {out}"
+    )
+    return doc
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="~1 s per config (CI plumbing check)")
+    ap.add_argument("--seconds", type=float, default=None,
+                    help="wall-clock window per config (default 10, smoke 1)")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--out", default="BENCH_core.json")
+    args = ap.parse_args(argv)
+    seconds = args.seconds if args.seconds is not None else (1.0 if args.smoke else 10.0)
+    run(seconds=seconds, workers=args.workers, out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

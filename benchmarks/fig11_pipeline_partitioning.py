@@ -32,6 +32,26 @@ def run(print_fn=print, n_tuples=15_000):
                     best_lat = r["mean_latency_us"] / 1e3
             print_fn(fmt_row("fig11", q, scheme, f"{best_thru:.0f}", f"{best_lat:.3f}"))
     run_dag(print_fn, n_tuples=min(n_tuples, 6000))
+    run_backends(print_fn, n_tuples=min(n_tuples, 8000))
+
+
+def run_backends(print_fn=print, n_tuples=8000):
+    """Backend column on the real pipeline queries: peak throughput of the
+    thread runtime vs the process backend (stateless-prefix parallelism)."""
+    from repro.streams.tpcxbb import run_query
+
+    for q in ("q1", "q4", "q15"):
+        for backend in ("thread", "process"):
+            best_thru, best_lat = 0.0, 0.0
+            for w in (2, 4):
+                _, r = run_query(q, n=n_tuples, backend=backend, num_workers=w)
+                if r.throughput > best_thru:
+                    best_thru = r.throughput
+                    best_lat = r.mean_latency * 1e3
+            print_fn(
+                fmt_row("fig11backend", q, backend,
+                        f"{best_thru:.0f}", f"{best_lat:.3f}")
+            )
 
 
 def run_dag(print_fn=print, n_tuples=6000):

@@ -5,11 +5,16 @@ mirroring each query's operator cost/selectivity profile).
 The DAG section additionally drives the *thread* runtime on the DAG forms of
 the queries (keyed split -> parallel branches -> ordered merge), including the
 ``adaptive`` heuristic whose controller resizes per-node parallelism caps.
+
+The backend section drives the *real* runtimes — thread vs process — on the
+fig. 8 CPU-bound synthetic query so thread-vs-process scaling is directly
+reported (the thread runtime is GIL-bound; the process backend is the point).
 """
 from __future__ import annotations
 
-from repro.core import run_graph
+from repro.core import run_graph, run_pipeline
 from repro.core.simulate import SimConfig, simulate
+from repro.streams.parametric import cpu_bound_chain
 from repro.streams.tpcxbb import DAG_QUERIES, sim_ops
 
 from .common import fmt_row
@@ -18,6 +23,7 @@ N_TUPLES = 15_000
 QUERIES = ("q1", "q2", "q3", "q4", "q15")
 HEURISTICS = ("ct", "lp", "et", "qst")
 DAG_HEURISTICS = ("ct", "lp", "et", "qst", "adaptive")
+BACKENDS = ("thread", "process")
 
 
 def run(print_fn=print, workers=(2, 4, 8, 16), n_tuples=N_TUPLES):
@@ -41,6 +47,28 @@ def run(print_fn=print, workers=(2, 4, 8, 16), n_tuples=N_TUPLES):
                     )
                 )
     run_dag(print_fn, n_tuples=min(n_tuples, 6000))
+    run_backends(print_fn, n_tuples=min(n_tuples, 15_000))
+
+
+def run_backends(print_fn=print, workers=(2, 4), n_tuples=15_000):
+    """Thread vs process backends on the CPU-bound synthetic query (real
+    parallelism; fig8 rows gain a backend column)."""
+    for backend in BACKENDS:
+        for w in workers:
+            _, r = run_pipeline(
+                cpu_bound_chain(stages=3, spin=100),
+                range(n_tuples),
+                num_workers=w,
+                backend=backend,
+            )
+            print_fn(
+                fmt_row(
+                    "fig8backend", "cpu_synth", backend, w,
+                    f"{r.throughput:.0f}",
+                    f"{r.mean_latency*1e3:.3f}",
+                    f"{r.p99_latency*1e3:.3f}",
+                )
+            )
 
 
 def run_dag(print_fn=print, workers=(2, 4), n_tuples=6000):

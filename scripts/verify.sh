@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification + perf-plumbing smoke (see ROADMAP.md).
+#
+#   ./scripts/verify.sh          # full tier-1 pytest + bench_core smoke
+#   ./scripts/verify.sh --fast   # pytest only
+#
+# The bench smoke (~3-5 s) runs the thread/process/batched backends end to
+# end and rewrites BENCH_core.json, so the perf plumbing cannot silently rot.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+    python -m benchmarks.bench_core --smoke
+fi
+echo "verify: OK"

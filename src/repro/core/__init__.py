@@ -31,6 +31,8 @@ from .pipeline import (
 )
 from .scheduler import HEURISTICS, Scheduler
 from .runtime import RunReport, StreamRuntime, run_graph, run_pipeline
+from .procrun import ProcessRuntime
+from .shm import ShmReorderRing, ShmSpscRing
 
 __all__ = [
     "AtomicFlag",
@@ -63,4 +65,7 @@ __all__ = [
     "StreamRuntime",
     "run_graph",
     "run_pipeline",
+    "ProcessRuntime",
+    "ShmReorderRing",
+    "ShmSpscRing",
 ]

@@ -94,10 +94,19 @@ class OperatorNode:
         worklist_scheme: str = "hybrid",
         reorder_size: int = 1024,
         num_workers: int = 1,
+        batch_size: int = 1,
     ):
         self.spec = spec
         self.index = index
+        # Micro-batched tuple flow: tuples travel node-to-node in batches,
+        # amortizing per-tuple queue/reorder/lock overhead.  Stateless and
+        # stateful nodes enqueue whole batches (one serial, one reorder send,
+        # one downstream push per batch); partitioned nodes unpack batches to
+        # per-tuple worklist items (bucket ownership is per-tuple) and their
+        # egress re-enters the batched flow one bundle at a time.
+        self.batched = batch_size > 1
         self.downstream: Optional[Callable[[Any, Optional[_Marker]], None]] = None
+        self.downstream_batch: Optional[Callable[[list, list], None]] = None
         self.stats = OpStats()
         self.workers = AtomicLong(0)  # currently allotted workers (w_i)
         # Effective parallelism cap M_i: the adaptive controller lowers this
@@ -106,6 +115,7 @@ class OperatorNode:
         self._serials = SerialAssigner()
         self._stats_lock = threading.Lock()
 
+        self._queued_tuples = AtomicLong(0)  # batched-mode tuple count
         if spec.kind == STATEFUL:
             self.max_dop = 1
             self._state = spec.init_state()
@@ -143,10 +153,29 @@ class OperatorNode:
         else:
             self._queue.append((serial, value, marker))
 
+    def push_batch(self, values: list, markers: list) -> None:
+        """Batched-mode inlet: one queue entry (and one serial) per batch.
+
+        ``markers`` is a list of ``(offset-in-batch, marker)`` pairs — probes
+        stay attached to the exact tuple they rode in on (offsets are
+        remapped through every flat-map, see :meth:`_operate_batch`).
+        """
+        if self.spec.kind == PARTITIONED:
+            # Bucket ownership is per-tuple: unpack, pairing by offset.
+            by_off = dict(markers) if markers else None
+            for i, v in enumerate(values):
+                self.push(v, by_off.get(i) if by_off else None)
+            return
+        serial = self._serials.next()
+        self._queued_tuples.fetch_add(len(values))
+        self._queue.append((serial, values, markers))
+
     # ---- scheduler interface -----------------------------------------------
     def worklist_size(self) -> int:
         if self.spec.kind == PARTITIONED:
             return len(self._worklist)
+        if self.batched:
+            return max(self._queued_tuples.load(), 0)
         return len(self._queue)
 
     def schedulable(self) -> bool:
@@ -164,13 +193,21 @@ class OperatorNode:
                 serial, value, marker = self._queue.popleft()
             except IndexError:
                 break
-            self._operate(serial, value, marker)
-            done += 1
+            if self.batched:  # entry is (serial, values, markers)
+                n = max(len(value), 1)
+                self._queued_tuples.fetch_sub(len(value))
+                self._operate_batch(serial, value, marker)
+                done += n
+            else:
+                self._operate(serial, value, marker)
+                done += 1
         return done
 
     # ---- internals ----------------------------------------------------------
     def _operate(self, serial: int, value: Any, marker: Optional[_Marker]) -> None:
-        if marker is not None and self.index == 0:
+        if marker is not None and self.index == 0 and not marker.begin:
+            # not already stamped: a process-backend tail pipeline receives
+            # markers whose begin was set in the worker's parallel segment
             marker.begin = time.perf_counter()
         t0 = time.perf_counter()
         if self.spec.kind == STATEFUL:
@@ -186,7 +223,7 @@ class OperatorNode:
 
     def _operate_partitioned(self, serial: int, key: Hashable, item) -> None:
         value, marker = item
-        if marker is not None and self.index == 0:
+        if marker is not None and self.index == 0 and not marker.begin:
             marker.begin = time.perf_counter()
         t0 = time.perf_counter()
         # State is per KEY (the partition/bucket only controls concurrency —
@@ -199,20 +236,80 @@ class OperatorNode:
         self._states[key] = state
         dt = time.perf_counter() - t0
         self._account(dt, len(outs))
-        self._reorder.send(serial, (outs, marker))
+        if self.batched:  # re-enter the batched flow as a 1-tuple bundle
+            self._reorder.send(serial, (outs, [(0, marker)] if marker else []))
+        else:
+            self._reorder.send(serial, (outs, marker))
+
+    def _operate_batch(self, serial: int, values: list, markers: list) -> None:
+        """Process one micro-batch: one fn sweep, one reorder send, one
+        downstream push — the per-tuple overhead amortization.
+
+        Marker offsets are remapped through the flat-map: a probe on input i
+        re-attaches to the first output of input i; if input i produced no
+        output its probe's journey ends here (exit stamped, recorded).
+        """
+        if self.index == 0:
+            for _, m in markers:
+                if not m.begin:
+                    m.begin = time.perf_counter()
+        by_off = dict(markers) if markers else None
+        out_markers: list = []
+        dropped: list = []
+        t0 = time.perf_counter()
+        outs: list = []
+        stateful = self.spec.kind == STATEFUL
+        state, fn = (self._state if stateful else None), self.spec.fn
+        for i, v in enumerate(values):
+            if stateful:
+                state, o = fn(state, v)
+            else:
+                o = fn(v)
+            if by_off is not None:
+                m = by_off.get(i)
+                if m is not None:
+                    if o:
+                        out_markers.append((len(outs), m))
+                    else:
+                        dropped.append(m)
+            outs.extend(o)
+        if stateful:
+            self._state = state
+        dt = time.perf_counter() - t0
+        self._account(dt, len(outs), n_in=len(values))
+        for m in dropped:
+            m.exit = time.perf_counter()
+            if self.on_marker_drop is not None:
+                self.on_marker_drop(m)
+        if self._reorder is None:
+            self._emit((outs, out_markers))
+        else:
+            self._reorder.send(serial, (outs, out_markers))
 
     def overflow_count(self) -> int:
         return 0 if self._reorder is None else self._reorder.parked_count()
 
-    def _account(self, dt: float, n_out: int) -> None:
+    def _account(self, dt: float, n_out: int, n_in: int = 1) -> None:
         with self._stats_lock:
             s = self.stats
-            s.consumed += 1
+            s.consumed += n_in
             s.produced += n_out
             s.busy_time += dt
             s.window_busy += dt
 
     def _emit(self, payload) -> None:
+        if self.batched:
+            # payload is (outs, [(offset, marker)]); one downstream call per batch
+            outs, markers = payload
+            if outs:
+                self.downstream_batch(outs, markers)
+                return
+            for _, m in markers:
+                # batch fully filtered: the probes' journeys end here
+                m.exit = time.perf_counter()
+                if self.on_marker_drop is not None:
+                    self.on_marker_drop(m)
+            return
         outs, marker = payload
         down = self.downstream
         for j, out in enumerate(outs):

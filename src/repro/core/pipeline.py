@@ -56,6 +56,20 @@ from .reorder import NonBlockingReorderBuffer, ParkingReorderBuffer
 from .serial import AtomicLong, SerialAssigner
 
 
+def percentile_latencies(
+    markers: Sequence[_Marker], lo: float = 0.2, hi: float = 0.8
+) -> List[float]:
+    """Processing latency (begin->exit) of completed markers in the [lo, hi]
+    percentile range of arrival — the paper's §7 measurement protocol.
+    Shared by every runtime so thread and process backends report over the
+    same window convention."""
+    ms = sorted((m for m in markers if m.exit and m.begin), key=lambda m: m.entry)
+    if not ms:
+        return []
+    a, b = int(len(ms) * lo), max(int(len(ms) * hi), int(len(ms) * lo) + 1)
+    return [m.exit - m.begin for m in ms[a:b]]
+
+
 # --------------------------------------------------------------------- routing
 class Split:
     """Fan-out routing node spec: one inbound edge, B outbound branches.
@@ -279,6 +293,7 @@ class GraphPipeline:
         num_workers: int = 1,
         marker_interval: int = 64,
         collect_outputs: bool = False,
+        batch_size: int = 1,
     ):
         self.node_specs = dict(nodes)
         self.edges = [tuple(e) for e in edges]
@@ -290,6 +305,18 @@ class GraphPipeline:
         self._egress_count = 0
         self._egress_lock = threading.Lock()
         self._ingress = AtomicLong(0)
+        self._first_push_ts: Optional[float] = None
+        self._last_egress_ts: Optional[float] = None
+        # Micro-batching applies to plain operator chains; routing nodes keep
+        # per-tuple granularity (ticket/frame accounting is per tuple), so a
+        # graph with Split/Merge clamps the batch size back to 1.
+        has_routing = any(
+            isinstance(s, (Split, Merge)) for s in self.node_specs.values()
+        )
+        self.batch_size = 1 if has_routing else max(1, batch_size)
+        self._accum_vals: list = []
+        self._accum_marks: list[_Marker] = []
+        self._accum_lock = threading.Lock()
 
         order = self._topo_order()
         succ: dict[str, list[str]] = {n: [] for n in self.node_specs}
@@ -323,6 +350,7 @@ class GraphPipeline:
                     worklist_scheme=worklist_scheme,
                     reorder_size=reorder_size,
                     num_workers=num_workers,
+                    batch_size=self.batch_size,
                 )
                 node.on_marker_drop = self._record_marker
                 self._exec[name] = node
@@ -352,8 +380,12 @@ class GraphPipeline:
                 continue  # wired at construction via branch inlets
             if name == self._sink_name:
                 ex.downstream = self._egress
+                if self.batch_size > 1:
+                    ex.downstream_batch = self._egress_batch
             else:
                 ex.downstream = self._inlet(succ[name][0])
+                if self.batch_size > 1:  # chain-only: successor is an op node
+                    ex.downstream_batch = self._exec[succ[name][0]].push_batch
 
         # Scheduler metadata: weighted edges between *op node indices*
         # (routing nodes collapsed; split edges carry fraction 1/B).
@@ -475,19 +507,60 @@ class GraphPipeline:
     def push(self, value: Any) -> None:
         marker = None
         n = self._ingress.fetch_add(1) + 1
+        if self._first_push_ts is None:
+            self._first_push_ts = time.perf_counter()
         if self.marker_interval and n % self.marker_interval == 0:
             marker = _Marker(time.perf_counter())
+        if self.batch_size > 1:
+            # push_batch happens INSIDE the lock: sealing and serial
+            # assignment must be atomic, or two concurrent producers could
+            # enqueue sealed batches in the opposite order they accumulated.
+            with self._accum_lock:
+                self._accum_vals.append(value)
+                if marker is not None:
+                    # (offset-in-batch, marker): probes stay attached to the
+                    # exact tuple they rode in on (see _operate_batch)
+                    self._accum_marks.append((len(self._accum_vals) - 1, marker))
+                if len(self._accum_vals) >= self.batch_size:
+                    vals, marks = self._accum_vals, self._accum_marks
+                    self._accum_vals, self._accum_marks = [], []
+                    self._exec[self._source_name].push_batch(vals, marks)
+            return
         self._inlet(self._source_name)(value, marker)
+
+    def flush(self) -> None:
+        """Release a partial ingress micro-batch (call when the source ends).
+
+        No-op at ``batch_size=1``; the runtime calls this before draining."""
+        if self.batch_size <= 1:
+            return
+        with self._accum_lock:
+            vals, marks = self._accum_vals, self._accum_marks
+            self._accum_vals, self._accum_marks = [], []
+            if vals or marks:
+                self._exec[self._source_name].push_batch(vals, marks)
 
     # ---- egress ---------------------------------------------------------------
     def _egress(self, value: Any, marker: Optional[_Marker]) -> None:
         with self._egress_lock:
             self._egress_count += 1
+            self._last_egress_ts = time.perf_counter()
             if self.collect_outputs:
                 self.outputs.append(value)
         if marker is not None:
             marker.exit = time.perf_counter()
             self._record_marker(marker)
+
+    def _egress_batch(self, values: list, markers: list) -> None:
+        now = time.perf_counter()
+        with self._egress_lock:
+            self._egress_count += len(values)
+            self._last_egress_ts = now
+            if self.collect_outputs:
+                self.outputs.extend(values)
+        for _, m in markers:
+            m.exit = now
+            self._record_marker(m)
 
     def _record_marker(self, marker: _Marker) -> None:
         with self._markers_lock:
@@ -499,20 +572,24 @@ class GraphPipeline:
         return self._egress_count
 
     def processing_latencies(self, lo: float = 0.2, hi: float = 0.8) -> list[float]:
-        """Processing latency (begin->exit) of markers in the [lo, hi] percentile
-        range of arrival, per the paper's measurement protocol."""
         with self._markers_lock:
-            ms = sorted(self.markers, key=lambda m: m.entry)
-        ms = [m for m in ms if m.exit and m.begin]
-        if not ms:
-            return []
-        a, b = int(len(ms) * lo), max(int(len(ms) * hi), int(len(ms) * lo) + 1)
-        return [m.exit - m.begin for m in ms[a:b]]
+            ms = list(self.markers)
+        return percentile_latencies(ms, lo, hi)
+
+    def processing_window(self) -> Optional[float]:
+        """Seconds from first ingress push to last egress, if both happened —
+        the active window ``egress_throughput`` is measured over."""
+        if self._first_push_ts is None or self._last_egress_ts is None:
+            return None
+        return max(self._last_egress_ts - self._first_push_ts, 1e-9)
 
     def drained(self) -> bool:
         """Quiescence: no queued work, no worker mid-tuple, no merge holding
         an overflow bundle (a worker pushes downstream before it is released,
-        so workers==0 makes pushes visible)."""
+        so workers==0 makes pushes visible), no partial ingress micro-batch
+        awaiting :meth:`flush`."""
+        if self._accum_vals or self._accum_marks:
+            return False
         return all(
             n.worklist_size() == 0 and n.workers.load() == 0
             and n.overflow_count() == 0
@@ -533,6 +610,7 @@ class CompiledPipeline(GraphPipeline):
         num_workers: int = 1,
         marker_interval: int = 64,
         collect_outputs: bool = False,
+        batch_size: int = 1,
     ):
         specs = list(specs)
         if not specs:
@@ -547,6 +625,7 @@ class CompiledPipeline(GraphPipeline):
             num_workers=num_workers,
             marker_interval=marker_interval,
             collect_outputs=collect_outputs,
+            batch_size=batch_size,
         )
         self.specs = specs
 

@@ -1,0 +1,634 @@
+"""Process-parallel execution backend (sidesteps the GIL).
+
+The threaded :class:`~.runtime.StreamRuntime` can never exceed ~1 core of
+real Python work; this backend runs each worker in its own **forked OS
+process** and moves tuples over shared-memory rings (:mod:`.shm`):
+
+  parent ──ingress SPSC ring──▶ worker₀..worker_{N-1} ──reorder ring──▶ parent
+
+Execution model (data parallelism over the *parallel segment*):
+
+- The operator chain is split into a **parallel segment** — the maximal
+  ingress prefix every worker can execute independently — and a **tail**
+  executed in the parent, in serial order, after the reorder.  The segment is
+  the leading run of stateless operators (round-robin routing); if the chain
+  *starts* with a partitioned-stateful operator, that operator plus the
+  following stateless run forms the segment and tuples are routed by its
+  partitioner, so per-key state stays worker-local (keyed routing).
+- Every dispatch unit gets a global serial; each worker publishes exactly one
+  result per serial (possibly empty — filtered tuples punch their hole) into
+  a shared-memory reorder ring mirroring the paper's non-blocking reorder
+  buffer, so parent-side egress is in exact ingress order: the process
+  backend's output equals the sequential reference, same as the threaded
+  backend.
+- The dispatch unit is a **micro-batch** of ``io_batch`` tuples (round-robin
+  routing only; keyed routing stays per-tuple because per-worker batch
+  accumulation would reorder tuples across workers).  Batching amortizes the
+  parent's per-tuple encode/dispatch/drain cost — the single parent process
+  otherwise becomes the scaling bottleneck it was built to remove.
+- Crash tolerance (stateless segments): the parent tracks in-flight serials
+  per worker; if a worker dies it is re-forked and its un-drained serials are
+  re-dispatched.  Replayed serials that were already drained fail the reorder
+  ring's entry condition (``t < next``) and are dropped; duplicate publishes
+  of an in-window serial are idempotent because segment functions are
+  deterministic.  Keyed segments lose worker-local state on a crash, so there
+  a dead worker raises instead of restarting.
+
+Payloads ride fixed-width ring slots (ints/floats raw, batches and odd
+payloads pickled — the slow path); result bundles too large for a slot spill
+to a per-worker pipe with a spill tag left in the ring, preserving order.
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+import multiprocessing
+import os
+import pickle
+import time
+import uuid
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .operators import OpSpec, PARTITIONED, STATELESS, _Marker
+from .pipeline import GraphPipeline, NodeSpec, percentile_latencies
+from .runtime import RunReport
+from . import shm
+
+TAG_BATCH = 16  # record payload is pickle([values]) / pickle([bundles])
+
+
+def _chain_nodes(specs: Sequence[OpSpec]):
+    names = [f"{i:03d}_{s.name}" for i, s in enumerate(specs)]
+    return dict(zip(names, specs)), list(zip(names, names[1:]))
+
+
+def _apply_segment(ops: List[OpSpec], states: List[dict], value: Any) -> list:
+    """Flat-map ``value`` through the parallel segment (worker-side)."""
+    vals = [value]
+    for oi, op in enumerate(ops):
+        nxt: list = []
+        if op.kind == STATELESS:
+            fn = op.fn
+            for v in vals:
+                nxt.extend(fn(v))
+        else:  # partitioned: per-key state, worker-local (keyed routing)
+            st_map = states[oi]
+            for v in vals:
+                k = op.key_fn(v)
+                s = st_map.get(k)
+                if s is None:
+                    s = op.init_state()
+                s, outs = op.fn(s, k, v)
+                st_map[k] = s
+                nxt.extend(outs)
+        vals = nxt
+        if not vals:
+            break
+    return vals
+
+
+def _worker_main(wid, ingress, reorder, conn, seg_ops):
+    """Worker process body (entered via fork; exits with os._exit)."""
+    states = [dict() for _ in seg_ops]
+    busy = 0.0
+    processed = 0
+    code = 0
+    try:
+        idle = 1e-6
+        while True:
+            rec = ingress.get()
+            if rec is None:
+                if ingress.closed():
+                    break
+                time.sleep(idle)
+                idle = min(idle * 2, 1e-3)
+                continue
+            idle = 1e-6
+            serial, tag, data = rec
+            t_begin = time.perf_counter()
+            if tag == TAG_BATCH:
+                values = pickle.loads(data)
+                bundles = [_apply_segment(seg_ops, states, v) for v in values]
+                processed += len(values)
+                btag, bdata = TAG_BATCH, pickle.dumps(
+                    bundles, protocol=pickle.HIGHEST_PROTOCOL
+                )
+            else:
+                value = shm.decode_value(tag, data)
+                outs = _apply_segment(seg_ops, states, value)
+                processed += 1
+                btag, bdata = shm.encode_bundle(outs)
+            busy += time.perf_counter() - t_begin
+            if len(bdata) > reorder.payload_bytes:
+                conn.send(("spill", serial, btag, bdata))  # body via pipe
+                btag, bdata = shm.TAG_SPILL, b""
+            spin = 1e-6
+            while True:
+                st = reorder.try_publish(serial, btag, bdata, t_begin)
+                if st != shm.ShmReorderRing.FULL:
+                    break
+                time.sleep(spin)
+                spin = min(spin * 2, 1e-3)
+    except BaseException as exc:  # noqa: BLE001 — forwarded to the parent
+        code = 70
+        try:
+            conn.send(("error", wid, f"{type(exc).__name__}: {exc}"))
+        except Exception:
+            pass
+    try:
+        conn.send(("stats", wid, busy, processed))
+        conn.close()
+    except Exception:
+        pass
+    os._exit(code)  # skip inherited atexit/resource_tracker teardown
+
+
+class ProcessRuntime:
+    """Drives a dataflow graph with OS-process workers + shared-memory rings.
+
+    Mirrors the :class:`~.runtime.StreamRuntime` reporting surface
+    (``run(source) -> RunReport``) and the pipeline result surface
+    (``outputs``, ``egress_count``, ``markers``) so ``run_pipeline``/
+    ``run_graph`` can return it in the pipeline slot.
+    """
+
+    def __init__(
+        self,
+        nodes: Dict[str, NodeSpec],
+        edges: Sequence[Tuple[str, str]],
+        *,
+        num_workers: int = 4,
+        marker_interval: int = 64,
+        collect_outputs: bool = False,
+        io_batch: int = 32,
+        ring_slots: int = 2048,
+        slot_bytes: int = 1024,
+        reorder_size: int = 1024,
+        reorder_payload: int = 4096,
+        max_inflight: Optional[int] = None,  # dispatch units; default 8/worker
+        restart_on_crash: bool = True,
+        reorder_scheme: str = "non_blocking",
+        worklist_scheme: str = "hybrid",
+        **_ignored,  # thread-backend knobs (heuristic, ...) have no meaning here
+    ):
+        if num_workers < 1:
+            raise ValueError("need at least one worker process")
+        if "fork" not in multiprocessing.get_all_start_methods():
+            raise RuntimeError(
+                "process backend requires the fork start method (POSIX); "
+                "use backend='thread' on this platform"
+            )
+        self._ctx = multiprocessing.get_context("fork")
+        self.num_workers = num_workers
+        self.marker_interval = marker_interval
+        self.collect_outputs = collect_outputs
+        self.ring_slots = ring_slots
+        self.slot_bytes = slot_bytes
+        self.reorder_size = reorder_size
+        self.reorder_payload = reorder_payload
+        # In-flight dispatch units are doubly bounded: by the reorder window
+        # (correctness — workers must be able to publish) and by this backlog
+        # throttle (latency — an unbounded backlog pushes queueing delay into
+        # every marker while adding nothing once each worker has spare units).
+        self.max_inflight = min(
+            reorder_size, max_inflight if max_inflight else 8 * num_workers
+        )
+        self.restart_on_crash = restart_on_crash
+        self._tail_opts = dict(
+            reorder_scheme=reorder_scheme, worklist_scheme=worklist_scheme
+        )
+
+        self.node_specs = dict(nodes)
+        self.edges = [tuple(e) for e in edges]
+        self._segment, tail_nodes, tail_edges = self._split(nodes, self.edges)
+        self._keyed = bool(self._segment) and self._segment[0].kind == PARTITIONED
+        # Keyed routing keeps per-tuple dispatch: batches accumulate per
+        # worker, which would interleave egress across workers otherwise.
+        self.io_batch = 1 if self._keyed else max(1, io_batch)
+        self._tail: Optional[GraphPipeline] = None
+        if tail_nodes:
+            self._tail = GraphPipeline(
+                tail_nodes,
+                tail_edges,
+                marker_interval=0,  # markers are injected by the parent
+                collect_outputs=collect_outputs,
+                num_workers=1,
+                **self._tail_opts,
+            )
+
+        # result surface (used directly when the tail is empty)
+        self.outputs: list = []
+        self.markers: list[_Marker] = []
+        self._egress_count = 0
+        self._first_push_ts: Optional[float] = None
+        self._last_egress_ts: Optional[float] = None
+
+        # live state
+        self._ingress: List[Optional[shm.ShmSpscRing]] = []
+        self._reorder: Optional[shm.ShmReorderRing] = None
+        self._procs: List[Optional[multiprocessing.Process]] = []
+        self._conns: List[Any] = []
+        self._dead_rings: List[shm.ShmSpscRing] = []
+        self._spills: dict[int, tuple[int, bytes]] = {}
+        self._worker_busy = 0.0
+        self._worker_processed = 0
+        self.restarts = 0  # crash-recovery instrumentation
+
+    @classmethod
+    def from_chain(cls, specs: Sequence[OpSpec], **kw) -> "ProcessRuntime":
+        nodes, edges = _chain_nodes(list(specs))
+        return cls(nodes, edges, **kw)
+
+    # ------------------------------------------------------------ graph split
+    @staticmethod
+    def _split(nodes: Dict[str, NodeSpec], edges):
+        """(segment ops, tail nodes, tail edges): the parallel segment is the
+        maximal worker-executable ingress prefix of the graph."""
+        succ: dict[str, list] = {n: [] for n in nodes}
+        pred: dict[str, list] = {n: [] for n in nodes}
+        for u, v in edges:
+            succ[u].append(v)
+            pred[v].append(u)
+        sources = [n for n in nodes if not pred[n]]
+        if len(sources) != 1:
+            raise ValueError(f"graph needs exactly one ingress (got {sources})")
+        segment: list[OpSpec] = []
+        seg_names: set[str] = set()
+        cur = sources[0]
+        while cur is not None:
+            spec = nodes.get(cur)
+            if not isinstance(spec, OpSpec) or len(succ.get(cur, ())) > 1:
+                break
+            if spec.kind == STATELESS:
+                pass
+            elif spec.kind == PARTITIONED and not segment:
+                pass  # keyed-routing head
+            else:
+                break
+            segment.append(spec)
+            seg_names.add(cur)
+            cur = succ[cur][0] if succ[cur] else None
+        tail_nodes = {k: v for k, v in nodes.items() if k not in seg_names}
+        tail_edges = [(u, v) for u, v in edges if u not in seg_names]
+        return segment, tail_nodes, tail_edges
+
+    # -------------------------------------------------------------- lifecycle
+    def _spawn_worker(self, widx: int) -> None:
+        prefix = f"repro_{os.getpid()}_{uuid.uuid4().hex[:8]}_w{widx}"
+        ring = shm.ShmSpscRing(prefix, slots=self.ring_slots,
+                               slot_bytes=self.slot_bytes)
+        parent_conn, child_conn = self._ctx.Pipe(duplex=False)
+        proc = self._ctx.Process(
+            target=_worker_main,
+            args=(widx, ring, self._reorder, child_conn, self._segment),
+            daemon=True,
+        )
+        proc.start()
+        child_conn.close()
+        if widx < len(self._ingress):
+            self._ingress[widx] = ring
+            self._procs[widx] = proc
+            self._conns[widx] = parent_conn
+        else:
+            self._ingress.append(ring)
+            self._procs.append(proc)
+            self._conns.append(parent_conn)
+
+    def _setup(self) -> None:
+        prefix = f"repro_{os.getpid()}_{uuid.uuid4().hex[:8]}"
+        self._reorder = shm.ShmReorderRing(
+            prefix, size=self.reorder_size, payload_bytes=self.reorder_payload
+        )
+        for w in range(self.num_workers):
+            self._spawn_worker(w)
+
+    def stop(self) -> None:
+        """Tear everything down; idempotent, always unlinks shared memory."""
+        for ring in self._ingress:
+            if ring is not None:
+                try:
+                    ring.close_ring()
+                except Exception:
+                    pass
+        for p in self._procs:
+            if p is not None:
+                p.join(timeout=5.0)
+                if p.is_alive():
+                    p.terminate()
+                    p.join(timeout=1.0)
+        self._drain_conns(final=True)
+        for conn in self._conns:
+            try:
+                conn.close()
+            except Exception:
+                pass
+        for ring in self._ingress + self._dead_rings:
+            if ring is not None:
+                ring.close()
+                ring.unlink()
+        if self._reorder is not None:
+            self._reorder.close()
+            self._reorder.unlink()
+        self._ingress, self._procs, self._conns = [], [], []
+        self._dead_rings = []
+        self._reorder = None
+
+    # ---------------------------------------------------------------- helpers
+    def _route(self, value: Any) -> int:
+        if self._keyed:
+            op = self._segment[0]
+            return op.partitioner(op.key_fn(value)) % self.num_workers
+        return -1  # round-robin: any worker
+
+    def _drain_conns(self, final: bool = False) -> None:
+        """Sweep worker pipes for spills / stats / errors.
+
+        ``final`` (cleanup context) swallows worker errors: by then every
+        input has drained, so a late error cannot have corrupted the output.
+        """
+        for conn in self._conns:
+            if conn is None:
+                continue
+            try:
+                while conn.poll():
+                    self._on_message(conn.recv(), ignore_errors=final)
+            except (EOFError, OSError):
+                continue
+
+    def _on_message(self, msg, ignore_errors: bool = False) -> None:
+        kind = msg[0]
+        if kind == "spill":
+            self._spills[msg[1]] = (msg[2], msg[3])
+        elif kind == "stats":
+            self._worker_busy += msg[2]
+            self._worker_processed += msg[3]
+        elif kind == "error" and not ignore_errors:
+            raise RuntimeError(f"worker {msg[1]} failed in operator fn: {msg[2]}")
+
+    def _take_spill(self, serial: int, widx: int) -> tuple[int, bytes]:
+        if serial in self._spills:
+            return self._spills.pop(serial)
+        deadline = time.perf_counter() + 10.0
+        while time.perf_counter() < deadline:
+            conn = self._conns[widx]
+            if conn is not None:
+                try:
+                    if conn.poll(0.001):
+                        self._on_message(conn.recv())
+                except (EOFError, OSError):
+                    self._drain_conns()  # worker died: sweep every pipe
+            else:
+                self._drain_conns()
+            if serial in self._spills:
+                return self._spills.pop(serial)
+        raise TimeoutError(f"spilled bundle for serial {serial} never arrived")
+
+    def _handle_crash(self, widx: int, inflight: dict) -> list:
+        """Respawn worker ``widx``; return its un-drained serials for replay."""
+        if self._keyed:
+            raise RuntimeError(
+                "worker process died under keyed routing; per-key state is "
+                "lost and cannot be replayed (use a stateless segment for "
+                "crash tolerance)"
+            )
+        if not self.restart_on_crash:
+            raise RuntimeError(f"worker {widx} died (restart_on_crash=False)")
+        # salvage spills already sent, then retire the pipe and rings
+        try:
+            while self._conns[widx].poll():
+                self._on_message(self._conns[widx].recv())
+        except (EOFError, OSError):
+            pass
+        try:
+            self._conns[widx].close()
+        except Exception:
+            pass
+        self._conns[widx] = None
+        old = self._ingress[widx]
+        if old is not None:
+            self._dead_rings.append(old)  # unlink at stop(); may be mid-write
+            self._ingress[widx] = None
+        self._spawn_worker(widx)
+        self.restarts += 1
+        return sorted(t for t, (w, _, _) in inflight.items() if w == widx)
+
+    # ------------------------------------------------------------------ drive
+    def run(
+        self,
+        source: Iterable,
+        *,
+        drain: bool = True,
+        drain_timeout: float = 60.0,
+    ) -> RunReport:
+        self._setup()
+        t0 = time.perf_counter()
+        n_in = 0
+        # serial -> (widx, tag, data) of every dispatched-but-undrained unit
+        inflight: dict[int, tuple[int, int, bytes]] = {}
+        # serial -> [(offset-in-batch, marker), ...]
+        markers: dict[int, list[tuple[int, _Marker]]] = {}
+        outq: collections.deque = collections.deque()  # ready (serial,tag,data,widx)
+        next_serial = 1
+        rr = itertools.cycle(range(self.num_workers))
+        src = iter(source)
+        src_done = False
+        acc_vals: list = []
+        acc_marks: list[tuple[int, _Marker]] = []
+        deadline = None
+        monitor_at = t0
+
+        def seal_batch():
+            nonlocal next_serial, acc_vals, acc_marks
+            serial = next_serial
+            next_serial += 1
+            if self.io_batch > 1:
+                tag, data = TAG_BATCH, pickle.dumps(
+                    acc_vals, protocol=pickle.HIGHEST_PROTOCOL
+                )
+                widx = -1
+            else:
+                tag, data = shm.encode_value(acc_vals[0])
+                widx = self._route(acc_vals[0])
+            if acc_marks:
+                markers[serial] = acc_marks
+            outq.append((serial, tag, data, widx))
+            acc_vals, acc_marks = [], []
+
+        try:
+            while True:
+                progress = False
+
+                # -- intake: seal source tuples into dispatch units ----------
+                while (
+                    not src_done
+                    and len(outq) < 2 * self.num_workers
+                    and next_serial - self._reorder.next_serial < self.max_inflight
+                ):
+                    try:
+                        value = next(src)
+                    except StopIteration:
+                        src_done = True
+                        if acc_vals:
+                            seal_batch()
+                        deadline = time.perf_counter() + drain_timeout
+                        break
+                    if self._first_push_ts is None:
+                        self._first_push_ts = time.perf_counter()
+                    n_in += 1
+                    acc_vals.append(value)
+                    if self.marker_interval and n_in % self.marker_interval == 0:
+                        acc_marks.append(
+                            (len(acc_vals) - 1, _Marker(time.perf_counter()))
+                        )
+                    if len(acc_vals) >= self.io_batch:
+                        seal_batch()
+
+                # -- dispatch ready units to worker rings --------------------
+                while outq:
+                    serial, tag, data, widx = outq[0]
+                    if widx == -2:  # crash replay entry
+                        if serial not in inflight:
+                            outq.popleft()  # drained while queued for replay
+                            continue
+                        widx = -1  # route anywhere (stateless segment)
+                    if widx < 0:
+                        sent = False
+                        for _ in range(self.num_workers):
+                            w = next(rr)
+                            if self._ingress[w].put(serial, tag, data):
+                                widx, sent = w, True
+                                break
+                        if not sent:
+                            break  # every ring full; drain first
+                    elif not self._ingress[widx].put(serial, tag, data):
+                        break  # keyed: single legal target, wait
+                    outq.popleft()
+                    inflight[serial] = (widx, tag, data)
+                    progress = True
+
+                # -- drain the reorder ring in serial order ------------------
+                for _ in range(64):
+                    got = self._reorder.poll()
+                    if got is None:
+                        break
+                    t, tag, begin, data = got
+                    widx = inflight.pop(t)[0]
+                    if tag == shm.TAG_SPILL:
+                        tag, data = self._take_spill(t, widx)
+                    marks = markers.pop(t, ())
+                    if tag == TAG_BATCH:
+                        bundles = pickle.loads(data)
+                        mk = dict(marks)
+                        for i, outs in enumerate(bundles):
+                            m = mk.get(i)
+                            if m is not None:
+                                m.begin = begin
+                            self._emit(outs, m)
+                    else:
+                        outs = shm.decode_bundle(tag, data)
+                        m = marks[0][1] if marks else None
+                        if m is not None:
+                            m.begin = begin
+                        self._emit(outs, m)
+                    progress = True
+                if progress and self._tail is not None:
+                    self._pump_tail()
+
+                # -- crash monitor (periodic) --------------------------------
+                now = time.perf_counter()
+                if now >= monitor_at:
+                    monitor_at = now + 0.02
+                    self._drain_conns()
+                    for widx, p in enumerate(self._procs):
+                        if p is not None and not p.is_alive():
+                            for t in self._handle_crash(widx, inflight):
+                                if self._reorder.published(t):
+                                    continue  # result survived; just drain it
+                                _, tag, data = inflight[t]
+                                outq.appendleft((t, tag, data, -2))
+                            progress = True
+
+                # -- termination ---------------------------------------------
+                if src_done and not outq and not inflight:
+                    if self._tail is None or self._tail.drained():
+                        break
+                    self._pump_tail()
+                    if self._tail.drained():
+                        break
+                if not drain and src_done:
+                    break
+                if not progress:
+                    if deadline is not None and time.perf_counter() > deadline:
+                        raise TimeoutError("process pipeline failed to drain")
+                    time.sleep(2e-5)
+        finally:
+            self.stop()
+        wall = time.perf_counter() - t0
+        return self._report(n_in, wall)
+
+    # ------------------------------------------------------------------- tail
+    def _emit(self, outs: list, marker: Optional[_Marker]) -> None:
+        if self._tail is not None:
+            inlet = self._tail._inlet(self._tail._source_name)
+            for j, v in enumerate(outs):
+                inlet(v, marker if j == 0 else None)
+            if not outs and marker is not None:
+                marker.exit = time.perf_counter()
+                self._tail._record_marker(marker)
+            return
+        now = time.perf_counter()
+        self._egress_count += len(outs)
+        if outs:
+            self._last_egress_ts = now
+        if self.collect_outputs:
+            self.outputs.extend(outs)
+        if marker is not None:
+            marker.exit = now
+            self.markers.append(marker)
+
+    def _pump_tail(self) -> None:
+        """Run the tail graph to quiescence, single-threaded (serial order)."""
+        tail = self._tail
+        while True:
+            did = 0
+            for node in tail.nodes:
+                did += node.work(0, 1 << 30)
+            if did == 0:
+                return
+
+    # ----------------------------------------------------------------- report
+    @property
+    def egress_count(self) -> int:
+        if self._tail is not None:
+            return self._tail.egress_count
+        return self._egress_count
+
+    def processing_latencies(self, lo: float = 0.2, hi: float = 0.8) -> list:
+        ms = self.markers if self._tail is None else self._tail.markers
+        return percentile_latencies(ms, lo, hi)
+
+    def _report(self, n_in: int, wall: float) -> RunReport:
+        if self._tail is not None:
+            self.outputs = self._tail.outputs
+            self.markers = list(self._tail.markers)
+            last_out = self._tail._last_egress_ts
+        else:
+            last_out = self._last_egress_ts
+        lats = sorted(self.processing_latencies())
+        mean_lat = sum(lats) / len(lats) if lats else 0.0
+        p99 = lats[int(0.99 * (len(lats) - 1))] if lats else 0.0
+        busy = self._worker_busy / (self.num_workers * wall) if wall > 0 else 0.0
+        window = wall
+        if self._first_push_ts is not None and last_out is not None:
+            window = max(last_out - self._first_push_ts, 1e-9)
+        out_n = self.egress_count
+        return RunReport(
+            tuples_in=n_in,
+            tuples_out=out_n,
+            wall_time=wall,
+            throughput=n_in / wall if wall > 0 else 0.0,
+            egress_throughput=out_n / window if window > 0 else 0.0,
+            mean_latency=mean_lat,
+            p99_latency=p99,
+            worker_busy_frac=busy,
+        )

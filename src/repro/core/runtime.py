@@ -30,11 +30,16 @@ class RunReport:
     mean_latency: float  # mean processing latency of 20-80pct markers (s)
     p99_latency: float
     worker_busy_frac: float
+    # Egress tuples over the active processing window (first push -> last
+    # egress).  ``throughput`` divides ingress count by *total* wall time,
+    # which understates the sustained rate when drain dominates short runs.
+    egress_throughput: float = 0.0
 
     def __str__(self):
         return (
             f"in={self.tuples_in} out={self.tuples_out} wall={self.wall_time:.3f}s "
-            f"thru={self.throughput:,.0f}/s lat(mean)={self.mean_latency*1e3:.3f}ms "
+            f"thru={self.throughput:,.0f}/s egress={self.egress_throughput:,.0f}/s "
+            f"lat(mean)={self.mean_latency*1e3:.3f}ms "
             f"lat(p99)={self.p99_latency*1e3:.3f}ms busy={self.worker_busy_frac:.2f}"
         )
 
@@ -59,12 +64,22 @@ class StreamRuntime:
         self._busy = [0.0] * num_workers
 
     # ------------------------------------------------------------------ workers
+    _IDLE_MIN = 1e-5  # first miss: 10 µs
+    _IDLE_MAX = 1e-3  # backoff cap / park interval: 1 ms
+
     def _worker_loop(self, wid: int) -> None:
+        idle = self._IDLE_MIN
         while not self._stop.is_set():
             assignment = self.scheduler.acquire()
             if assignment is None:
-                time.sleep(1e-5)
+                if self.scheduler.idle_hint():
+                    # graph drained: park at the cap instead of spinning up
+                    time.sleep(self._IDLE_MAX)
+                else:
+                    time.sleep(idle)
+                    idle = min(idle * 2, self._IDLE_MAX)
                 continue
+            idle = self._IDLE_MIN
             node, budget = assignment
             t0 = time.perf_counter()
             try:
@@ -118,6 +133,7 @@ class StreamRuntime:
             for value in source:
                 self.pipeline.push(value)
                 n_in += 1
+            self.pipeline.flush()  # release any partial ingress micro-batch
             if drain:
                 deadline = time.perf_counter() + drain_timeout
                 while not self.pipeline.drained():
@@ -132,11 +148,14 @@ class StreamRuntime:
         mean_lat = sum(lats) / len(lats) if lats else 0.0
         p99 = lats_sorted[int(0.99 * (len(lats_sorted) - 1))] if lats_sorted else 0.0
         busy = sum(self._busy) / (self.num_workers * wall) if wall > 0 else 0.0
+        n_out = self.pipeline.egress_count
+        window = self.pipeline.processing_window() or wall
         return RunReport(
             tuples_in=n_in,
-            tuples_out=self.pipeline.egress_count,
+            tuples_out=n_out,
             wall_time=wall,
             throughput=n_in / wall if wall > 0 else 0.0,
+            egress_throughput=n_out / window if window > 0 else 0.0,
             mean_latency=mean_lat,
             p99_latency=p99,
             worker_busy_frac=busy,
@@ -153,9 +172,38 @@ def run_pipeline(
     worklist_scheme: str = "hybrid",
     collect_outputs: bool = False,
     marker_interval: int = 64,
+    backend: str = "thread",
+    batch_size: int = 1,
+    reorder_size: int = 1024,
     **kw,
 ) -> tuple[CompiledPipeline, RunReport]:
-    """Convenience one-shot: compile, run to drain, report."""
+    """Convenience one-shot: compile, run to drain, report.
+
+    ``backend="process"`` runs the chain on :class:`~.procrun.ProcessRuntime`
+    (per-worker OS processes + shared-memory rings; same ordered semantics).
+    The returned "pipeline" is then the runtime itself, which exposes the
+    same result surface (``outputs``, ``egress_count``, ``markers``).
+    ``batch_size > 1`` enables the threaded path's micro-batched tuple flow.
+    """
+    if backend == "process":
+        from .procrun import _chain_nodes
+
+        return run_graph(
+            *_chain_nodes(list(specs)),
+            source,
+            num_workers=num_workers,
+            heuristic=heuristic,
+            reorder_scheme=reorder_scheme,
+            worklist_scheme=worklist_scheme,
+            collect_outputs=collect_outputs,
+            marker_interval=marker_interval,
+            backend=backend,
+            batch_size=batch_size,
+            reorder_size=reorder_size,
+            **kw,
+        )
+    if backend != "thread":
+        raise ValueError(f"unknown backend {backend!r} (thread | process)")
     pipe = CompiledPipeline(
         specs,
         reorder_scheme=reorder_scheme,
@@ -163,6 +211,8 @@ def run_pipeline(
         num_workers=num_workers,
         collect_outputs=collect_outputs,
         marker_interval=marker_interval,
+        batch_size=batch_size,
+        reorder_size=reorder_size,
     )
     rt = StreamRuntime(pipe, num_workers=num_workers, heuristic=heuristic, **kw)
     report = rt.run(source)
@@ -180,9 +230,35 @@ def run_graph(
     worklist_scheme: str = "hybrid",
     collect_outputs: bool = False,
     marker_interval: int = 64,
+    backend: str = "thread",
+    batch_size: int = 1,
+    reorder_size: int = 1024,
     **kw,
 ) -> tuple[GraphPipeline, RunReport]:
-    """Convenience one-shot for DAG pipelines: compile, run to drain, report."""
+    """Convenience one-shot for DAG pipelines: compile, run to drain, report.
+
+    ``backend="process"`` parallelizes the graph's stateless ingress prefix
+    across worker processes and executes the remaining graph in the parent in
+    serial order (see :mod:`.procrun`); semantics are unchanged.
+    """
+    if backend == "process":
+        from .procrun import ProcessRuntime
+
+        rt = ProcessRuntime(
+            nodes,
+            edges,
+            num_workers=num_workers,
+            collect_outputs=collect_outputs,
+            marker_interval=marker_interval,
+            reorder_scheme=reorder_scheme,
+            worklist_scheme=worklist_scheme,
+            reorder_size=reorder_size,
+            **kw,
+        )
+        report = rt.run(source)
+        return rt, report
+    if backend != "thread":
+        raise ValueError(f"unknown backend {backend!r} (thread | process)")
     pipe = GraphPipeline(
         nodes,
         edges,
@@ -191,6 +267,8 @@ def run_graph(
         num_workers=num_workers,
         collect_outputs=collect_outputs,
         marker_interval=marker_interval,
+        batch_size=batch_size,
+        reorder_size=reorder_size,
     )
     rt = StreamRuntime(pipe, num_workers=num_workers, heuristic=heuristic, **kw)
     report = rt.run(source)

@@ -110,6 +110,15 @@ class Scheduler:
     def _schedulable(self) -> list[int]:
         return [i for i, n in enumerate(self.nodes) if n.schedulable()]
 
+    def idle_hint(self) -> bool:
+        """True when the graph looks drained: every worklist is empty and no
+        worker is mid-tuple.  Lets idle workers park (sleep at the backoff
+        cap) instead of hot-spinning ``acquire()`` — new work always arrives
+        via a push, which refills a worklist before the next poll."""
+        return all(
+            n.worklist_size() == 0 and n.workers.load() == 0 for n in self.nodes
+        )
+
     # ---------------------------------------------------------------- acquire
     def acquire(self) -> Optional[Tuple[OperatorNode, int]]:
         """Pick (node, tuple budget) for a worker, or None if nothing to do."""

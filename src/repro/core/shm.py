@@ -1,0 +1,305 @@
+"""Shared-memory transport for the process-parallel backend (paper §3, across
+address spaces).
+
+Two lock-free structures layered on ``multiprocessing.shared_memory``:
+
+- :class:`ShmSpscRing` — bounded single-producer/single-consumer ring of
+  fixed-width slots carrying ``(serial, tag, payload)`` records.  Large
+  payloads span consecutive slots (the producer publishes the whole span with
+  one tail advance, so the consumer never observes a partial record).  The
+  head (consumer cursor) and tail (producer cursor) are each written by
+  exactly one process, so no cross-process atomic RMW is needed — the only
+  primitive required is an aligned 8-byte store, which a single ``memcpy``
+  into the mapping provides.
+
+- :class:`ShmReorderRing` — the cross-process mirror of
+  :class:`~.reorder.NonBlockingReorderBuffer` (paper fig. 4): a bounded ring
+  indexed by ``serial mod size`` with a shared ``next`` counter.  Any worker
+  process may publish a slot (each serial is owned by exactly one worker);
+  the single drainer (the parent) consumes the contiguous ready prefix and
+  is the only writer of ``next``.  A slot is published by storing its
+  sequence number *last*, so a crashed worker can never expose a torn
+  payload — the slot simply stays unpublished and the serial is replayed.
+
+Payload codec: fixed-width slots want fixed-width encodings, so ints and
+floats travel as raw 8-byte values; everything else falls back to pickle
+(the slow path).  Reorder-ring bundles whose pickle exceeds the slot payload
+are diverted to a per-worker pipe and the slot carries only a spill tag,
+keeping the ring itself fixed-width.
+"""
+from __future__ import annotations
+
+import pickle
+import struct
+from multiprocessing import shared_memory
+from typing import Any, Optional, Tuple
+
+# ---------------------------------------------------------------- value codec
+TAG_INT = 0  # 8-byte signed little-endian
+TAG_FLOAT = 1  # 8-byte IEEE double
+TAG_PICKLE = 2  # pickle bytes (slow path)
+TAG_EMPTY = 3  # empty output bundle (hole-punch: serial completed, 0 tuples)
+TAG_ONE_INT = 4  # bundle of exactly one int
+TAG_ONE_FLOAT = 5  # bundle of exactly one float
+TAG_SPILL = 6  # bundle too large for the slot; body travels via pipe
+
+_I8 = struct.Struct("<q")
+_F8 = struct.Struct("<d")
+
+
+def encode_value(obj: Any) -> Tuple[int, bytes]:
+    """Encode one tuple value for an ingress ring slot."""
+    if type(obj) is int and -(1 << 63) <= obj < (1 << 63):
+        return TAG_INT, _I8.pack(obj)
+    if type(obj) is float:
+        return TAG_FLOAT, _F8.pack(obj)
+    return TAG_PICKLE, pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def decode_value(tag: int, data: bytes) -> Any:
+    if tag == TAG_INT:
+        return _I8.unpack(data)[0]
+    if tag == TAG_FLOAT:
+        return _F8.unpack(data)[0]
+    return pickle.loads(data)
+
+
+def encode_bundle(outs: list) -> Tuple[int, bytes]:
+    """Encode a flat-map result bundle (list of outputs) for a reorder slot."""
+    if not outs:
+        return TAG_EMPTY, b""
+    if len(outs) == 1:
+        v = outs[0]
+        if type(v) is int and -(1 << 63) <= v < (1 << 63):
+            return TAG_ONE_INT, _I8.pack(v)
+        if type(v) is float:
+            return TAG_ONE_FLOAT, _F8.pack(v)
+    return TAG_PICKLE, pickle.dumps(outs, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def decode_bundle(tag: int, data: bytes) -> list:
+    if tag == TAG_EMPTY:
+        return []
+    if tag == TAG_ONE_INT:
+        return [_I8.unpack(data)[0]]
+    if tag == TAG_ONE_FLOAT:
+        return [_F8.unpack(data)[0]]
+    return pickle.loads(data)
+
+
+def _align(n: int, a: int = 64) -> int:
+    return (n + a - 1) // a * a
+
+
+# ------------------------------------------------------------------ SPSC ring
+class ShmSpscRing:
+    """Bounded SPSC ring of fixed-width slots over a shared-memory segment.
+
+    Record layout (first slot of a span):
+      [total_len:4][tag:1][serial:8][payload...]
+    continuation slots carry raw payload bytes.  ``tail``/``head`` count
+    *slots*; a record occupies ``ceil((13+len)/slot_bytes)`` slots and is
+    published by a single tail store after every byte is written.
+    """
+
+    _HDR = 64  # tail:8 @0 (producer-owned), head:8 @8 (consumer-owned),
+    # closed:8 @16 (producer-owned)
+    _REC = struct.Struct("<IBq")  # total_len, tag, serial
+
+    def __init__(self, name_prefix: str, slots: int = 4096, slot_bytes: int = 512):
+        if slots < 4:
+            raise ValueError("ring needs >= 4 slots")
+        self.slots = slots
+        self.slot_bytes = _align(slot_bytes)
+        size = self._HDR + self.slots * self.slot_bytes
+        self._shm = shared_memory.SharedMemory(
+            create=True, size=size, name=f"{name_prefix}_spsc"
+        )
+        self._buf = self._shm.buf
+        self._buf[: self._HDR] = bytes(self._HDR)
+        self._tail = 0  # producer-side mirror
+        self._head = 0  # consumer-side mirror
+        self.name = self._shm.name
+
+    # max payload bytes of a single record
+    @property
+    def capacity_bytes(self) -> int:
+        return (self.slots - 1) * self.slot_bytes - self._REC.size
+
+    # -- counters (aligned 8-byte single-writer stores) ---------------------
+    def _load(self, off: int) -> int:
+        return _I8.unpack_from(self._buf, off)[0]
+
+    def _store(self, off: int, v: int) -> None:
+        _I8.pack_into(self._buf, off, v)
+
+    # -- producer -----------------------------------------------------------
+    def put(self, serial: int, tag: int, data: bytes) -> bool:
+        """Append one record; returns False if the ring lacks space."""
+        total = self._REC.size + len(data)
+        nslots = max(1, -(-total // self.slot_bytes))
+        if nslots >= self.slots:
+            raise ValueError(
+                f"record of {len(data)}B exceeds ring capacity "
+                f"({self.capacity_bytes}B); raise slot_bytes/slots"
+            )
+        head = self._load(8)
+        if self._tail - head + nslots > self.slots:
+            return False
+        first = (self._tail % self.slots) * self.slot_bytes + self._HDR
+        self._REC.pack_into(self._buf, first, len(data), tag, serial)
+        wrote = min(len(data), self.slot_bytes - self._REC.size)
+        self._buf[first + self._REC.size : first + self._REC.size + wrote] = (
+            data[:wrote]
+        )
+        pos = wrote
+        for k in range(1, nslots):
+            off = ((self._tail + k) % self.slots) * self.slot_bytes + self._HDR
+            chunk = data[pos : pos + self.slot_bytes]
+            self._buf[off : off + len(chunk)] = chunk
+            pos += len(chunk)
+        self._tail += nslots
+        self._store(0, self._tail)  # publish the whole span
+        return True
+
+    def close_ring(self) -> None:
+        """Producer-side EOF: consumers drain whatever is left, then stop."""
+        self._store(16, 1)
+
+    # -- consumer -----------------------------------------------------------
+    def get(self) -> Optional[Tuple[int, int, bytes]]:
+        """Pop one record -> (serial, tag, payload), or None when empty."""
+        tail = self._load(0)
+        if self._head >= tail:
+            return None
+        first = (self._head % self.slots) * self.slot_bytes + self._HDR
+        total, tag, serial = self._REC.unpack_from(self._buf, first)
+        nslots = max(1, -(-(self._REC.size + total) // self.slot_bytes))
+        take = min(total, self.slot_bytes - self._REC.size)
+        data = bytes(self._buf[first + self._REC.size : first + self._REC.size + take])
+        if nslots > 1:
+            parts = [data]
+            pos = take
+            for k in range(1, nslots):
+                off = ((self._head + k) % self.slots) * self.slot_bytes + self._HDR
+                chunk_len = min(total - pos, self.slot_bytes)
+                parts.append(bytes(self._buf[off : off + chunk_len]))
+                pos += chunk_len
+            data = b"".join(parts)
+        self._head += nslots
+        self._store(8, self._head)
+        return serial, tag, data
+
+    def closed(self) -> bool:
+        return self._load(16) != 0
+
+    def __len__(self) -> int:  # records are >=1 slot; used as emptiness hint
+        return max(self._load(0) - self._load(8), 0)
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        self._buf = None
+        self._shm.close()
+
+    def unlink(self) -> None:
+        try:
+            self._shm.unlink()
+        except FileNotFoundError:
+            pass
+
+
+# --------------------------------------------------------------- reorder ring
+class ShmReorderRing:
+    """Cross-process serial-number reorder ring (fig. 4 semantics, MPSC).
+
+    Slot layout: [seq:8][begin:8 double][len:4][tag:1][payload...].  Workers
+    publish serial ``t`` into slot ``t % size`` under the entry condition
+    ``next <= t < next + size`` (``next`` read from the shared header); the
+    sequence field is stored last, which is the publish.  The parent drains
+    the contiguous prefix and is the sole writer of ``next``.
+    """
+
+    _HDR = 64  # next:8 @0 (drainer-owned)
+    _SLOT_HDR = struct.Struct("<qdIB")  # seq, begin, len, tag
+
+    PUBLISHED = 0
+    FULL = 1
+    STALE = 2  # serial already drained (replay after crash) — drop
+
+    def __init__(self, name_prefix: str, size: int = 4096, payload_bytes: int = 512):
+        self.size = size
+        self.payload_bytes = payload_bytes
+        self.slot_bytes = _align(self._SLOT_HDR.size + payload_bytes)
+        self._shm = shared_memory.SharedMemory(
+            create=True,
+            size=self._HDR + size * self.slot_bytes,
+            name=f"{name_prefix}_reorder",
+        )
+        self._buf = self._shm.buf
+        self._buf[: self._HDR] = bytes(self._HDR)
+        # seq fields must start != any valid serial (serials start at 1)
+        for j in range(size):
+            _I8.pack_into(self._buf, self._HDR + j * self.slot_bytes, 0)
+        _I8.pack_into(self._buf, 0, 1)  # next = 1
+        self._next = 1  # drainer-side mirror
+        self.name = self._shm.name
+
+    # -- worker side --------------------------------------------------------
+    def shared_next(self) -> int:
+        return _I8.unpack_from(self._buf, 0)[0]
+
+    def try_publish(self, t: int, tag: int, data: bytes, begin: float) -> int:
+        n = self.shared_next()
+        if t < n:
+            return self.STALE
+        if t >= n + self.size:
+            return self.FULL
+        if len(data) > self.payload_bytes:
+            raise ValueError("bundle exceeds slot payload; caller must spill")
+        off = self._HDR + (t % self.size) * self.slot_bytes
+        body = off + self._SLOT_HDR.size
+        self._buf[body : body + len(data)] = data
+        # header written in two steps so seq (the publish) is stored last
+        struct.pack_into("<dIB", self._buf, off + 8, begin, len(data), tag)
+        _I8.pack_into(self._buf, off, t)
+        return self.PUBLISHED
+
+    # -- drainer side -------------------------------------------------------
+    def poll(self) -> Optional[Tuple[int, int, float, bytes]]:
+        """Consume the next in-order slot -> (serial, tag, begin, payload)."""
+        off = self._HDR + (self._next % self.size) * self.slot_bytes
+        seq, begin, length, tag = self._SLOT_HDR.unpack_from(self._buf, off)
+        if seq != self._next:
+            return None
+        body = off + self._SLOT_HDR.size
+        data = bytes(self._buf[body : body + length])
+        t = self._next
+        self._next += 1
+        _I8.pack_into(self._buf, 0, self._next)  # widen the window
+        return t, tag, begin, data
+
+    @property
+    def next_serial(self) -> int:
+        return self._next
+
+    def published(self, t: int) -> bool:
+        """Drainer-side: is serial ``t`` already drained or sitting published
+        in its slot?  Used by crash recovery to avoid replaying serials whose
+        result survived the worker — replays must have exactly one publisher,
+        or a slow duplicate could clobber the slot after it is reused by
+        serial ``t + size``."""
+        if t < self._next:
+            return True
+        off = self._HDR + (t % self.size) * self.slot_bytes
+        return _I8.unpack_from(self._buf, off)[0] == t
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        self._buf = None
+        self._shm.close()
+
+    def unlink(self) -> None:
+        try:
+            self._shm.unlink()
+        except FileNotFoundError:
+            pass

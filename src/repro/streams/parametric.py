@@ -39,6 +39,47 @@ def stateless_parametric(
     )
 
 
+def cpu_bound_stateless(
+    name: str = "cpu_sl",
+    spin: int = 100,
+    selectivity: float = 1.0,
+) -> OpSpec:
+    """Pure-Python (GIL-bound) compute operator — the fig. 8 CPU-bound
+    synthetic profile.  Unlike the numpy variants, none of the per-tuple work
+    releases the GIL, so the threaded runtime is pinned to ~1 core and the
+    process backend's scaling is measured against an honest baseline.
+    ``spin`` iterations ≈ ``spin * 0.08`` µs of interpreter work per tuple.
+    """
+    period = None
+    if selectivity < 1.0:
+        period = max(int(round(1.0 / (1.0 - selectivity))), 2)
+
+    def fn(v):
+        x = float(v) if not isinstance(v, float) else v
+        for _ in range(spin):
+            x = (x * 1.0000001 + 1.31) % 97.0
+        if period is not None and int(v) % period == 0:
+            return []  # deterministic filter: same drop set on every backend
+        return [x]
+
+    return OpSpec(
+        name, "stateless", fn, cost_us=spin * 0.08, selectivity=selectivity
+    )
+
+
+def cpu_bound_chain(
+    stages: int = 3, spin: int = 100, selectivity: float = 1.0
+) -> list[OpSpec]:
+    """Fig. 8-style CPU-bound synthetic query: a chain of pure-Python compute
+    stages (used by ``benchmarks/bench_core.py`` and the fig. 8 backend
+    comparison)."""
+    return [
+        cpu_bound_stateless(f"cpu{i}", spin=spin,
+                            selectivity=selectivity if i == 0 else 1.0)
+        for i in range(stages)
+    ]
+
+
 def partitioned_parametric(
     name: str = "param_ps",
     matrix_n: int = 8,

@@ -250,6 +250,35 @@ def q15(n: int = 20000, seed: int = 0):
 QUERIES = {"q1": q1, "q2": q2, "q3": q3, "q4": q4, "q15": q15}
 
 
+def run_query(
+    name: str,
+    n: int = 20000,
+    *,
+    seed: int = 0,
+    backend: str = "thread",
+    num_workers: int = 4,
+    batch_size: int = 1,
+    heuristic: str = "ct",
+    **kw,
+):
+    """One-shot runner with backend plumb-through: compile query ``name`` and
+    run it on the chosen execution backend (``thread`` honors ``heuristic``
+    and ``batch_size``; ``process`` parallelizes the stateless prefix across
+    worker processes).  Returns ``(pipeline_or_runtime, RunReport)``."""
+    from repro.core import run_pipeline
+
+    specs, src = QUERIES[name](n=n, seed=seed)
+    return run_pipeline(
+        specs,
+        src,
+        backend=backend,
+        num_workers=num_workers,
+        batch_size=batch_size,
+        heuristic=heuristic,
+        **kw,
+    )
+
+
 # ------------------------------------------------------------------ DAG forms
 def q1_dag(n: int = 20000, seed: int = 0, branches: int = 2):
     """Q1 as a DAG: the basket_pairs hot spot runs on ``branches`` parallel
