@@ -1,5 +1,5 @@
 # Convenience targets; the source of truth is scripts/verify.sh (ROADMAP.md).
-.PHONY: verify test bench
+.PHONY: verify test bench docs-check
 
 verify:
 	./scripts/verify.sh
@@ -9,3 +9,6 @@ test:
 
 bench:
 	PYTHONPATH=src python -m benchmarks.bench_core
+
+docs-check:
+	python scripts/check_links.py

@@ -1,23 +1,31 @@
-"""Core-runtime perf tracker: thread vs process backends, batch 1 vs 32.
+"""Core-runtime perf tracker: thread vs process backends, batching, staging.
 
-Runs a fixed wall-clock-sized (default ~10 s per config) fig. 8-style
-CPU-bound synthetic query (pure-Python compute stages, GIL-bound) through:
+Runs fixed wall-clock-sized (default ~10 s per config) fig. 8-style
+CPU-bound synthetic queries (pure-Python compute stages, GIL-bound) through:
 
-  - backend=thread, batch_size=1   (the paper-faithful baseline)
-  - backend=thread, batch_size=32  (micro-batched tuple path)
-  - backend=process                (OS-process workers + shared-memory rings)
+  - cpu_chain (3 stateless stages):
+      backend=thread, batch_size=1   (the paper-faithful baseline)
+      backend=thread, batch_size=32  (micro-batched tuple path)
+      backend=process                (OS-process workers + shared-memory rings)
+  - keyed_hotspot (SL → partitioned hot spot → SL — the interior-stateful
+    shape the ingress-only plan cannot parallelize):
+      backend=process, stages=1      (PR-2 ingress-only plan: hot op in the
+                                      serial parent tail)
+      backend=process, stages=auto   (staged plan: the keyed stage gets its
+                                      own process worker group)
 
 and writes ``BENCH_core.json`` (throughput, egress throughput, p99 latency,
-busy fraction, plus the two headline ratios) so the perf trajectory is
-tracked across PRs.  Each config's tuple count is auto-calibrated from a
-short probe run so every row measures a comparable wall-clock window.
+busy fraction, a ``stages`` column, plus the headline ratios) so the perf
+trajectory is tracked across PRs.  Each config's tuple count is
+auto-calibrated from a short probe run so every row measures a comparable
+wall-clock window.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.bench_core [--smoke] [--seconds S]
                                                  [--out PATH] [--workers N]
 
 ``--smoke`` shrinks the window to ~1 s per config — used by ``make verify``
-to keep the perf plumbing from rotting without a 30 s bill.
+to keep the perf plumbing from rotting without a 60 s bill.
 """
 from __future__ import annotations
 
@@ -29,36 +37,62 @@ import sys
 import time
 
 from repro.core import run_pipeline
-from repro.streams.parametric import cpu_bound_chain
+from repro.streams.parametric import cpu_bound_chain, keyed_hotspot_chain
 
 SPIN = 100  # ~24 µs of GIL-bound work per tuple across the 3-stage chain
 STAGES = 3
+HOT_SPIN = 1200  # keyed hot spot: ~96 µs/tuple in the partitioned op alone
+
+WORKLOADS = {
+    "cpu_chain": lambda: cpu_bound_chain(stages=STAGES, spin=SPIN),
+    "keyed_hotspot": lambda: keyed_hotspot_chain(spin_edge=30, spin_hot=HOT_SPIN),
+}
+
 CONFIGS = (
-    {"backend": "thread", "batch_size": 1},
-    {"backend": "thread", "batch_size": 32},
-    {"backend": "process", "batch_size": 1},
+    {"workload": "cpu_chain", "backend": "thread", "batch_size": 1},
+    {"workload": "cpu_chain", "backend": "thread", "batch_size": 32},
+    {"workload": "cpu_chain", "backend": "process", "batch_size": 1},
+    # The hotspot pair measures stage *topology*, not fan-out: pin the
+    # per-stage worker-group size to 2 so the A/B stays apples-to-apples
+    # regardless of --workers (and of a small container's core count).
+    {"workload": "keyed_hotspot", "backend": "process", "batch_size": 32,
+     "stages": 1, "workers": 2},
+    {"workload": "keyed_hotspot", "backend": "process", "batch_size": 32,
+     "stages": None, "workers": 2},  # None = auto: cut as deep as possible
 )
 
 
-def _run_config(backend: str, batch_size: int, seconds: float, workers: int):
-    kw = dict(num_workers=workers, backend=backend, batch_size=batch_size)
+def _run_once(cfg: dict, n: int, workers: int):
+    kw = dict(
+        num_workers=cfg.get("workers", workers),
+        backend=cfg["backend"],
+        batch_size=cfg["batch_size"],
+    )
+    if "stages" in cfg:
+        kw["stages"] = cfg["stages"]
+    return run_pipeline(WORKLOADS[cfg["workload"]](), range(n), **kw)
+
+
+def _run_config(cfg: dict, seconds: float, workers: int):
+    workers = cfg.get("workers", workers)
     # probe: size the real run to ~`seconds` of wall clock
     probe_n = 2000
-    _, probe = run_pipeline(cpu_bound_chain(stages=STAGES, spin=SPIN),
-                            range(probe_n), **kw)
+    _, probe = _run_once(cfg, probe_n, workers)
     n = max(int(probe.throughput * seconds), probe_n)
-    _, report = run_pipeline(cpu_bound_chain(stages=STAGES, spin=SPIN),
-                             range(n), **kw)
+    pipe, report = _run_once(cfg, n, workers)
     if not (0.7 * seconds <= report.wall_time <= 1.3 * seconds):
         # the short probe misjudged the sustained rate (startup effects);
         # rescale once so every config measures a comparable window
         scale = min(max(seconds / max(report.wall_time, 1e-9), 0.25), 4.0)
         n = max(int(n * scale), probe_n)
-        _, report = run_pipeline(cpu_bound_chain(stages=STAGES, spin=SPIN),
-                                 range(n), **kw)
+        pipe, report = _run_once(cfg, n, workers)
     return {
-        "backend": backend,
-        "batch_size": batch_size,
+        "workload": cfg["workload"],
+        "backend": cfg["backend"],
+        "batch_size": cfg["batch_size"],
+        # process stages the planner actually cut (1 = ingress-only plan;
+        # null for the thread backend, which has no process stages)
+        "stages": getattr(pipe, "num_stages", None),
         "workers": workers,
         "tuples": n,
         "wall_s": round(report.wall_time, 3),
@@ -74,30 +108,56 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
         print_fn=print):
     rows = []
     for cfg in CONFIGS:
-        row = _run_config(cfg["backend"], cfg["batch_size"], seconds, workers)
+        row = _run_config(cfg, seconds, workers)
         rows.append(row)
+        stages = "-" if row["stages"] is None else row["stages"]
         print_fn(
-            f"{row['backend']:>7} batch={row['batch_size']:<3} "
+            f"{row['workload']:>14} {row['backend']:>7} "
+            f"batch={row['batch_size']:<3} stages={stages:<2} "
             f"thru={row['throughput_per_s']:>10,.0f}/s "
             f"p99={row['p99_latency_ms']:.3f}ms busy={row['busy_frac']:.2f} "
             f"({row['tuples']} tuples / {row['wall_s']}s)"
         )
 
-    def thru(backend, batch):
+    def thru(workload, backend, batch, staged=None):
         for r in rows:
-            if r["backend"] == backend and r["batch_size"] == batch:
+            if (
+                r["workload"] == workload
+                and r["backend"] == backend
+                and r["batch_size"] == batch
+                and (
+                    staged is None
+                    or (r["stages"] != 1 if staged else r["stages"] == 1)
+                )
+            ):
                 return r["throughput_per_s"]
         return 0.0
 
     ratios = {
-        "process_vs_thread": round(thru("process", 1) / max(thru("thread", 1), 1e-9), 3),
+        "process_vs_thread": round(
+            thru("cpu_chain", "process", 1) /
+            max(thru("cpu_chain", "thread", 1), 1e-9), 3,
+        ),
         "thread_batch32_vs_batch1": round(
-            thru("thread", 32) / max(thru("thread", 1), 1e-9), 3
+            thru("cpu_chain", "thread", 32) /
+            max(thru("cpu_chain", "thread", 1), 1e-9), 3,
+        ),
+        # The tentpole ratio: staged plan vs the PR-2 ingress-only plan on
+        # the same workload.  The auto plan cuts SL|PS|SL into 2 stages (the
+        # trailing stateless run folds into the keyed stage).
+        "staged_vs_ingress_process": round(
+            thru("keyed_hotspot", "process", 32, staged=True) /
+            max(thru("keyed_hotspot", "process", 32, staged=False), 1e-9), 3,
         ),
     }
     doc = {
         "meta": {
-            "workload": f"fig8-style CPU-bound chain ({STAGES} stages, spin={SPIN})",
+            "workloads": {
+                "cpu_chain": f"fig8-style CPU-bound chain ({STAGES} stages, "
+                             f"spin={SPIN})",
+                "keyed_hotspot": f"SL(spin=30) -> PS(spin={HOT_SPIN}, keyed) "
+                                 f"-> SL(spin=30) interior hot spot",
+            },
             "seconds_per_config": seconds,
             "cpu_count": os.cpu_count(),
             "python": platform.python_version(),
@@ -111,7 +171,8 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
         f.write("\n")
     print_fn(
         f"ratios: process/thread={ratios['process_vs_thread']}x  "
-        f"batch32/batch1={ratios['thread_batch32_vs_batch1']}x  -> {out}"
+        f"batch32/batch1={ratios['thread_batch32_vs_batch1']}x  "
+        f"staged/ingress={ratios['staged_vs_ingress_process']}x  -> {out}"
     )
     return doc
 

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Markdown link check (``make docs-check``): every relative link in the
+repo's markdown tree must resolve to an existing file/directory, and heading
+anchors must exist in the target document.
+
+Scope: ``docs/**/*.md``, every ``*.md`` at the repo root, and
+``benchmarks/README.md`` — except ``SNIPPETS.md``/``PAPERS.md``, which quote
+exemplar text from *other* repos verbatim (their anchors point into
+documents we do not have).  External links (http/https/mailto) are NOT
+fetched — this check must stay offline-safe and fast; it guards against the
+common rot (renamed files, moved sections) only.
+
+Exit code 0 = clean, 1 = broken links (listed on stderr).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target) — excludes images' leading ! only for nicer messages;
+# image targets are checked the same way.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _anchor(heading: str) -> str:
+    """GitHub-style heading -> anchor slug."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[`*_]", "", slug)
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def _anchors(md_path: Path) -> set[str]:
+    text = md_path.read_text(encoding="utf-8", errors="replace")
+    return {_anchor(h) for h in _HEADING.findall(_CODE_FENCE.sub("", text))}
+
+
+# Quoted third-party exemplar content: not ours to keep link-clean.
+_EXCLUDE = {"SNIPPETS.md", "PAPERS.md"}
+
+
+def _md_files() -> list[Path]:
+    files = sorted((ROOT / "docs").glob("**/*.md")) if (ROOT / "docs").is_dir() else []
+    files += sorted(p for p in ROOT.glob("*.md") if p.name not in _EXCLUDE)
+    extra = ROOT / "benchmarks" / "README.md"
+    if extra.is_file():
+        files.append(extra)
+    return files
+
+
+def check() -> list[str]:
+    errors: list[str] = []
+    for md in _md_files():
+        text = _CODE_FENCE.sub("", md.read_text(encoding="utf-8", errors="replace"))
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, frag = target.partition("#")
+            rel = md.relative_to(ROOT)
+            if not path_part:  # pure in-document anchor
+                if frag and _anchor(frag) not in _anchors(md):
+                    errors.append(f"{rel}: missing anchor #{frag}")
+                continue
+            dest = (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+            if frag and dest.suffix == ".md":
+                if _anchor(frag) not in _anchors(dest):
+                    errors.append(f"{rel}: missing anchor {path_part}#{frag}")
+    return errors
+
+
+def main() -> int:
+    files = _md_files()
+    errors = check()
+    if errors:
+        for e in errors:
+            print(f"docs-check: {e}", file=sys.stderr)
+        print(f"docs-check: {len(errors)} broken link(s) in {len(files)} files",
+              file=sys.stderr)
+        return 1
+    print(f"docs-check: OK ({len(files)} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
-# Tier-1 verification + perf-plumbing smoke (see ROADMAP.md).
+# Tier-1 verification + perf-plumbing smoke + docs link check (see ROADMAP.md).
 #
-#   ./scripts/verify.sh          # full tier-1 pytest + bench_core smoke
+#   ./scripts/verify.sh          # full: tier-1 pytest + bench smoke + docs-check
 #   ./scripts/verify.sh --fast   # pytest only
 #
-# The bench smoke (~3-5 s) runs the thread/process/batched backends end to
-# end and rewrites BENCH_core.json, so the perf plumbing cannot silently rot.
+# The bench smoke (~5 s) runs the thread/process/batched/staged backends end
+# to end and rewrites BENCH_core.json, so the perf plumbing cannot silently
+# rot.  The docs check (scripts/check_links.py) keeps docs/, the root
+# markdown files, and benchmarks/README.md free of broken relative links.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,5 +17,6 @@ python -m pytest -x -q
 
 if [[ "${1:-}" != "--fast" ]]; then
     python -m benchmarks.bench_core --smoke
+    python scripts/check_links.py
 fi
 echo "verify: OK"

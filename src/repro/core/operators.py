@@ -9,6 +9,15 @@ Operator function signatures:
   stateless:    fn(value) -> list[out]
   stateful:     fn(state, value) -> (state, list[out])
   partitioned:  fn(state, key, value) -> (state, list[out])
+
+Contract: operator functions must be **deterministic** (same state/value in,
+same outputs out) and side-effect-free outside their own state.  The thread
+backend merely assumes this for reproducibility, but the process backend
+(:mod:`.procrun`) *relies* on it — crash recovery re-executes a dead
+worker's uncommitted unit and treats duplicate publishes as idempotent,
+which is only sound for deterministic functions.  Functions (and their
+closures) must also survive ``fork``-style pickling when they ride
+process-backend dispatch units.
 """
 from __future__ import annotations
 

@@ -578,8 +578,12 @@ class GraphPipeline:
 
     def processing_window(self) -> Optional[float]:
         """Seconds from first ingress push to last egress, if both happened —
-        the active window ``egress_throughput`` is measured over."""
+        the active window ``egress_throughput`` is measured over.  A run that
+        egressed 0 or 1 tuples has no meaningful window (first push and last
+        egress coincide) and reports None."""
         if self._first_push_ts is None or self._last_egress_ts is None:
+            return None
+        if self._egress_count <= 1:
             return None
         return max(self._last_egress_ts - self._first_push_ts, 1e-9)
 

@@ -1,42 +1,64 @@
-"""Process-parallel execution backend (sidesteps the GIL).
+"""Staged process-parallel execution backend (sidesteps the GIL).
 
 The threaded :class:`~.runtime.StreamRuntime` can never exceed ~1 core of
-real Python work; this backend runs each worker in its own **forked OS
-process** and moves tuples over shared-memory rings (:mod:`.shm`):
+real Python work; this backend runs the pipeline on **forked OS processes**
+connected by shared-memory exchange edges (:mod:`.shm`):
 
-  parent ──ingress SPSC ring──▶ worker₀..worker_{N-1} ──reorder ring──▶ parent
+  parent ──▶ stage₀ workers ──exchange──▶ stage₁ workers ──…──▶ parent
+             (W₀ procs)       (router)     (W₁ procs)          (egress)
 
-Execution model (data parallelism over the *parallel segment*):
+Execution model (pipeline × data parallelism over *stages*):
 
-- The operator chain is split into a **parallel segment** — the maximal
-  ingress prefix every worker can execute independently — and a **tail**
-  executed in the parent, in serial order, after the reorder.  The segment is
-  the leading run of stateless operators (round-robin routing); if the chain
-  *starts* with a partitioned-stateful operator, that operator plus the
-  following stateless run forms the segment and tuples are routed by its
-  partitioner, so per-key state stays worker-local (keyed routing).
-- Every dispatch unit gets a global serial; each worker publishes exactly one
-  result per serial (possibly empty — filtered tuples punch their hole) into
-  a shared-memory reorder ring mirroring the paper's non-blocking reorder
-  buffer, so parent-side egress is in exact ingress order: the process
-  backend's output equals the sequential reference, same as the threaded
-  backend.
-- The dispatch unit is a **micro-batch** of ``io_batch`` tuples (round-robin
-  routing only; keyed routing stays per-tuple because per-worker batch
-  accumulation would reorder tuples across workers).  Batching amortizes the
-  parent's per-tuple encode/dispatch/drain cost — the single parent process
-  otherwise becomes the scaling bottleneck it was built to remove.
-- Crash tolerance (stateless segments): the parent tracks in-flight serials
-  per worker; if a worker dies it is re-forked and its un-drained serials are
-  re-dispatched.  Replayed serials that were already drained fail the reorder
-  ring's entry condition (``t < next``) and are dropped; duplicate publishes
-  of an in-window serial are idempotent because segment functions are
-  deterministic.  Keyed segments lose worker-local state on a crash, so there
-  a dead worker raises instead of restarting.
+- The operator chain/DAG prefix is cut into **stages** at partitioned/
+  stateful boundaries: a stage is either a run of stateless operators
+  (round-robin routing, ``num_workers``-way data parallel), a partitioned
+  operator plus its trailing stateless run (**keyed** routing by the
+  operator's partitioner, so per-key state never crosses workers), or a
+  stateful operator plus trailing stateless run (one worker — the operator's
+  intrinsic serial constraint, but it still leaves the parent and overlaps
+  with every other stage).  Anything uncuttable (``Split``/``Merge`` regions,
+  fan-out) remains a **tail** executed in the parent after the final reorder.
+  ``stages=1`` reproduces the PR-2 ingress-only plan; ``stages=None`` (the
+  default) cuts as deep as the graph allows.
 
-Payloads ride fixed-width ring slots (ints/floats raw, batches and odd
-payloads pickled — the slow path); result bundles too large for a slot spill
-to a per-worker pipe with a spill tag left in the ring, preserving order.
+- Each stage owns an :class:`~.shm.ExchangeRing`: per-worker ingress SPSC
+  rings in, one serial-number reorder ring out (the paper's fig. 4
+  non-blocking buffer, per stage).  The stage's *feeder* — the parent for
+  stage 0, an **exchange router** process for every interior stage — drains
+  the previous stage's reorder ring (already in stream order), assigns
+  per-tuple serials, seals micro-batches of ``io_batch`` tuples, and routes
+  them round-robin or by key.  Workers publish results under those serials:
+  contiguous round-robin units as one span slot, keyed units one slot per
+  tuple — per-worker batches carry per-tuple serials precisely so the
+  downstream drain restores the cross-worker interleave order (this is what
+  lets ``batch_size``/``io_batch`` and keyed stages compose).  End-of-stream
+  is an in-band ``TAG_EOF`` published by each feeder at ``last_serial + 1``;
+  ring contiguity delays it behind every real result, so EOF cascades stage
+  by stage until the parent sees it at egress.
+
+- The parent is a thin supervisor: it seals ingress units, drains the final
+  reorder ring (running the uncuttable tail graph, if any, in serial order),
+  monitors every child process, forwards spill bundles to the router that
+  needs them, and aggregates stats.  It executes no operator ``fn`` bodies
+  when the graph is fully staged (feeders — parent and routers — do still
+  evaluate a keyed stage's ``key_fn``/``partitioner`` to route tuples, so
+  those two callables must be cheap, exception-free, and fork-safe).
+
+Crash tolerance: workers consume their ingress ring with peek → process →
+publish → advance, so a killed worker strands at most one uncommitted unit
+in shared memory; the parent re-forks a replacement onto the same rings and
+the unit is transparently re-processed (duplicate publishes are idempotent —
+see :mod:`.shm` — which requires segment functions to be **deterministic**).
+Stateless stages recover this way; keyed/stateful stages lose worker-local
+state on a crash, so there a dead worker raises instead of restarting.
+Router processes run no operator ``fn`` bodies (only a keyed stage's
+``key_fn``/``partitioner``, for routing); a router death — including one
+caused by a raising ``key_fn`` — is unrecoverable and raises.
+
+Payloads ride fixed-width ring slots (units and result bundles pickled,
+single int/float results raw); result bundles too large for a reorder slot
+spill to the worker's pipe with a spill tag left in the ring, preserving
+order — the parent relays spill bodies to the router that drains them.
 """
 from __future__ import annotations
 
@@ -47,14 +69,15 @@ import os
 import pickle
 import time
 import uuid
+from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
-from .operators import OpSpec, PARTITIONED, STATELESS, _Marker
+from .operators import OpSpec, PARTITIONED, STATEFUL, STATELESS, _Marker
 from .pipeline import GraphPipeline, NodeSpec, percentile_latencies
 from .runtime import RunReport
 from . import shm
 
-TAG_BATCH = 16  # record payload is pickle([values]) / pickle([bundles])
+_PICKLE = pickle.HIGHEST_PROTOCOL
 
 
 def _chain_nodes(specs: Sequence[OpSpec]):
@@ -62,8 +85,96 @@ def _chain_nodes(specs: Sequence[OpSpec]):
     return dict(zip(names, specs)), list(zip(names, names[1:]))
 
 
-def _apply_segment(ops: List[OpSpec], states: List[dict], value: Any) -> list:
-    """Flat-map ``value`` through the parallel segment (worker-side)."""
+# ------------------------------------------------------------------ stage plan
+@dataclass
+class StagePlan:
+    """One process stage: a worker group executing a run of operators."""
+
+    kind: str  # "stateless" | "keyed" | "stateful"
+    ops: List[OpSpec] = field(default_factory=list)
+    workers: int = 1
+    index: int = 0
+
+    @property
+    def recoverable(self) -> bool:
+        """Only stateless stages survive a worker crash (no lost state)."""
+        return all(op.kind == STATELESS for op in self.ops)
+
+    def describe(self) -> str:
+        names = ",".join(op.name for op in self.ops) or "<identity>"
+        return f"stage{self.index}[{self.kind} x{self.workers}: {names}]"
+
+
+def _plan_stages(
+    nodes: Dict[str, NodeSpec],
+    edges: Sequence[Tuple[str, str]],
+    num_workers: int,
+    max_stages: Optional[int],
+):
+    """Cut the graph's linear ingress prefix into stages.
+
+    Returns ``(stages, tail_nodes, tail_edges)``.  The walk stops at the
+    first routing node (Split/Merge) or fan-out — that remainder is the
+    parent-side tail.  ``max_stages=1`` reproduces the ingress-only plan
+    (maximal stateless run, or leading partitioned op + stateless run)."""
+    cap = max_stages if max_stages and max_stages > 0 else (1 << 30)
+    succ: dict[str, list] = {n: [] for n in nodes}
+    pred: dict[str, list] = {n: [] for n in nodes}
+    for u, v in edges:
+        succ[u].append(v)
+        pred[v].append(u)
+    sources = [n for n in nodes if not pred[n]]
+    if len(sources) != 1:
+        raise ValueError(f"graph needs exactly one ingress (got {sources})")
+
+    stages: list[StagePlan] = []
+    cur_ops: list[OpSpec] = []
+    cur_kind: Optional[str] = None
+    seg_names: set[str] = set()
+
+    def close_stage():
+        nonlocal cur_ops, cur_kind
+        if cur_ops:
+            w = 1 if cur_kind == "stateful" else num_workers
+            stages.append(StagePlan(cur_kind, cur_ops, w, len(stages)))
+        cur_ops, cur_kind = [], None
+
+    cur: Optional[str] = sources[0]
+    while cur is not None:
+        spec = nodes.get(cur)
+        if not isinstance(spec, OpSpec) or len(succ.get(cur, ())) > 1:
+            break
+        if spec.kind == STATELESS:
+            if cur_kind is None:
+                if len(stages) >= cap:
+                    break
+                cur_kind = "stateless"
+        else:  # partitioned/stateful operators must head their own stage
+            close_stage()
+            if len(stages) >= cap:
+                break
+            cur_kind = "keyed" if spec.kind == PARTITIONED else "stateful"
+        cur_ops.append(spec)
+        seg_names.add(cur)
+        cur = succ[cur][0] if succ[cur] else None
+    close_stage()
+
+    if not stages:  # routing-headed graph: identity pass-through stage
+        stages = [StagePlan("stateless", [], num_workers, 0)]
+    tail_nodes = {k: v for k, v in nodes.items() if k not in seg_names}
+    tail_edges = [(u, v) for u, v in edges if u not in seg_names]
+    return stages, tail_nodes, tail_edges
+
+
+# ------------------------------------------------------------- worker process
+def _init_states(ops: Sequence[OpSpec]) -> list:
+    return [
+        [op.init_state()] if op.kind == STATEFUL else {} for op in ops
+    ]
+
+
+def _apply_segment(ops: Sequence[OpSpec], states: list, value: Any) -> list:
+    """Flat-map ``value`` through the stage's operator run (worker-side)."""
     vals = [value]
     for oi, op in enumerate(ops):
         nxt: list = []
@@ -71,6 +182,11 @@ def _apply_segment(ops: List[OpSpec], states: List[dict], value: Any) -> list:
             fn = op.fn
             for v in vals:
                 nxt.extend(fn(v))
+        elif op.kind == STATEFUL:  # single-worker stage: one state box
+            box = states[oi]
+            for v in vals:
+                box[0], outs = op.fn(box[0], v)
+                nxt.extend(outs)
         else:  # partitioned: per-key state, worker-local (keyed routing)
             st_map = states[oi]
             for v in vals:
@@ -87,48 +203,100 @@ def _apply_segment(ops: List[OpSpec], states: List[dict], value: Any) -> list:
     return vals
 
 
+def _publish(reorder, conn, serial, tag, data, span) -> None:
+    """Publish one result slot, spilling oversized bodies via the pipe; spins
+    (with teardown escape) while the reorder window is full."""
+    if len(data) > reorder.payload_bytes:
+        conn.send(("spill", serial, tag, data))  # body via pipe, before the tag
+        tag, data = shm.TAG_SPILL, b""
+    spin = 1e-6
+    while True:
+        st = reorder.try_publish(serial, tag, data, span)
+        if st != shm.ShmReorderRing.FULL:
+            return
+        if reorder.stopped():
+            return
+        time.sleep(spin)
+        spin = min(spin * 2, 1e-3)
+
+
 def _worker_main(wid, ingress, reorder, conn, seg_ops):
-    """Worker process body (entered via fork; exits with os._exit)."""
-    states = [dict() for _ in seg_ops]
+    """Stage worker body (entered via fork; exits with os._exit).
+
+    Consumes peek → process → publish → advance so a crash strands at most
+    one uncommitted unit (see module docstring)."""
+    ingress.sync_consumer()  # crash replacement: resume at the shared cursor
+    states = _init_states(seg_ops)
     busy = 0.0
     processed = 0
     code = 0
+    # Only the FIRST peeked unit can be a crash replay (a dead predecessor's
+    # uncommitted unit), and only stateless stages are ever re-forked —
+    # contiguous TAG_UNIT traffic.  A replayed serial whose result survived
+    # the predecessor must be skipped, not republished: a duplicate publisher
+    # could clobber the slot concurrently with its reuse by serial+size once
+    # the drain moves past it.
+    replay = True
     try:
         idle = 1e-6
         while True:
-            rec = ingress.get()
+            rec = ingress.peek()
             if rec is None:
-                if ingress.closed():
+                if ingress.closed() or reorder.stopped():
                     break
                 time.sleep(idle)
                 idle = min(idle * 2, 1e-3)
                 continue
             idle = 1e-6
-            serial, tag, data = rec
+            serial, tag, data, nslots = rec
             t_begin = time.perf_counter()
-            if tag == TAG_BATCH:
-                values = pickle.loads(data)
-                bundles = [_apply_segment(seg_ops, states, v) for v in values]
+            if tag == shm.TAG_KUNIT:
+                serials, values, marks = pickle.loads(data)
+                by_off = dict(marks) if marks else None
+                results = []
+                for i, v in enumerate(values):
+                    m = by_off.get(i) if by_off else None
+                    if m is not None and not m.begin:
+                        m.begin = time.perf_counter()
+                    results.append((serials[i], _apply_segment(seg_ops, states, v), m))
                 processed += len(values)
-                btag, bdata = TAG_BATCH, pickle.dumps(
-                    bundles, protocol=pickle.HIGHEST_PROTOCOL
-                )
-            else:
-                value = shm.decode_value(tag, data)
-                outs = _apply_segment(seg_ops, states, value)
-                processed += 1
-                btag, bdata = shm.encode_bundle(outs)
-            busy += time.perf_counter() - t_begin
-            if len(bdata) > reorder.payload_bytes:
-                conn.send(("spill", serial, btag, bdata))  # body via pipe
-                btag, bdata = shm.TAG_SPILL, b""
-            spin = 1e-6
-            while True:
-                st = reorder.try_publish(serial, btag, bdata, t_begin)
-                if st != shm.ShmReorderRing.FULL:
-                    break
-                time.sleep(spin)
-                spin = min(spin * 2, 1e-3)
+                busy += time.perf_counter() - t_begin
+                for s, outs, m in results:  # per-tuple slots: the downstream
+                    if m is None:  # drain restores the cross-worker interleave
+                        btag, bdata = shm.encode_bundle(outs)
+                    else:
+                        if not outs:
+                            m.exit = time.perf_counter()
+                        btag, bdata = shm.TAG_MBUNDLE, pickle.dumps((outs, m), _PICKLE)
+                    _publish(reorder, conn, s, btag, bdata, 1)
+            else:  # TAG_UNIT: contiguous serial span [serial, serial+len)
+                values, marks = pickle.loads(data)
+                by_off = dict(marks) if marks else None
+                bundles: list = []
+                out_marks: list = []
+                dropped: list = []
+                for i, v in enumerate(values):
+                    m = by_off.get(i) if by_off else None
+                    if m is not None and not m.begin:
+                        m.begin = time.perf_counter()
+                    outs = _apply_segment(seg_ops, states, v)
+                    bundles.append(outs)
+                    if m is not None:
+                        if outs:
+                            out_marks.append((i, m))
+                        else:
+                            m.exit = time.perf_counter()
+                            dropped.append(m)
+                processed += len(values)
+                busy += time.perf_counter() - t_begin
+                if not (replay and reorder.published(serial)):
+                    bdata = pickle.dumps((bundles, out_marks, dropped), _PICKLE)
+                    _publish(
+                        reorder, conn, serial, shm.TAG_BUNDLES, bdata,
+                        len(values),
+                    )
+            ingress.advance(nslots)  # commit only after the publish (replay)
+            replay = False
     except BaseException as exc:  # noqa: BLE001 — forwarded to the parent
         code = 70
         try:
@@ -143,13 +311,273 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops):
     os._exit(code)  # skip inherited atexit/resource_tracker teardown
 
 
+# ------------------------------------------------------------------ dispatcher
+class _Dispatcher:
+    """The feeder half of an exchange edge: assigns per-tuple serials in
+    stream order, seals ``io_batch``-sized units, and routes them into a
+    stage's ingress rings (keyed for partitioned stages, round-robin
+    otherwise).  Used by the parent (stage 0) and by every router."""
+
+    def __init__(self, exchange: shm.ExchangeRing, plan: StagePlan,
+                 io_batch: int, max_inflight: int):
+        self.x = exchange
+        self.plan = plan
+        self.workers = plan.workers
+        self.io_batch = max(1, io_batch)
+        self.max_inflight = max_inflight
+        self.keyed = plan.kind == "keyed"
+        if self.keyed:
+            head = plan.ops[0]
+            self._key_fn, self._part = head.key_fn, head.partitioner
+            # per-worker accumulators: (serials, values, marks)
+            self._acc = [([], [], []) for _ in range(self.workers)]
+        else:
+            self._vals: list = []
+            self._marks: list = []
+            self._head_serial = 1
+        self.next_serial = 1
+        self._rr = itertools.cycle(range(self.workers))
+        # sealed units awaiting ring space: per-worker FIFO (keyed units must
+        # stay ordered per ring; cross-ring order is restored by the reorder)
+        self._outq: list[collections.deque] = [
+            collections.deque() for _ in range(self.workers)
+        ]
+        self._queued = 0
+
+    # -- intake gate --------------------------------------------------------
+    def inflight(self) -> int:
+        return self.next_serial - self.x.reorder.shared_next()
+
+    def ready(self) -> bool:
+        """Whether the feeder should accept more upstream tuples."""
+        return (
+            self._queued < 2 * self.workers
+            and self.inflight() < self.max_inflight
+        )
+
+    # -- sealing ------------------------------------------------------------
+    def add(self, value: Any, marker: Optional[_Marker]) -> None:
+        serial = self.next_serial
+        self.next_serial += 1
+        if self.keyed:
+            w = self._part(self._key_fn(value)) % self.workers
+            serials, vals, marks = self._acc[w]
+            if marker is not None:
+                marks.append((len(vals), marker))
+            serials.append(serial)
+            vals.append(value)
+            if len(vals) >= self.io_batch:
+                self._seal_keyed(w)
+        else:
+            if marker is not None:
+                self._marks.append((len(self._vals), marker))
+            self._vals.append(value)
+            if len(self._vals) >= self.io_batch:
+                self._seal_contiguous()
+
+    def _seal_keyed(self, w: int) -> None:
+        serials, vals, marks = self._acc[w]
+        if not vals:
+            return
+        self._acc[w] = ([], [], [])
+        data = pickle.dumps((serials, vals, marks), _PICKLE)
+        self._outq[w].append((serials[0], shm.TAG_KUNIT, data))
+        self._queued += 1
+
+    def _seal_contiguous(self) -> None:
+        vals, marks = self._vals, self._marks
+        if not vals:
+            return
+        self._vals, self._marks = [], []
+        head = self._head_serial
+        self._head_serial = self.next_serial
+        data = pickle.dumps((vals, marks), _PICKLE)
+        self._outq[next(self._rr)].append((head, shm.TAG_UNIT, data))
+        self._queued += 1
+
+    def flush(self) -> None:
+        """Seal every partial accumulator (source end / upstream idle)."""
+        if self.keyed:
+            for w in range(self.workers):
+                self._seal_keyed(w)
+        else:
+            self._seal_contiguous()
+
+    # -- dispatch -----------------------------------------------------------
+    def pump(self) -> bool:
+        """Move sealed units into ingress rings; True if anything moved."""
+        progress = False
+        for w, q in enumerate(self._outq):
+            ring = self.x.rings[w]
+            while q:
+                serial, tag, data = q[0]
+                if not ring.put(serial, tag, data):
+                    break  # ring full: backpressure, try again later
+                q.popleft()
+                self._queued -= 1
+                progress = True
+        return progress
+
+    def pending(self) -> bool:
+        return self._queued > 0 or (
+            any(acc[1] for acc in self._acc) if self.keyed else bool(self._vals)
+        )
+
+    def publish_eof(self) -> bool:
+        """Publish the in-band end-of-stream marker at ``last_serial + 1``.
+        Contiguity holds it behind every real result.  False while the
+        reorder window cannot accept it yet."""
+        st = self.x.reorder.try_publish(self.next_serial, shm.TAG_EOF, b"")
+        return st != shm.ShmReorderRing.FULL
+
+    def stall_flush(self) -> bool:
+        """The feeders' shared liveness rule: when the pipeline stalls,
+        release partial units.  Keyed batches fill unevenly, so a waiting
+        partial can hold exactly the serial the downstream drain (and
+        therefore the inflight window) is blocked on — keeping it would
+        deadlock.  Returns True if anything was dispatched."""
+        self.flush()
+        return self.pump()
+
+
+# -------------------------------------------------------------- router process
+def _pump_router_conn(conn, spills) -> None:
+    """Drain parent→router messages (spill bodies); never blocks."""
+    try:
+        while conn.poll():
+            msg = conn.recv()
+            if msg[0] == "spill":
+                spills[msg[1]] = (msg[2], msg[3])
+    except (EOFError, OSError):
+        pass
+
+
+def _await_spill(spills, serial, pump):
+    """Wait (≤ 10 s) for a spill body to land in ``spills`` via ``pump`` — a
+    callable draining pending pipe messages.  Shared by the parent (conns
+    sweep) and the routers (parent-relay pipe)."""
+    deadline = time.perf_counter() + 10.0
+    while time.perf_counter() < deadline:
+        if serial in spills:
+            return spills.pop(serial)
+        pump()
+        time.sleep(0.001)
+    raise TimeoutError(f"spilled bundle for serial {serial} never arrived")
+
+
+def _router_main(ridx, upstream, exchange, conn, plan, io_batch, max_inflight):
+    """Exchange-router body: drain the upstream stage's reorder ring (stream
+    order), re-stamp serials, seal/route units into the downstream stage, and
+    cascade EOF.  Never runs operator ``fn`` bodies — though keyed routing
+    does evaluate the downstream head's ``key_fn``/``partitioner`` here."""
+    disp = _Dispatcher(exchange, plan, io_batch, max_inflight)
+    spills: dict[int, tuple[int, bytes]] = {}
+    busy = 0.0
+    code = 0
+    try:
+        idle = 1e-6
+        eof = False
+        while not eof:
+            if upstream.stopped():
+                break
+            drained = 0
+            if disp.ready():
+                t0 = time.perf_counter()
+                for _ in range(64):  # batch the drain: one pump per sweep
+                    got = upstream.poll()
+                    if got is None:
+                        break
+                    t, tag, data, _span = got
+                    if tag == shm.TAG_EOF:
+                        eof = True
+                        break
+                    if tag == shm.TAG_SPILL:
+                        tag, data = _await_spill(
+                            spills, t, lambda: _pump_router_conn(conn, spills)
+                        )
+                    _route_result(disp, conn, tag, data)
+                    drained += 1
+                if drained:
+                    busy += time.perf_counter() - t0
+            if drained or eof:
+                idle = 1e-6
+                disp.pump()
+                continue
+            _pump_router_conn(conn, spills)
+            moved = disp.pump()
+            if not moved and idle >= 1e-4:
+                moved = disp.stall_flush()  # liveness: see _Dispatcher
+            if moved:
+                idle = 1e-6
+            else:
+                time.sleep(idle)
+                idle = min(idle * 2, 1e-3)
+        if eof:
+            disp.flush()
+            spin = 1e-6
+            while disp.pending():  # drain our queue into the rings
+                if not disp.pump():
+                    if exchange.reorder.stopped():
+                        break
+                    time.sleep(spin)
+                    spin = min(spin * 2, 1e-3)
+            exchange.close_ingress()  # workers drain what is left, then exit
+            spin = 1e-6
+            while not disp.publish_eof():  # cascade EOF downstream
+                if exchange.reorder.stopped():
+                    break
+                time.sleep(spin)
+                spin = min(spin * 2, 1e-3)
+    except BaseException as exc:  # noqa: BLE001
+        code = 71
+        try:
+            conn.send(("error", f"router{ridx}", f"{type(exc).__name__}: {exc}"))
+        except Exception:
+            pass
+    try:
+        conn.send(("stats", f"router{ridx}", busy, 0))
+        conn.close()
+    except Exception:
+        pass
+    os._exit(code)
+
+
+def _route_result(disp, conn, tag, data) -> None:
+    """Flatten one drained result slot into the downstream tuple stream."""
+    if tag == shm.TAG_BUNDLES:
+        bundles, out_marks, dropped = pickle.loads(data)
+        if dropped:  # probes whose tuples were filtered: record at the parent
+            conn.send(("marks", dropped))
+        mk = dict(out_marks) if out_marks else None
+        for i, outs in enumerate(bundles):
+            m = mk.get(i) if mk else None
+            for j, v in enumerate(outs):
+                disp.add(v, m if j == 0 else None)
+    elif tag == shm.TAG_MBUNDLE:
+        outs, m = pickle.loads(data)
+        if not outs and m is not None:
+            conn.send(("marks", [m]))
+        for j, v in enumerate(outs):
+            disp.add(v, m if j == 0 else None)
+    else:
+        for v in shm.decode_bundle(tag, data):
+            disp.add(v, None)
+
+
+# -------------------------------------------------------------- process runtime
 class ProcessRuntime:
-    """Drives a dataflow graph with OS-process workers + shared-memory rings.
+    """Drives a dataflow graph with staged OS-process worker groups connected
+    by shared-memory exchange edges.
 
     Mirrors the :class:`~.runtime.StreamRuntime` reporting surface
     (``run(source) -> RunReport``) and the pipeline result surface
     (``outputs``, ``egress_count``, ``markers``) so ``run_pipeline``/
     ``run_graph`` can return it in the pipeline slot.
+
+    ``num_workers`` is the worker-group size of each data-parallel stage
+    (stateful stages always run one worker); ``stages`` caps how many stages
+    the planner may cut (``None`` = as many as the graph allows, ``1`` = the
+    ingress-only plan of PR 2).
     """
 
     def __init__(
@@ -160,7 +588,9 @@ class ProcessRuntime:
         num_workers: int = 4,
         marker_interval: int = 64,
         collect_outputs: bool = False,
-        io_batch: int = 32,
+        io_batch: Optional[int] = None,
+        batch_size: int = 1,
+        stages: Optional[int] = None,
         ring_slots: int = 2048,
         slot_bytes: int = 1024,
         reorder_size: int = 1024,
@@ -186,13 +616,17 @@ class ProcessRuntime:
         self.slot_bytes = slot_bytes
         self.reorder_size = reorder_size
         self.reorder_payload = reorder_payload
-        # In-flight dispatch units are doubly bounded: by the reorder window
+        # batch_size (the thread path's knob) doubles as the dispatch-unit
+        # size when io_batch is not given, so the two backends share one dial.
+        if io_batch is None:
+            io_batch = batch_size if batch_size and batch_size > 1 else 32
+        self.io_batch = max(1, io_batch)
+        # In-flight serials are doubly bounded: by the reorder window
         # (correctness — workers must be able to publish) and by this backlog
         # throttle (latency — an unbounded backlog pushes queueing delay into
         # every marker while adding nothing once each worker has spare units).
-        self.max_inflight = min(
-            reorder_size, max_inflight if max_inflight else 8 * num_workers
-        )
+        units = max_inflight if max_inflight else 8 * num_workers
+        self.max_inflight = min(reorder_size, max(units * self.io_batch, 1))
         self.restart_on_crash = restart_on_crash
         self._tail_opts = dict(
             reorder_scheme=reorder_scheme, worklist_scheme=worklist_scheme
@@ -200,11 +634,9 @@ class ProcessRuntime:
 
         self.node_specs = dict(nodes)
         self.edges = [tuple(e) for e in edges]
-        self._segment, tail_nodes, tail_edges = self._split(nodes, self.edges)
-        self._keyed = bool(self._segment) and self._segment[0].kind == PARTITIONED
-        # Keyed routing keeps per-tuple dispatch: batches accumulate per
-        # worker, which would interleave egress across workers otherwise.
-        self.io_batch = 1 if self._keyed else max(1, io_batch)
+        self.stage_plans, tail_nodes, tail_edges = _plan_stages(
+            self.node_specs, self.edges, num_workers, stages
+        )
         self._tail: Optional[GraphPipeline] = None
         if tail_nodes:
             self._tail = GraphPipeline(
@@ -224,12 +656,14 @@ class ProcessRuntime:
         self._last_egress_ts: Optional[float] = None
 
         # live state
-        self._ingress: List[Optional[shm.ShmSpscRing]] = []
-        self._reorder: Optional[shm.ShmReorderRing] = None
+        self._exchanges: List[shm.ExchangeRing] = []
         self._procs: List[Optional[multiprocessing.Process]] = []
+        self._pinfo: List[tuple] = []  # ("worker", stage, widx) | ("router", stage)
         self._conns: List[Any] = []
-        self._dead_rings: List[shm.ShmSpscRing] = []
+        self._router_conns: dict[int, Any] = {}  # stage idx -> parent-side duplex
+        self._disp: Optional[_Dispatcher] = None
         self._spills: dict[int, tuple[int, bytes]] = {}
+        self._eof_seen = False
         self._worker_busy = 0.0
         self._worker_processed = 0
         self.restarts = 0  # crash-recovery instrumentation
@@ -239,77 +673,88 @@ class ProcessRuntime:
         nodes, edges = _chain_nodes(list(specs))
         return cls(nodes, edges, **kw)
 
-    # ------------------------------------------------------------ graph split
-    @staticmethod
-    def _split(nodes: Dict[str, NodeSpec], edges):
-        """(segment ops, tail nodes, tail edges): the parallel segment is the
-        maximal worker-executable ingress prefix of the graph."""
-        succ: dict[str, list] = {n: [] for n in nodes}
-        pred: dict[str, list] = {n: [] for n in nodes}
-        for u, v in edges:
-            succ[u].append(v)
-            pred[v].append(u)
-        sources = [n for n in nodes if not pred[n]]
-        if len(sources) != 1:
-            raise ValueError(f"graph needs exactly one ingress (got {sources})")
-        segment: list[OpSpec] = []
-        seg_names: set[str] = set()
-        cur = sources[0]
-        while cur is not None:
-            spec = nodes.get(cur)
-            if not isinstance(spec, OpSpec) or len(succ.get(cur, ())) > 1:
-                break
-            if spec.kind == STATELESS:
-                pass
-            elif spec.kind == PARTITIONED and not segment:
-                pass  # keyed-routing head
-            else:
-                break
-            segment.append(spec)
-            seg_names.add(cur)
-            cur = succ[cur][0] if succ[cur] else None
-        tail_nodes = {k: v for k, v in nodes.items() if k not in seg_names}
-        tail_edges = [(u, v) for u, v in edges if u not in seg_names]
-        return segment, tail_nodes, tail_edges
+    # --------------------------------------------------------------- topology
+    @property
+    def num_stages(self) -> int:
+        return len(self.stage_plans)
+
+    def worker_groups(self) -> list[list[multiprocessing.Process]]:
+        """Live worker processes per stage (crash tests / introspection)."""
+        groups: list[list] = [[] for _ in self.stage_plans]
+        for p, info in zip(self._procs, self._pinfo):
+            if p is not None and info[0] == "worker":
+                groups[info[1]].append(p)
+        return groups
 
     # -------------------------------------------------------------- lifecycle
-    def _spawn_worker(self, widx: int) -> None:
-        prefix = f"repro_{os.getpid()}_{uuid.uuid4().hex[:8]}_w{widx}"
-        ring = shm.ShmSpscRing(prefix, slots=self.ring_slots,
-                               slot_bytes=self.slot_bytes)
+    def _fork_worker(self, stage: int, widx: int, slot: Optional[int] = None):
+        x = self._exchanges[stage]
         parent_conn, child_conn = self._ctx.Pipe(duplex=False)
         proc = self._ctx.Process(
             target=_worker_main,
-            args=(widx, ring, self._reorder, child_conn, self._segment),
+            args=(widx, x.rings[widx], x.reorder, child_conn,
+                  self.stage_plans[stage].ops),
             daemon=True,
         )
         proc.start()
         child_conn.close()
-        if widx < len(self._ingress):
-            self._ingress[widx] = ring
-            self._procs[widx] = proc
-            self._conns[widx] = parent_conn
-        else:
-            self._ingress.append(ring)
+        if slot is None:
             self._procs.append(proc)
+            self._pinfo.append(("worker", stage, widx))
             self._conns.append(parent_conn)
+        else:  # crash replacement: same rings, fresh pipe
+            self._procs[slot] = proc
+            self._conns[slot] = parent_conn
+
+    def _fork_router(self, stage: int) -> None:
+        parent_conn, child_conn = self._ctx.Pipe(duplex=True)
+        proc = self._ctx.Process(
+            target=_router_main,
+            args=(stage, self._exchanges[stage - 1].reorder,
+                  self._exchanges[stage], child_conn,
+                  self.stage_plans[stage], self.io_batch, self.max_inflight),
+            daemon=True,
+        )
+        proc.start()
+        child_conn.close()
+        self._procs.append(proc)
+        self._pinfo.append(("router", stage))
+        self._conns.append(parent_conn)
+        self._router_conns[stage] = parent_conn
 
     def _setup(self) -> None:
-        prefix = f"repro_{os.getpid()}_{uuid.uuid4().hex[:8]}"
-        self._reorder = shm.ShmReorderRing(
-            prefix, size=self.reorder_size, payload_bytes=self.reorder_payload
+        run_id = f"repro_{os.getpid()}_{uuid.uuid4().hex[:8]}"
+        self._exchanges = [
+            shm.ExchangeRing(
+                f"{run_id}_s{plan.index}",
+                plan.workers,
+                ring_slots=self.ring_slots,
+                slot_bytes=self.slot_bytes,
+                reorder_size=self.reorder_size,
+                reorder_payload=self.reorder_payload,
+            )
+            for plan in self.stage_plans
+        ]
+        # stage-0 workers first (supervision order mirrors the dataflow)
+        for stage, plan in enumerate(self.stage_plans):
+            for w in range(plan.workers):
+                self._fork_worker(stage, w)
+        for stage in range(1, len(self.stage_plans)):
+            self._fork_router(stage)
+        self._disp = _Dispatcher(
+            self._exchanges[0], self.stage_plans[0], self.io_batch,
+            self.max_inflight,
         )
-        for w in range(self.num_workers):
-            self._spawn_worker(w)
+        self._eof_seen = False
 
     def stop(self) -> None:
         """Tear everything down; idempotent, always unlinks shared memory."""
-        for ring in self._ingress:
-            if ring is not None:
-                try:
-                    ring.close_ring()
-                except Exception:
-                    pass
+        for x in self._exchanges:
+            try:
+                x.request_stop()  # unstick FULL-spinning publishers/routers
+                x.close_ingress()
+            except Exception:
+                pass
         for p in self._procs:
             if p is not None:
                 p.join(timeout=5.0)
@@ -322,95 +767,106 @@ class ProcessRuntime:
                 conn.close()
             except Exception:
                 pass
-        for ring in self._ingress + self._dead_rings:
-            if ring is not None:
-                ring.close()
-                ring.unlink()
-        if self._reorder is not None:
-            self._reorder.close()
-            self._reorder.unlink()
-        self._ingress, self._procs, self._conns = [], [], []
-        self._dead_rings = []
-        self._reorder = None
+        for x in self._exchanges:
+            x.close()
+            x.unlink()
+        self._exchanges = []
+        self._procs, self._pinfo, self._conns = [], [], []
+        self._router_conns = {}
+        self._disp = None
 
-    # ---------------------------------------------------------------- helpers
-    def _route(self, value: Any) -> int:
-        if self._keyed:
-            op = self._segment[0]
-            return op.partitioner(op.key_fn(value)) % self.num_workers
-        return -1  # round-robin: any worker
-
+    # ---------------------------------------------------------------- plumbing
     def _drain_conns(self, final: bool = False) -> None:
-        """Sweep worker pipes for spills / stats / errors.
+        """Sweep child pipes for spills / stats / marks / errors.
 
         ``final`` (cleanup context) swallows worker errors: by then every
         input has drained, so a late error cannot have corrupted the output.
         """
-        for conn in self._conns:
+        for idx, conn in enumerate(self._conns):
             if conn is None:
                 continue
             try:
                 while conn.poll():
-                    self._on_message(conn.recv(), ignore_errors=final)
+                    self._on_message(idx, conn.recv(), ignore_errors=final)
             except (EOFError, OSError):
                 continue
 
-    def _on_message(self, msg, ignore_errors: bool = False) -> None:
+    def _on_message(self, idx: int, msg, ignore_errors: bool = False) -> None:
         kind = msg[0]
         if kind == "spill":
-            self._spills[msg[1]] = (msg[2], msg[3])
+            # Route the body to whoever drains that stage's reorder ring:
+            # the next stage's router, or the parent for the final stage.
+            stage = self._pinfo[idx][1]
+            target = self._router_conns.get(stage + 1)
+            if target is None:
+                self._spills[msg[1]] = (msg[2], msg[3])
+            else:
+                target.send(msg)
         elif kind == "stats":
             self._worker_busy += msg[2]
             self._worker_processed += msg[3]
+        elif kind == "marks":  # probes dropped mid-pipeline (filtered tuples)
+            for m in msg[1]:
+                self._record_dropped(m)
         elif kind == "error" and not ignore_errors:
-            raise RuntimeError(f"worker {msg[1]} failed in operator fn: {msg[2]}")
+            raise RuntimeError(f"worker {msg[1]} failed: {msg[2]}")
 
-    def _take_spill(self, serial: int, widx: int) -> tuple[int, bytes]:
-        if serial in self._spills:
-            return self._spills.pop(serial)
-        deadline = time.perf_counter() + 10.0
-        while time.perf_counter() < deadline:
-            conn = self._conns[widx]
-            if conn is not None:
-                try:
-                    if conn.poll(0.001):
-                        self._on_message(conn.recv())
-                except (EOFError, OSError):
-                    self._drain_conns()  # worker died: sweep every pipe
-            else:
-                self._drain_conns()
-            if serial in self._spills:
-                return self._spills.pop(serial)
-        raise TimeoutError(f"spilled bundle for serial {serial} never arrived")
+    def _record_dropped(self, m: _Marker) -> None:
+        if not m.exit:
+            m.exit = time.perf_counter()
+        if self._tail is not None:
+            self._tail._record_marker(m)
+        else:
+            self.markers.append(m)
 
-    def _handle_crash(self, widx: int, inflight: dict) -> list:
-        """Respawn worker ``widx``; return its un-drained serials for replay."""
-        if self._keyed:
+    def _take_spill(self, serial: int) -> tuple[int, bytes]:
+        return _await_spill(self._spills, serial, self._drain_conns)
+
+    # --------------------------------------------------------------- monitor
+    def _check_procs(self) -> None:
+        for idx, p in enumerate(self._procs):
+            if p is None or p.is_alive():
+                continue
+            # Salvage every message first — a user-fn error beats a crash
+            # diagnosis, and spills/stats must not be lost.
+            try:
+                while self._conns[idx].poll():
+                    self._on_message(idx, self._conns[idx].recv())
+            except (EOFError, OSError):
+                pass
+            if p.exitcode == 0:  # normal exit (stage drained)
+                self._procs[idx] = None
+                continue
+            self._on_crash(idx, p)
+
+    def _on_crash(self, idx: int, proc) -> None:
+        info = self._pinfo[idx]
+        if info[0] == "router":
             raise RuntimeError(
-                "worker process died under keyed routing; per-key state is "
-                "lost and cannot be replayed (use a stateless segment for "
-                "crash tolerance)"
+                f"exchange router for stage {info[1]} died "
+                f"(exitcode {proc.exitcode})"
+            )
+        _, stage, widx = info
+        plan = self.stage_plans[stage]
+        if not plan.recoverable:
+            raise RuntimeError(
+                f"worker process died in {plan.describe()}; worker-local "
+                "state is lost and cannot be replayed (only stateless stages "
+                "are crash-tolerant)"
             )
         if not self.restart_on_crash:
-            raise RuntimeError(f"worker {widx} died (restart_on_crash=False)")
-        # salvage spills already sent, then retire the pipe and rings
+            raise RuntimeError(
+                f"worker {widx} of stage {stage} died (restart_on_crash=False)"
+            )
         try:
-            while self._conns[widx].poll():
-                self._on_message(self._conns[widx].recv())
-        except (EOFError, OSError):
-            pass
-        try:
-            self._conns[widx].close()
+            self._conns[idx].close()
         except Exception:
             pass
-        self._conns[widx] = None
-        old = self._ingress[widx]
-        if old is not None:
-            self._dead_rings.append(old)  # unlink at stop(); may be mid-write
-            self._ingress[widx] = None
-        self._spawn_worker(widx)
+        # Re-fork onto the SAME rings: the dead worker committed its ring
+        # head only after publishing, so at most one unit is re-processed
+        # and duplicate publishes are idempotent (deterministic segments).
+        self._fork_worker(stage, widx, slot=idx)
         self.restarts += 1
-        return sorted(t for t, (w, _, _) in inflight.items() if w == widx)
 
     # ------------------------------------------------------------------ drive
     def run(
@@ -423,133 +879,60 @@ class ProcessRuntime:
         self._setup()
         t0 = time.perf_counter()
         n_in = 0
-        # serial -> (widx, tag, data) of every dispatched-but-undrained unit
-        inflight: dict[int, tuple[int, int, bytes]] = {}
-        # serial -> [(offset-in-batch, marker), ...]
-        markers: dict[int, list[tuple[int, _Marker]]] = {}
-        outq: collections.deque = collections.deque()  # ready (serial,tag,data,widx)
-        next_serial = 1
-        rr = itertools.cycle(range(self.num_workers))
         src = iter(source)
         src_done = False
-        acc_vals: list = []
-        acc_marks: list[tuple[int, _Marker]] = []
+        eof_published = False
         deadline = None
         monitor_at = t0
-
-        def seal_batch():
-            nonlocal next_serial, acc_vals, acc_marks
-            serial = next_serial
-            next_serial += 1
-            if self.io_batch > 1:
-                tag, data = TAG_BATCH, pickle.dumps(
-                    acc_vals, protocol=pickle.HIGHEST_PROTOCOL
-                )
-                widx = -1
-            else:
-                tag, data = shm.encode_value(acc_vals[0])
-                widx = self._route(acc_vals[0])
-            if acc_marks:
-                markers[serial] = acc_marks
-            outq.append((serial, tag, data, widx))
-            acc_vals, acc_marks = [], []
+        disp = self._disp
+        stall = 0
+        idle = 2e-5
 
         try:
             while True:
                 progress = False
 
-                # -- intake: seal source tuples into dispatch units ----------
-                while (
-                    not src_done
-                    and len(outq) < 2 * self.num_workers
-                    and next_serial - self._reorder.next_serial < self.max_inflight
-                ):
+                # -- intake: seal source tuples into stage-0 units -----------
+                while not src_done and disp.ready():
                     try:
                         value = next(src)
                     except StopIteration:
                         src_done = True
-                        if acc_vals:
-                            seal_batch()
+                        disp.flush()
                         deadline = time.perf_counter() + drain_timeout
                         break
                     if self._first_push_ts is None:
                         self._first_push_ts = time.perf_counter()
                     n_in += 1
-                    acc_vals.append(value)
+                    marker = None
                     if self.marker_interval and n_in % self.marker_interval == 0:
-                        acc_marks.append(
-                            (len(acc_vals) - 1, _Marker(time.perf_counter()))
-                        )
-                    if len(acc_vals) >= self.io_batch:
-                        seal_batch()
-
-                # -- dispatch ready units to worker rings --------------------
-                while outq:
-                    serial, tag, data, widx = outq[0]
-                    if widx == -2:  # crash replay entry
-                        if serial not in inflight:
-                            outq.popleft()  # drained while queued for replay
-                            continue
-                        widx = -1  # route anywhere (stateless segment)
-                    if widx < 0:
-                        sent = False
-                        for _ in range(self.num_workers):
-                            w = next(rr)
-                            if self._ingress[w].put(serial, tag, data):
-                                widx, sent = w, True
-                                break
-                        if not sent:
-                            break  # every ring full; drain first
-                    elif not self._ingress[widx].put(serial, tag, data):
-                        break  # keyed: single legal target, wait
-                    outq.popleft()
-                    inflight[serial] = (widx, tag, data)
+                        marker = _Marker(time.perf_counter())
+                    disp.add(value, marker)
                     progress = True
 
-                # -- drain the reorder ring in serial order ------------------
-                for _ in range(64):
-                    got = self._reorder.poll()
-                    if got is None:
-                        break
-                    t, tag, begin, data = got
-                    widx = inflight.pop(t)[0]
-                    if tag == shm.TAG_SPILL:
-                        tag, data = self._take_spill(t, widx)
-                    marks = markers.pop(t, ())
-                    if tag == TAG_BATCH:
-                        bundles = pickle.loads(data)
-                        mk = dict(marks)
-                        for i, outs in enumerate(bundles):
-                            m = mk.get(i)
-                            if m is not None:
-                                m.begin = begin
-                            self._emit(outs, m)
-                    else:
-                        outs = shm.decode_bundle(tag, data)
-                        m = marks[0][1] if marks else None
-                        if m is not None:
-                            m.begin = begin
-                        self._emit(outs, m)
+                # -- dispatch sealed units to stage-0 rings ------------------
+                if disp.pump():
+                    progress = True
+                if src_done and not eof_published and not disp.pending():
+                    if disp.publish_eof():
+                        eof_published = True
+                        progress = True
+
+                # -- drain the final reorder ring in serial order ------------
+                if self._drain_final():
                     progress = True
                 if progress and self._tail is not None:
                     self._pump_tail()
 
-                # -- crash monitor (periodic) --------------------------------
+                # -- supervision (periodic) ----------------------------------
                 now = time.perf_counter()
                 if now >= monitor_at:
                     monitor_at = now + 0.02
                     self._drain_conns()
-                    for widx, p in enumerate(self._procs):
-                        if p is not None and not p.is_alive():
-                            for t in self._handle_crash(widx, inflight):
-                                if self._reorder.published(t):
-                                    continue  # result survived; just drain it
-                                _, tag, data = inflight[t]
-                                outq.appendleft((t, tag, data, -2))
-                            progress = True
+                    self._check_procs()
 
                 # -- termination ---------------------------------------------
-                if src_done and not outq and not inflight:
+                if self._eof_seen:
                     if self._tail is None or self._tail.drained():
                         break
                     self._pump_tail()
@@ -557,14 +940,54 @@ class ProcessRuntime:
                         break
                 if not drain and src_done:
                     break
-                if not progress:
+                if progress:
+                    stall = 0
+                    idle = 2e-5
+                else:
+                    stall += 1
+                    if stall == 50:
+                        disp.stall_flush()  # liveness: see _Dispatcher
+                        stall = 0
                     if deadline is not None and time.perf_counter() > deadline:
                         raise TimeoutError("process pipeline failed to drain")
-                    time.sleep(2e-5)
+                    # back off while the stages grind: a busy-polling parent
+                    # steals the very cores the worker groups need
+                    time.sleep(idle)
+                    idle = min(idle * 2, 5e-4)
         finally:
             self.stop()
         wall = time.perf_counter() - t0
         return self._report(n_in, wall)
+
+    def _drain_final(self, limit: int = 64) -> bool:
+        progress = False
+        for _ in range(limit):
+            got = self._exchanges[-1].reorder.poll()
+            if got is None:
+                break
+            t, tag, data, _span = got
+            progress = True
+            if tag == shm.TAG_EOF:
+                self._eof_seen = True
+                break
+            if tag == shm.TAG_SPILL:
+                tag, data = self._take_spill(t)
+            if tag == shm.TAG_BUNDLES:
+                bundles, out_marks, dropped = pickle.loads(data)
+                for m in dropped:
+                    self._record_dropped(m)
+                mk = dict(out_marks) if out_marks else None
+                for i, outs in enumerate(bundles):
+                    self._emit(outs, mk.get(i) if mk else None)
+            elif tag == shm.TAG_MBUNDLE:
+                outs, m = pickle.loads(data)
+                if outs:
+                    self._emit(outs, m)
+                elif m is not None:
+                    self._record_dropped(m)
+            else:
+                self._emit(shm.decode_bundle(tag, data), None)
+        return progress
 
     # ------------------------------------------------------------------- tail
     def _emit(self, outs: list, marker: Optional[_Marker]) -> None:
@@ -573,8 +996,7 @@ class ProcessRuntime:
             for j, v in enumerate(outs):
                 inlet(v, marker if j == 0 else None)
             if not outs and marker is not None:
-                marker.exit = time.perf_counter()
-                self._tail._record_marker(marker)
+                self._record_dropped(marker)
             return
         now = time.perf_counter()
         self._egress_count += len(outs)
@@ -583,8 +1005,11 @@ class ProcessRuntime:
         if self.collect_outputs:
             self.outputs.extend(outs)
         if marker is not None:
-            marker.exit = now
-            self.markers.append(marker)
+            if outs:
+                marker.exit = now
+                self.markers.append(marker)
+            else:
+                self._record_dropped(marker)
 
     def _pump_tail(self) -> None:
         """Run the tail graph to quiescence, single-threaded (serial order)."""
@@ -617,17 +1042,23 @@ class ProcessRuntime:
         lats = sorted(self.processing_latencies())
         mean_lat = sum(lats) / len(lats) if lats else 0.0
         p99 = lats[int(0.99 * (len(lats) - 1))] if lats else 0.0
-        busy = self._worker_busy / (self.num_workers * wall) if wall > 0 else 0.0
+        n_procs = sum(p.workers for p in self.stage_plans) + max(
+            len(self.stage_plans) - 1, 0
+        )
+        busy = self._worker_busy / (n_procs * wall) if wall > 0 else 0.0
         window = wall
         if self._first_push_ts is not None and last_out is not None:
             window = max(last_out - self._first_push_ts, 1e-9)
         out_n = self.egress_count
+        # A 0/1-tuple egress has no meaningful first-push→last-egress window
+        # (it would divide by ~0 and report absurd rates): report 0.0.
+        egress_thru = out_n / window if (window > 0 and out_n > 1) else 0.0
         return RunReport(
             tuples_in=n_in,
             tuples_out=out_n,
             wall_time=wall,
             throughput=n_in / wall if wall > 0 else 0.0,
-            egress_throughput=out_n / window if window > 0 else 0.0,
+            egress_throughput=egress_thru,
             mean_latency=mean_lat,
             p99_latency=p99,
             worker_busy_frac=busy,

@@ -1,13 +1,22 @@
-"""Output-reordering schemes (paper §3).
+"""Output-reordering schemes (paper §3) — the in-thread serial-number
+protocol.
 
-Both schemes order outputs of concurrently-processed tuples by their pre-allotted
-serial number before they are sent downstream.
+Serial-number protocol: every tuple is allotted a monotone serial (starting
+at 1, :class:`~.serial.SerialAssigner`) *before* it is handed to concurrent
+workers; each serial produces exactly one output bundle (possibly empty —
+filtered tuples punch their hole in the sequence instead of stalling it).
+Both schemes below order those bundles by serial before sending them
+downstream, so concurrent execution is externally indistinguishable from the
+single-threaded reference:
 
 - :class:`LockBasedReorderBuffer` — fig. 2: a global lock protects a waiting
   buffer + ``next`` counter. Simple, but adders block while another worker drains.
 - :class:`NonBlockingReorderBuffer` — fig. 4: bounded ring buffer indexed by
   ``t mod s``, atomic ``next``, and a try-lock flag. Adders never block; exactly
-  one worker drains the contiguous ready prefix at a time.
+  one worker drains the contiguous ready prefix at a time.  Ring wire
+  format: slot ``t mod s`` holds a one-shot :class:`_Slot` box (payloads are
+  wrapped so ``None`` payloads are legal); an occupied slot *is* the
+  publish, the drain empties it and bumps ``next``.
 
 ``send(t, output)`` returns False when the bounded ring cannot yet accept serial
 ``t`` (entry condition ``next <= t < next + s``); the caller must retry later —
@@ -17,7 +26,16 @@ this is the paper's back-pressure mechanism.
 side channel for callers that must never block *or* fail: rejected serials
 park in a host-side heap and are re-sent once later traffic advances the
 window.  Needed wherever in-flight serials can outrun the ring arbitrarily
-(non-FIFO worklists, single-threaded engines, merge fan-in).
+(non-FIFO worklists, single-threaded engines, merge fan-in).  Invariant: a
+parked serial is *claimed* under the lock before the re-send, so every
+serial has exactly one sender — a duplicate send could re-populate a
+drained slot and corrupt the sequence one window later.
+
+The cross-process mirror of fig. 4 lives in :mod:`.shm`
+(``ShmReorderRing``): same entry condition and hole-punching, plus span
+slots (one publish covers a contiguous micro-batch), an in-band EOF marker,
+and the crash/replay rules the staged process backend (:mod:`.procrun`)
+builds on.  Keep the two in sync when evolving the protocol.
 """
 from __future__ import annotations
 

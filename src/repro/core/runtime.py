@@ -150,12 +150,14 @@ class StreamRuntime:
         busy = sum(self._busy) / (self.num_workers * wall) if wall > 0 else 0.0
         n_out = self.pipeline.egress_count
         window = self.pipeline.processing_window() or wall
+        # A 0/1-tuple egress has no meaningful first-push→last-egress window
+        # (it would divide by ~0 and report an absurd rate): report 0.0.
         return RunReport(
             tuples_in=n_in,
             tuples_out=n_out,
             wall_time=wall,
             throughput=n_in / wall if wall > 0 else 0.0,
-            egress_throughput=n_out / window if window > 0 else 0.0,
+            egress_throughput=n_out / window if (window > 0 and n_out > 1) else 0.0,
             mean_latency=mean_lat,
             p99_latency=p99,
             worker_busy_frac=busy,
@@ -180,10 +182,14 @@ def run_pipeline(
     """Convenience one-shot: compile, run to drain, report.
 
     ``backend="process"`` runs the chain on :class:`~.procrun.ProcessRuntime`
-    (per-worker OS processes + shared-memory rings; same ordered semantics).
-    The returned "pipeline" is then the runtime itself, which exposes the
-    same result surface (``outputs``, ``egress_count``, ``markers``).
-    ``batch_size > 1`` enables the threaded path's micro-batched tuple flow.
+    (staged OS-process worker groups + shared-memory exchange rings; same
+    ordered semantics).  The returned "pipeline" is then the runtime itself,
+    which exposes the same result surface (``outputs``, ``egress_count``,
+    ``markers``).  ``batch_size > 1`` enables the threaded path's
+    micro-batched tuple flow and doubles as the process backend's dispatch
+    unit size (``io_batch``) when the latter is not given.  Process-only
+    knobs ride ``**kw``: ``stages`` (max process stages; ``1`` = ingress-only
+    plan), ``io_batch``, ``max_inflight``, ring geometry.
     """
     if backend == "process":
         from .procrun import _chain_nodes
@@ -237,9 +243,11 @@ def run_graph(
 ) -> tuple[GraphPipeline, RunReport]:
     """Convenience one-shot for DAG pipelines: compile, run to drain, report.
 
-    ``backend="process"`` parallelizes the graph's stateless ingress prefix
-    across worker processes and executes the remaining graph in the parent in
-    serial order (see :mod:`.procrun`); semantics are unchanged.
+    ``backend="process"`` cuts the graph's linear prefix into process stages
+    at partitioned/stateful boundaries (shared-memory exchange edges between
+    worker groups) and executes any uncuttable remainder in the parent in
+    serial order (see :mod:`.procrun`); semantics are unchanged.  ``stages=1``
+    (via ``**kw``) restores the ingress-only plan.
     """
     if backend == "process":
         from .procrun import ProcessRuntime
@@ -250,6 +258,7 @@ def run_graph(
             num_workers=num_workers,
             collect_outputs=collect_outputs,
             marker_interval=marker_interval,
+            batch_size=batch_size,
             reorder_scheme=reorder_scheme,
             worklist_scheme=worklist_scheme,
             reorder_size=reorder_size,

@@ -1,67 +1,97 @@
 """Shared-memory transport for the process-parallel backend (paper §3, across
 address spaces).
 
-Two lock-free structures layered on ``multiprocessing.shared_memory``:
+Three lock-free structures layered on ``multiprocessing.shared_memory``, plus
+the value codec they share.  Together they carry the staged process pipeline
+(:mod:`.procrun`): every stage owns one :class:`ExchangeRing` — N per-worker
+ingress rings in, one serial-number reorder ring out.
+
+Ring wire format
+----------------
 
 - :class:`ShmSpscRing` — bounded single-producer/single-consumer ring of
-  fixed-width slots carrying ``(serial, tag, payload)`` records.  Large
-  payloads span consecutive slots (the producer publishes the whole span with
-  one tail advance, so the consumer never observes a partial record).  The
-  head (consumer cursor) and tail (producer cursor) are each written by
-  exactly one process, so no cross-process atomic RMW is needed — the only
-  primitive required is an aligned 8-byte store, which a single ``memcpy``
-  into the mapping provides.
+  fixed-width slots.  A record's first slot is ``[total_len:4][tag:1]
+  [serial:8][payload...]``; large payloads span consecutive slots
+  (continuation slots are raw payload bytes) and the producer publishes the
+  whole span with one tail store, so the consumer never observes a partial
+  record.  The head (consumer cursor, offset 8) and tail (producer cursor,
+  offset 0) are each written by exactly one process, so no cross-process
+  atomic RMW is needed — the only primitive required is an aligned 8-byte
+  store.  Offset 16 is the producer-owned ``closed`` flag (EOF: drain what is
+  left, then stop).  Consumption is split into :meth:`ShmSpscRing.peek` /
+  :meth:`ShmSpscRing.advance` so a consumer can *read* a record, act on it,
+  and only then commit the head — the basis of crash replay (below).
 
 - :class:`ShmReorderRing` — the cross-process mirror of
   :class:`~.reorder.NonBlockingReorderBuffer` (paper fig. 4): a bounded ring
-  indexed by ``serial mod size`` with a shared ``next`` counter.  Any worker
+  indexed by ``serial mod size`` with a shared ``next`` counter (header
+  offset 0, drainer-owned; offset 8 is a supervisor-owned ``stop`` flag that
+  tells publishers/drainers to abandon ship at teardown).  Slot layout is
+  ``[seq:8][len:4][span:4][tag:1][payload...]``.  Any worker
   process may publish a slot (each serial is owned by exactly one worker);
-  the single drainer (the parent) consumes the contiguous ready prefix and
-  is the only writer of ``next``.  A slot is published by storing its
-  sequence number *last*, so a crashed worker can never expose a torn
-  payload — the slot simply stays unpublished and the serial is replayed.
+  the single drainer consumes the contiguous ready prefix and is the only
+  writer of ``next``.
 
-Payload codec: fixed-width slots want fixed-width encodings, so ints and
-floats travel as raw 8-byte values; everything else falls back to pickle
-(the slow path).  Reorder-ring bundles whose pickle exceeds the slot payload
-are diverted to a per-worker pipe and the slot carries only a spill tag,
-keeping the ring itself fixed-width.
+Serial-number protocol
+----------------------
+
+Serials are assigned by the stage's *feeder* (the parent for stage 0, an
+exchange router for interior stages) in stream order, one per tuple, starting
+at 1.  A micro-batch dispatched as one unit covers either a *contiguous* run
+of serials (round-robin routing: the SPSC record's serial field is the span
+head) or an *explicit* serial list (keyed routing interleaves serials across
+workers — the per-tuple serials ride inside the payload, which is what lets
+``batch_size`` and keyed stages compose).  Workers publish results back under
+those same serials: one ``span``-sized slot for a contiguous unit, one
+single-serial slot per tuple for a keyed unit, so the drainer's contiguous
+sweep restores the exact cross-worker interleave order.  A slot is published
+by storing its sequence number *last*; the publish entry condition is
+``next <= t < next + size`` (``t < next`` reports ``STALE``, beyond the
+window reports ``FULL`` and the worker retries).  ``TAG_EOF`` is published by
+the feeder itself at ``last_serial + 1`` once every unit is dispatched — the
+ring's contiguity guarantee means the drainer sees it only after every real
+result, which is the staged pipeline's end-of-stream marker.
+
+Crash / replay invariants
+-------------------------
+
+A worker *peeks* its next unit, processes it, publishes the result, and only
+then advances the ring head.  Both cursor stores are single aligned 8-byte
+writes and the sequence field is stored last, so a worker killed at any point
+leaves every shared structure consistent: a replacement process forked onto
+the same rings (after :meth:`ShmSpscRing.sync_consumer`) re-reads at most one
+uncommitted unit and re-publishes it.  Duplicate publishes are safe because
+segment functions are required to be deterministic — a republish either
+overwrites the identical payload (serial still in window) or fails the entry
+condition with ``STALE`` (already drained) and is dropped.
+
+Payload codec: dispatch units and multi-tuple result bundles travel as
+pickle; single-int/float result bundles take a raw 8-byte fast path
+(``TAG_ONE_INT``/``TAG_ONE_FLOAT``).  Reorder-ring bundles whose pickle
+exceeds the slot payload are diverted to a pipe side channel and the slot
+carries only a spill tag, keeping the ring itself fixed-width.
 """
 from __future__ import annotations
 
 import pickle
 import struct
 from multiprocessing import shared_memory
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 # ---------------------------------------------------------------- value codec
-TAG_INT = 0  # 8-byte signed little-endian
-TAG_FLOAT = 1  # 8-byte IEEE double
 TAG_PICKLE = 2  # pickle bytes (slow path)
 TAG_EMPTY = 3  # empty output bundle (hole-punch: serial completed, 0 tuples)
 TAG_ONE_INT = 4  # bundle of exactly one int
 TAG_ONE_FLOAT = 5  # bundle of exactly one float
 TAG_SPILL = 6  # bundle too large for the slot; body travels via pipe
+TAG_MBUNDLE = 7  # single-serial bundle + latency marker: pickle((outs, marker))
+TAG_BUNDLES = 8  # span result: pickle((bundles, out_marks, dropped_marks))
+TAG_EOF = 9  # end-of-stream marker published by the feeder at last_serial+1
+TAG_UNIT = 10  # contiguous dispatch unit: pickle((values, marks)); serial=head
+TAG_KUNIT = 11  # keyed dispatch unit: pickle((serials, values, marks))
 
 _I8 = struct.Struct("<q")
 _F8 = struct.Struct("<d")
-
-
-def encode_value(obj: Any) -> Tuple[int, bytes]:
-    """Encode one tuple value for an ingress ring slot."""
-    if type(obj) is int and -(1 << 63) <= obj < (1 << 63):
-        return TAG_INT, _I8.pack(obj)
-    if type(obj) is float:
-        return TAG_FLOAT, _F8.pack(obj)
-    return TAG_PICKLE, pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
-
-
-def decode_value(tag: int, data: bytes) -> Any:
-    if tag == TAG_INT:
-        return _I8.unpack(data)[0]
-    if tag == TAG_FLOAT:
-        return _F8.unpack(data)[0]
-    return pickle.loads(data)
 
 
 def encode_bundle(outs: list) -> Tuple[int, bytes]:
@@ -100,6 +130,12 @@ class ShmSpscRing:
     continuation slots carry raw payload bytes.  ``tail``/``head`` count
     *slots*; a record occupies ``ceil((13+len)/slot_bytes)`` slots and is
     published by a single tail store after every byte is written.
+
+    Consumption is two-phase: :meth:`peek` reads the record at the head
+    without committing, :meth:`advance` commits it.  A consumer that dies
+    between the two leaves the record in place for its replacement (see the
+    module docstring's crash/replay invariants); :meth:`get` is the
+    peek+advance convenience for consumers that do not need replay.
     """
 
     _HDR = 64  # tail:8 @0 (producer-owned), head:8 @8 (consumer-owned),
@@ -167,8 +203,20 @@ class ShmSpscRing:
         self._store(16, 1)
 
     # -- consumer -----------------------------------------------------------
-    def get(self) -> Optional[Tuple[int, int, bytes]]:
-        """Pop one record -> (serial, tag, payload), or None when empty."""
+    def sync_consumer(self) -> None:
+        """Reload the consumer cursor from shared memory.
+
+        A replacement consumer process (crash re-fork) inherits the parent's
+        stale head mirror; this re-reads the authoritative shared value so it
+        resumes exactly at the first uncommitted record."""
+        self._head = self._load(8)
+
+    def peek(self) -> Optional[Tuple[int, int, bytes, int]]:
+        """Read the head record WITHOUT committing it.
+
+        Returns ``(serial, tag, payload, nslots)`` or None when empty; pass
+        ``nslots`` to :meth:`advance` to commit after acting on the record.
+        """
         tail = self._load(0)
         if self._head >= tail:
             return None
@@ -186,8 +234,20 @@ class ShmSpscRing:
                 parts.append(bytes(self._buf[off : off + chunk_len]))
                 pos += chunk_len
             data = b"".join(parts)
+        return serial, tag, data, nslots
+
+    def advance(self, nslots: int) -> None:
+        """Commit the record last returned by :meth:`peek`."""
         self._head += nslots
         self._store(8, self._head)
+
+    def get(self) -> Optional[Tuple[int, int, bytes]]:
+        """Pop one record -> (serial, tag, payload), or None when empty."""
+        rec = self.peek()
+        if rec is None:
+            return None
+        serial, tag, data, nslots = rec
+        self.advance(nslots)
         return serial, tag, data
 
     def closed(self) -> bool:
@@ -212,15 +272,20 @@ class ShmSpscRing:
 class ShmReorderRing:
     """Cross-process serial-number reorder ring (fig. 4 semantics, MPSC).
 
-    Slot layout: [seq:8][begin:8 double][len:4][tag:1][payload...].  Workers
-    publish serial ``t`` into slot ``t % size`` under the entry condition
-    ``next <= t < next + size`` (``next`` read from the shared header); the
-    sequence field is stored last, which is the publish.  The parent drains
-    the contiguous prefix and is the sole writer of ``next``.
+    Slot layout: [seq:8][len:4][span:4][tag:1][payload...].  Workers publish
+    serial ``t`` into slot ``t % size`` under the entry condition
+    ``next <= t < next + size`` (``next`` read from the shared
+    header); the sequence field is stored last, which is the publish.  A
+    ``span > 1`` slot carries the results of the contiguous serial run
+    ``[t, t + span)`` in one publish (round-robin micro-batches); the drainer
+    advances ``next`` past the whole run.  The drainer consumes the
+    contiguous prefix and is the sole writer of ``next``.  Header offset 8 is
+    a supervisor-owned ``stop`` flag: publishers spinning on a FULL window
+    and idle drainers check it so teardown never strands a process.
     """
 
-    _HDR = 64  # next:8 @0 (drainer-owned)
-    _SLOT_HDR = struct.Struct("<qdIB")  # seq, begin, len, tag
+    _HDR = 64  # next:8 @0 (drainer-owned), stop:8 @8 (supervisor-owned)
+    _SLOT_HDR = struct.Struct("<qIIB")  # seq, len, span, tag
 
     PUBLISHED = 0
     FULL = 1
@@ -246,9 +311,13 @@ class ShmReorderRing:
 
     # -- worker side --------------------------------------------------------
     def shared_next(self) -> int:
+        """The drainer's published ``next`` — readable from any process.
+
+        Feeders use it to bound in-flight serials (dispatched − drained), the
+        staged backend's per-stage backpressure."""
         return _I8.unpack_from(self._buf, 0)[0]
 
-    def try_publish(self, t: int, tag: int, data: bytes, begin: float) -> int:
+    def try_publish(self, t: int, tag: int, data: bytes, span: int = 1) -> int:
         n = self.shared_next()
         if t < n:
             return self.STALE
@@ -260,38 +329,50 @@ class ShmReorderRing:
         body = off + self._SLOT_HDR.size
         self._buf[body : body + len(data)] = data
         # header written in two steps so seq (the publish) is stored last
-        struct.pack_into("<dIB", self._buf, off + 8, begin, len(data), tag)
+        struct.pack_into("<IIB", self._buf, off + 8, len(data), span, tag)
         _I8.pack_into(self._buf, off, t)
         return self.PUBLISHED
 
     # -- drainer side -------------------------------------------------------
-    def poll(self) -> Optional[Tuple[int, int, float, bytes]]:
-        """Consume the next in-order slot -> (serial, tag, begin, payload)."""
+    def poll(self) -> Optional[Tuple[int, int, bytes, int]]:
+        """Consume the next in-order slot -> (serial, tag, payload, span);
+        ``next`` advances past the slot's whole serial span."""
         off = self._HDR + (self._next % self.size) * self.slot_bytes
-        seq, begin, length, tag = self._SLOT_HDR.unpack_from(self._buf, off)
+        seq, length, span, tag = self._SLOT_HDR.unpack_from(self._buf, off)
         if seq != self._next:
             return None
         body = off + self._SLOT_HDR.size
         data = bytes(self._buf[body : body + length])
         t = self._next
-        self._next += 1
+        self._next += max(span, 1)
         _I8.pack_into(self._buf, 0, self._next)  # widen the window
-        return t, tag, begin, data
+        return t, tag, data, span
 
     @property
     def next_serial(self) -> int:
         return self._next
 
     def published(self, t: int) -> bool:
-        """Drainer-side: is serial ``t`` already drained or sitting published
-        in its slot?  Used by crash recovery to avoid replaying serials whose
-        result survived the worker — replays must have exactly one publisher,
-        or a slow duplicate could clobber the slot after it is reused by
-        serial ``t + size``."""
-        if t < self._next:
+        """Any-process-side: is serial ``t`` already drained or sitting
+        published in its slot?  A crash-replacement worker checks this before
+        re-publishing its replayed unit — a serial whose result survived the
+        dead worker must have exactly one publisher, or the duplicate could
+        clobber the slot concurrently with its reuse by ``t + size`` once the
+        drain sweeps past ``t``.  (If the slot is *unpublished*, republish is
+        race-free: the drain cannot pass ``t``, so ``t + size`` fails the
+        entry condition until the republish lands.)"""
+        if t < self.shared_next():
             return True
         off = self._HDR + (t % self.size) * self.slot_bytes
         return _I8.unpack_from(self._buf, off)[0] == t
+
+    # -- teardown flag ------------------------------------------------------
+    def request_stop(self) -> None:
+        """Supervisor-side: tell publishers/drainers to abandon the stream."""
+        _I8.pack_into(self._buf, 8, 1)
+
+    def stopped(self) -> bool:
+        return _I8.unpack_from(self._buf, 8)[0] != 0
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
@@ -303,3 +384,57 @@ class ShmReorderRing:
             self._shm.unlink()
         except FileNotFoundError:
             pass
+
+
+# -------------------------------------------------------------- exchange edge
+class ExchangeRing:
+    """M-producer → N-consumer hand-off backing one process stage.
+
+    The stage's *feeder* (parent or exchange router — the single upstream
+    drainer, so M producers are already serialized by the upstream reorder
+    ring) seals stream-ordered tuples into dispatch units and puts them into
+    the N per-worker ingress SPSC rings (keyed routing for partitioned
+    stages; round-robin otherwise).  The stage's N workers publish per-serial
+    results into the single ``reorder`` ring, whose contiguous drain restores
+    stream order for the next hop.  Pure structure: routing/sealing policy
+    lives in :mod:`.procrun`.
+    """
+
+    def __init__(
+        self,
+        name_prefix: str,
+        consumers: int,
+        *,
+        ring_slots: int = 2048,
+        slot_bytes: int = 1024,
+        reorder_size: int = 1024,
+        reorder_payload: int = 4096,
+    ):
+        if consumers < 1:
+            raise ValueError("exchange needs at least one consumer")
+        self.consumers = consumers
+        self.rings = [
+            ShmSpscRing(f"{name_prefix}_c{j}", slots=ring_slots, slot_bytes=slot_bytes)
+            for j in range(consumers)
+        ]
+        self.reorder = ShmReorderRing(
+            name_prefix, size=reorder_size, payload_bytes=reorder_payload
+        )
+
+    def close_ingress(self) -> None:
+        """Producer-side EOF on every ingress ring (workers drain, then exit)."""
+        for r in self.rings:
+            r.close_ring()
+
+    def request_stop(self) -> None:
+        self.reorder.request_stop()
+
+    def close(self) -> None:
+        for r in self.rings:
+            r.close()
+        self.reorder.close()
+
+    def unlink(self) -> None:
+        for r in self.rings:
+            r.unlink()
+        self.reorder.unlink()

@@ -80,6 +80,48 @@ def cpu_bound_chain(
     ]
 
 
+def cpu_bound_partitioned(
+    name: str = "cpu_ps",
+    spin: int = 100,
+    num_partitions: int = 64,
+    key_mod: int = 64,
+) -> OpSpec:
+    """Pure-Python (GIL-bound) partitioned-stateful compute operator: per-key
+    counter state plus ``spin`` iterations of interpreter work per tuple.
+    Deterministic, so it is legal on every backend (incl. crash replay)."""
+
+    def fn(state, key, v):
+        x = float(v)
+        for _ in range(spin):
+            x = (x * 1.0000001 + 1.31) % 97.0
+        return (state or 0) + 1, [x]
+
+    return OpSpec(
+        name, "partitioned", fn,
+        key_fn=lambda v: int(v) % key_mod,
+        num_partitions=num_partitions,
+        init_state=lambda: 0,
+        cost_us=spin * 0.08,
+        selectivity=1.0,
+    )
+
+
+def keyed_hotspot_chain(
+    spin_edge: int = 30, spin_hot: int = 400, num_partitions: int = 64
+) -> list[OpSpec]:
+    """SL → PS(hot) → SL: a cheap stateless rim around an interior keyed
+    compute hot spot.  The configuration the ingress-only process plan cannot
+    parallelize (the hot operator lands in the serial parent tail) but the
+    staged plan can (the keyed stage gets its own worker group) — the
+    tentpole benchmark workload of ``benchmarks/bench_core.py``."""
+    return [
+        cpu_bound_stateless("pre", spin=spin_edge),
+        cpu_bound_partitioned("hot", spin=spin_hot,
+                              num_partitions=num_partitions),
+        cpu_bound_stateless("post", spin=spin_edge),
+    ]
+
+
 def partitioned_parametric(
     name: str = "param_ps",
     matrix_n: int = 8,

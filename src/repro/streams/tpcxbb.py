@@ -262,9 +262,12 @@ def run_query(
     **kw,
 ):
     """One-shot runner with backend plumb-through: compile query ``name`` and
-    run it on the chosen execution backend (``thread`` honors ``heuristic``
-    and ``batch_size``; ``process`` parallelizes the stateless prefix across
-    worker processes).  Returns ``(pipeline_or_runtime, RunReport)``."""
+    run it on the chosen execution backend.  ``thread`` honors ``heuristic``
+    and ``batch_size``; ``process`` cuts the query into staged process worker
+    groups at its partitioned/stateful boundaries (e.g. Q1's SL|PS|PS|SF
+    becomes four stages) — pass ``stages=1`` via ``**kw`` for the ingress-only
+    plan, ``io_batch``/``max_inflight`` for exchange tuning.  Returns
+    ``(pipeline_or_runtime, RunReport)``."""
     from repro.core import run_pipeline
 
     specs, src = QUERIES[name](n=n, seed=seed)

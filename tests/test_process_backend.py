@@ -288,16 +288,157 @@ def test_reorder_ring_orders_and_rejects():
         OK, FULL, STALE = (
             ShmReorderRing.PUBLISHED, ShmReorderRing.FULL, ShmReorderRing.STALE
         )
-        assert ring.try_publish(2, 0, b"b", 0.0) == OK
+        assert ring.try_publish(2, 0, b"b") == OK
         assert ring.poll() is None  # serial 1 missing: window blocked
-        assert ring.try_publish(5, 0, b"x", 0.0) == FULL  # beyond next+size
-        assert ring.try_publish(1, 0, b"a", 0.0) == OK
+        assert ring.try_publish(5, 0, b"x") == FULL  # beyond next+size
+        assert ring.try_publish(1, 0, b"a") == OK
         for expect in (1, 2):
-            t, tag, begin, data = ring.poll()
+            t, tag, data, span = ring.poll()
             got.append(t)
+            assert span == 1
         assert got == [1, 2]
-        assert ring.try_publish(1, 0, b"dup", 0.0) == STALE  # replay of drained
-        assert ring.try_publish(5, 0, b"x", 0.0) == OK  # window advanced
+        assert ring.try_publish(1, 0, b"dup") == STALE  # replay of drained
+        assert ring.try_publish(5, 0, b"x") == OK  # window advanced
     finally:
         ring.close()
         ring.unlink()
+
+
+def test_reorder_ring_span_publish_covers_contiguous_run():
+    """A span slot carries a whole contiguous micro-batch: the drain jumps
+    ``next`` past the covered serials and the next span lines up."""
+    ring = ShmReorderRing(f"repro_test_{os.getpid()}_c", size=8, payload_bytes=32)
+    try:
+        assert ring.try_publish(1, 0, b"abc", span=3) == ShmReorderRing.PUBLISHED
+        assert ring.try_publish(4, 0, b"de", span=2) == ShmReorderRing.PUBLISHED
+        t, tag, data, span = ring.poll()
+        assert (t, data, span) == (1, b"abc", 3)
+        t, tag, data, span = ring.poll()
+        assert (t, data, span) == (4, b"de", 2)
+        assert ring.poll() is None
+        assert ring.next_serial == 6
+        # serials inside a drained span are stale for any late replay
+        assert ring.try_publish(2, 0, b"x") == ShmReorderRing.STALE
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_spsc_peek_advance_and_consumer_resync():
+    """peek leaves the record uncommitted (crash-replay basis); sync_consumer
+    realigns a fresh consumer mirror with the shared head cursor."""
+    ring = ShmSpscRing(f"repro_test_{os.getpid()}_d", slots=8, slot_bytes=64)
+    try:
+        assert ring.put(7, 1, b"abc")
+        serial, tag, data, nslots = ring.peek()
+        assert (serial, tag, data) == (7, 1, b"abc")
+        # not committed: a re-peek (crash replacement) sees the same record
+        assert ring.peek()[:3] == (7, 1, b"abc")
+        ring.advance(nslots)
+        assert ring.peek() is None
+        # a stale mirror (fresh fork) resyncs to the committed shared head
+        ring._head = 0
+        ring.sync_consumer()
+        assert ring.peek() is None
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+# ------------------------------------------------------------- staged stages
+@pytest.mark.timeout(60)
+def test_interior_stateful_op_runs_as_own_process_stage():
+    """A chain with an interior stateful operator must cut into >= 2 process
+    stages, each with its own live worker group (the tentpole claim: interior
+    operators leave the parent)."""
+    specs = _mk_specs()  # SL -> SL -> SF
+    rt = ProcessRuntime.from_chain(specs, num_workers=2, collect_outputs=True)
+    assert rt.num_stages == 2
+    assert [p.kind for p in rt.stage_plans] == ["stateless", "stateful"]
+
+    groups = {}
+    orig_setup = rt._setup
+
+    def spy_setup():
+        orig_setup()
+        groups["pids"] = [
+            sorted(p.pid for p in g) for g in rt.worker_groups()
+        ]
+
+    rt._setup = spy_setup
+    src = list(range(1, 500))
+    rt.run(src)
+    assert len(groups["pids"]) == 2  # two distinct worker groups ran
+    assert all(groups["pids"]), "every stage must own live worker processes"
+    assert set(groups["pids"][0]).isdisjoint(groups["pids"][1])
+    assert rt.outputs == _oracle(src)
+
+
+@pytest.mark.timeout(60)
+def test_interior_keyed_stage_parallel_workers_exact_state():
+    """SL -> PS -> SL: the partitioned op runs as its own keyed stage across
+    several workers; per-key state and global order must both survive."""
+    specs = [
+        OpSpec("inc", "stateless", lambda v: [v + 1]),
+        OpSpec(
+            "ksum", "partitioned",
+            lambda s, k, v: (s + v, [(k, s + v)]),
+            key_fn=lambda v: v % 5, num_partitions=10, init_state=lambda: 0,
+        ),
+        OpSpec("fmt", "stateless", lambda t: [t]),
+    ]
+    src = list(range(1, 700))
+    states, expected = {}, []
+    for v in src:
+        v1 = v + 1
+        k = v1 % 5
+        states[k] = states.get(k, 0) + v1
+        expected.append((k, states[k]))
+    rt = ProcessRuntime.from_chain(
+        specs, num_workers=3, collect_outputs=True, io_batch=8
+    )
+    assert rt.num_stages == 2
+    assert rt.stage_plans[1].kind == "keyed"
+    assert rt.stage_plans[1].workers == 3
+    rt.run(src)
+    assert rt.outputs == expected
+
+
+@pytest.mark.timeout(60)
+def test_keyed_stage_composes_with_io_batch():
+    """The PR-2 gap: keyed routing used to force io_batch=1.  Per-worker
+    batches now carry per-tuple serials, so any batch size must reproduce
+    the exact cross-worker interleave order."""
+    specs = [
+        OpSpec(
+            "ksum", "partitioned",
+            lambda s, k, v: (s + v, [(k, s + v)]),
+            key_fn=lambda v: v % 7, num_partitions=14, init_state=lambda: 0,
+        ),
+    ]
+    src = list(range(1, 600))
+    states, expected = {}, []
+    for v in src:
+        k = v % 7
+        states[k] = states.get(k, 0) + v
+        expected.append((k, states[k]))
+    for io_batch in (1, 7, 32):
+        pipe, _ = run_pipeline(
+            specs, src, num_workers=3, backend="process",
+            collect_outputs=True, io_batch=io_batch,
+        )
+        assert pipe.outputs == expected, f"io_batch={io_batch}"
+
+
+@pytest.mark.timeout(60)
+def test_stages_1_restores_ingress_only_plan():
+    """stages=1 is the PR-2 compatibility mode: one parallel ingress segment,
+    the rest of the graph executed in the parent tail."""
+    specs = _mk_specs()
+    rt = ProcessRuntime.from_chain(specs, num_workers=2, stages=1,
+                                   collect_outputs=True)
+    assert rt.num_stages == 1
+    assert rt._tail is not None  # the SF op stays in the parent
+    src = list(range(1, 400))
+    rt.run(src)
+    assert rt.outputs == _oracle(src)

@@ -1,0 +1,184 @@
+"""Staged-process stage-cut coverage: for random operator graphs with
+interior partitioned/stateful operators, the staged process backend's egress
+(content AND order) must equal the thread backend's, across micro-batch sizes
+and worker counts — the tentpole's correctness contract.  Plus the
+RunReport.egress_throughput degenerate-window regression tests.
+
+Watchdog rides at 60 s like the other process-backend tests.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline env: degrade to seeded randomized sampling
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import OpSpec, run_pipeline
+from repro.core.procrun import ProcessRuntime, _chain_nodes, _plan_stages
+
+
+# ------------------------------------------------------------ random chains
+def _op_from_code(code: int, i: int) -> OpSpec:
+    """Deterministic operator palette (everything picklable / fork-safe)."""
+    code = code % 5
+    if code == 0:
+        return OpSpec(f"sl_double{i}", "stateless", _double)
+    if code == 1:
+        return OpSpec(f"sl_filter{i}", "stateless", _drop_mod3)
+    if code == 2:
+        return OpSpec(f"sl_fan{i}", "stateless", _fan2)
+    if code == 3:
+        return OpSpec(
+            f"ps_sum{i}", "partitioned", _keyed_sum,
+            key_fn=_mod7, num_partitions=14, init_state=_zero,
+        )
+    return OpSpec(f"sf_count{i}", "stateful", _counting, init_state=_zero)
+
+
+def _double(v):
+    return [v * 2 + 1]
+
+
+def _drop_mod3(v):
+    return [v] if v % 3 else []
+
+
+def _fan2(v):
+    return [v, v + 1]
+
+
+def _mod7(v):
+    return v % 7
+
+
+def _zero():
+    return 0
+
+
+def _keyed_sum(s, k, v):
+    s += v
+    return s, [s % 100003]
+
+
+def _counting(s, v):
+    return s + 1, [(v + s) % 100003]
+
+
+def _build_chain(codes):
+    """Chain from drawn codes with a partitioned op forced into the interior
+    (the configuration PR 2 could not parallelize)."""
+    specs = [_op_from_code(c, i) for i, c in enumerate(codes)]
+    specs.insert(1 + len(specs) // 2, _op_from_code(3, 99))
+    return specs
+
+
+@pytest.mark.timeout(60)
+@settings(max_examples=6, deadline=None)
+@given(
+    codes=st.lists(st.integers(min_value=0, max_value=4), min_size=1, max_size=4),
+    n=st.integers(min_value=1, max_value=250),
+    workers=st.sampled_from([1, 2, 3]),
+    batch_size=st.sampled_from([1, 7, 32]),
+)
+def test_property_staged_equals_thread_backend(codes, n, workers, batch_size):
+    """Random chains with an interior partitioned op: staged process egress
+    == thread egress, for batch_size in {1, 7, 32} and several worker
+    counts."""
+    specs = _build_chain(codes)
+    src = list(range(1, n + 1))
+    thread_pipe, _ = run_pipeline(
+        specs, src, num_workers=2, collect_outputs=True, backend="thread"
+    )
+    proc_pipe, report = run_pipeline(
+        specs, src, num_workers=workers, collect_outputs=True,
+        backend="process", batch_size=batch_size,
+    )
+    assert proc_pipe.num_stages >= 2  # the interior op got its own stage
+    assert proc_pipe.outputs == thread_pipe.outputs
+    assert report.tuples_in == n
+    assert report.tuples_out == len(thread_pipe.outputs)
+
+
+@pytest.mark.timeout(60)
+@settings(max_examples=4, deadline=None)
+@given(
+    codes=st.lists(st.integers(min_value=0, max_value=4), min_size=2, max_size=5),
+    stages=st.sampled_from([1, 2, 3]),
+)
+def test_property_stage_cap_preserves_semantics(codes, stages):
+    """Any stage cap (deep cut, shallow cut, ingress-only) yields identical
+    egress — the planner only moves work between parent and stages."""
+    specs = _build_chain(codes)
+    src = list(range(1, 180))
+    ref_pipe, _ = run_pipeline(
+        specs, src, num_workers=1, collect_outputs=True, backend="thread"
+    )
+    pipe, _ = run_pipeline(
+        specs, src, num_workers=2, collect_outputs=True,
+        backend="process", stages=stages,
+    )
+    assert pipe.num_stages <= stages
+    assert pipe.outputs == ref_pipe.outputs
+
+
+def test_stage_planner_cuts_at_state_boundaries():
+    """Unit check on the planner: SL,SL | PS,SL | SF | PS -> 4 stages, each
+    headed by the state boundary, stateful stage single-worker."""
+    specs = [
+        _op_from_code(0, 0), _op_from_code(1, 1),  # stateless run
+        _op_from_code(3, 2), _op_from_code(0, 3),  # partitioned + trailing SL
+        _op_from_code(4, 4),                       # stateful
+        _op_from_code(3, 5),                       # partitioned again
+    ]
+    nodes, edges = _chain_nodes(specs)
+    plans, tail_nodes, tail_edges = _plan_stages(nodes, edges, 4, None)
+    assert [p.kind for p in plans] == ["stateless", "keyed", "stateful", "keyed"]
+    assert [len(p.ops) for p in plans] == [2, 2, 1, 1]
+    assert [p.workers for p in plans] == [4, 4, 1, 4]
+    assert not tail_nodes and not tail_edges
+    # cap at 2: the rest must fall back into the parent tail
+    plans2, tail_nodes2, _ = _plan_stages(nodes, edges, 4, 2)
+    assert [p.kind for p in plans2] == ["stateless", "keyed"]
+    assert len(tail_nodes2) == 2
+
+
+# --------------------------------------------- egress_throughput regression
+def _nullify(v):
+    return []
+
+
+def _ident(v):
+    return [v]
+
+
+@pytest.mark.parametrize("backend", ["thread", "process"])
+def test_egress_throughput_zero_output_run_reports_zero(backend):
+    """Regression: a run egressing 0 tuples used to risk dividing by a ~0
+    first-push==last-egress window; it must report 0.0, not raise."""
+    _, report = run_pipeline(
+        [OpSpec("null", "stateless", _nullify)], [1, 2, 3],
+        num_workers=1, backend=backend,
+    )
+    assert report.tuples_out == 0
+    assert report.egress_throughput == 0.0
+
+
+@pytest.mark.parametrize("backend", ["thread", "process"])
+def test_egress_throughput_single_output_run_reports_zero(backend):
+    """A single egressed tuple's window is degenerate (first push == last
+    egress): the rate is meaningless and must be reported as 0.0."""
+    pipe, report = run_pipeline(
+        [OpSpec("id", "stateless", _ident)], [42],
+        num_workers=1, backend=backend, collect_outputs=True,
+    )
+    assert pipe.outputs == [42]
+    assert report.tuples_out == 1
+    assert report.egress_throughput == 0.0
+
+
+def test_egress_throughput_normal_run_still_positive():
+    _, report = run_pipeline(
+        [OpSpec("id", "stateless", _ident)], list(range(500)),
+        num_workers=2, backend="thread",
+    )
+    assert report.egress_throughput > 0.0
