@@ -1,4 +1,5 @@
-"""Core-runtime perf tracker: thread vs process backends, batching, staging.
+"""Core-runtime perf tracker: thread vs process backends, batching, staging,
+cost-model worker allocation.
 
 Runs fixed wall-clock-sized (default ~10 s per config) fig. 8-style
 CPU-bound synthetic queries (pure-Python compute stages, GIL-bound) through:
@@ -13,6 +14,17 @@ CPU-bound synthetic queries (pure-Python compute stages, GIL-bound) through:
                                       serial parent tail)
       backend=process, stages=auto   (staged plan: the keyed stage gets its
                                       own process worker group)
+  - skewed_stages (SL(hot) → PS(cold) — a pipeline whose load is
+    concentrated in one stage):
+      workers=1        (flat: the even split of the default worker budget
+                        across the two data-parallel stages — the hot stage
+                        is starved exactly as a flat ``num_workers`` starves
+                        any skewed pipeline)
+      workers="auto"   (cost-model allocation: the calibrated budget
+                        division gives the hot stage the spare workers)
+    The pair is measured INTERLEAVED (flat/auto alternating over several
+    rounds, throughput aggregated per config) so the ``auto_vs_flat_process``
+    ratio cancels host-speed drift on small/noisy boxes.
 
 and writes ``BENCH_core.json`` (throughput, egress throughput, p99 latency,
 busy fraction, a ``stages`` column, plus the headline ratios) so the perf
@@ -37,15 +49,24 @@ import sys
 import time
 
 from repro.core import run_pipeline
-from repro.streams.parametric import cpu_bound_chain, keyed_hotspot_chain
+from repro.streams.parametric import (
+    cpu_bound_chain,
+    keyed_hotspot_chain,
+    skewed_stage_chain,
+)
 
 SPIN = 100  # ~24 µs of GIL-bound work per tuple across the 3-stage chain
 STAGES = 3
 HOT_SPIN = 1200  # keyed hot spot: ~96 µs/tuple in the partitioned op alone
+SKEW_HOT = 10000  # skewed_stages hot stage: heavy per-tuple compute so the
+SKEW_COLD = 30  # allocation effect dominates exchange/plumbing overhead
 
 WORKLOADS = {
     "cpu_chain": lambda: cpu_bound_chain(stages=STAGES, spin=SPIN),
     "keyed_hotspot": lambda: keyed_hotspot_chain(spin_edge=30, spin_hot=HOT_SPIN),
+    "skewed_stages": lambda: skewed_stage_chain(
+        spin_hot=SKEW_HOT, spin_cold=SKEW_COLD
+    ),
 }
 
 CONFIGS = (
@@ -61,6 +82,29 @@ CONFIGS = (
      "stages": None, "workers": 2},  # None = auto: cut as deep as possible
 )
 
+# The allocation A/B: both sides get the SAME worker budget (the auto
+# default, cores+1).  Flat spends it as an even per-stage split over the
+# chain's two data-parallel stages (budget // 2 each — the remainder is
+# unusable, which IS flat's deficiency on an odd budget); auto divides it by
+# predicted load, concentrating the spare on the hot stage.  parent_idle_cap
+# trades ~ms of drain latency for supervisor CPU the hot worker group needs
+# on a 2-core box — applied to BOTH sides.
+AB_ROUNDS = 4
+
+
+def _ab_configs():
+    from repro.core import costmodel
+
+    budget = costmodel.default_budget()
+    return (
+        {"workload": "skewed_stages", "backend": "process", "batch_size": 32,
+         "workers": max(1, budget // 2), "parent_idle_cap": 2e-3,
+         "worker_budget": budget},
+        {"workload": "skewed_stages", "backend": "process", "batch_size": 32,
+         "workers": "auto", "parent_idle_cap": 2e-3,
+         "worker_budget": budget},
+    )
+
 
 def _run_once(cfg: dict, n: int, workers: int):
     kw = dict(
@@ -70,6 +114,10 @@ def _run_once(cfg: dict, n: int, workers: int):
     )
     if "stages" in cfg:
         kw["stages"] = cfg["stages"]
+    if "parent_idle_cap" in cfg:
+        kw["parent_idle_cap"] = cfg["parent_idle_cap"]
+    if cfg.get("workers") == "auto" and "worker_budget" in cfg:
+        kw["worker_budget"] = cfg["worker_budget"]
     return run_pipeline(WORKLOADS[cfg["workload"]](), range(n), **kw)
 
 
@@ -104,6 +152,48 @@ def _run_config(cfg: dict, seconds: float, workers: int):
     }
 
 
+def _run_ab_configs(seconds: float, workers: int):
+    """Measure the skewed-stages pair interleaved: flat/auto alternate over
+    ``AB_ROUNDS`` rounds and each config's throughput is aggregated across
+    its rounds.  Back-to-back alternation means both sides sample the same
+    host-speed regime, so the ratio is robust to machine drift that dwarfs
+    the effect on shared/bursted vCPUs."""
+    flat_cfg, auto_cfg = _ab_configs()
+    probe_n = 1500
+    _, probe = _run_once(flat_cfg, probe_n, workers)
+    per_round = max(
+        int(probe.throughput * seconds / AB_ROUNDS), probe_n
+    )
+    agg = {id(flat_cfg): [0, 0.0, None], id(auto_cfg): [0, 0.0, None]}
+    for _ in range(AB_ROUNDS):
+        for cfg in (flat_cfg, auto_cfg):
+            pipe, report = _run_once(cfg, per_round, workers)
+            slot = agg[id(cfg)]
+            slot[0] += report.tuples_in
+            slot[1] += report.wall_time
+            slot[2] = (pipe, report)
+    rows = []
+    for cfg in (flat_cfg, auto_cfg):
+        tuples, wall, (pipe, report) = agg[id(cfg)]
+        rows.append({
+            "workload": cfg["workload"],
+            "backend": cfg["backend"],
+            "batch_size": cfg["batch_size"],
+            "stages": getattr(pipe, "num_stages", None),
+            "workers": cfg["workers"],
+            "stage_widths": getattr(pipe, "stage_widths", lambda: None)(),
+            "interleaved_rounds": AB_ROUNDS,
+            "tuples": tuples,
+            "wall_s": round(wall, 3),
+            "throughput_per_s": round(tuples / wall, 1),
+            "egress_throughput_per_s": round(report.egress_throughput, 1),
+            "p99_latency_ms": round(report.p99_latency * 1e3, 3),
+            "mean_latency_ms": round(report.mean_latency * 1e3, 3),
+            "busy_frac": round(report.worker_busy_frac, 3),
+        })
+    return rows
+
+
 def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
         print_fn=print):
     rows = []
@@ -117,6 +207,15 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
             f"thru={row['throughput_per_s']:>10,.0f}/s "
             f"p99={row['p99_latency_ms']:.3f}ms busy={row['busy_frac']:.2f} "
             f"({row['tuples']} tuples / {row['wall_s']}s)"
+        )
+    for row in _run_ab_configs(seconds, workers):
+        rows.append(row)
+        print_fn(
+            f"{row['workload']:>14} {row['backend']:>7} "
+            f"batch={row['batch_size']:<3} workers={row['workers']} "
+            f"widths={row['stage_widths']} "
+            f"thru={row['throughput_per_s']:>10,.0f}/s "
+            f"({row['tuples']} tuples / {row['wall_s']}s interleaved)"
         )
 
     def thru(workload, backend, batch, staged=None):
@@ -133,6 +232,14 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
                 return r["throughput_per_s"]
         return 0.0
 
+    def thru_workers(workload, auto):
+        for r in rows:
+            if r["workload"] == workload and (
+                (r.get("workers") == "auto") == auto
+            ):
+                return r["throughput_per_s"]
+        return 0.0
+
     ratios = {
         "process_vs_thread": round(
             thru("cpu_chain", "process", 1) /
@@ -142,12 +249,18 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
             thru("cpu_chain", "thread", 32) /
             max(thru("cpu_chain", "thread", 1), 1e-9), 3,
         ),
-        # The tentpole ratio: staged plan vs the PR-2 ingress-only plan on
-        # the same workload.  The auto plan cuts SL|PS|SL into 2 stages (the
-        # trailing stateless run folds into the keyed stage).
+        # The PR-3 tentpole ratio: staged plan vs the PR-2 ingress-only plan
+        # on the same workload.  The auto plan cuts SL|PS|SL into 2 stages
+        # (the trailing stateless run folds into the keyed stage).
         "staged_vs_ingress_process": round(
             thru("keyed_hotspot", "process", 32, staged=True) /
             max(thru("keyed_hotspot", "process", 32, staged=False), 1e-9), 3,
+        ),
+        # The PR-4 tentpole ratio: cost-model worker allocation vs the flat
+        # even split of the same budget (interleaved measurement).
+        "auto_vs_flat_process": round(
+            thru_workers("skewed_stages", auto=True) /
+            max(thru_workers("skewed_stages", auto=False), 1e-9), 3,
         ),
     }
     doc = {
@@ -157,6 +270,12 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
                              f"spin={SPIN})",
                 "keyed_hotspot": f"SL(spin=30) -> PS(spin={HOT_SPIN}, keyed) "
                                  f"-> SL(spin=30) interior hot spot",
+                "skewed_stages": f"SL(spin={SKEW_HOT}, hot) -> "
+                                 f"PS(spin={SKEW_COLD}, keyed cold): flat "
+                                 "width 1 = even split of the default "
+                                 "cores+1 budget over the 2 data-parallel "
+                                 "stages; auto = cost-model division "
+                                 f"(interleaved x{AB_ROUNDS})",
             },
             "seconds_per_config": seconds,
             "cpu_count": os.cpu_count(),
@@ -172,7 +291,8 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
     print_fn(
         f"ratios: process/thread={ratios['process_vs_thread']}x  "
         f"batch32/batch1={ratios['thread_batch32_vs_batch1']}x  "
-        f"staged/ingress={ratios['staged_vs_ingress_process']}x  -> {out}"
+        f"staged/ingress={ratios['staged_vs_ingress_process']}x  "
+        f"auto/flat={ratios['auto_vs_flat_process']}x  -> {out}"
     )
     return doc
 

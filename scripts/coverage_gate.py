@@ -1,0 +1,167 @@
+#!/usr/bin/env python
+"""Tier-1 test run with a line-coverage floor over ``src/repro/core/``.
+
+The container has neither ``coverage`` nor ``pytest-cov``, so this gate
+implements just enough with the stdlib: a ``sys.settrace`` line tracer
+scoped to the core package (non-core frames are rejected at call time, so
+test/benchmark code runs untraced), per-code-object early-out once every
+line of a function has been seen, and a fork-child hook
+(``repro.core.procrun._COV_HOOK``) so the process backend's workers and
+routers — which exit via ``os._exit`` — dump their hit lines to a shared
+directory before dying.  Executable lines come from walking each module's
+compiled code objects (``co_lines``, PEP 626).
+
+Runs the full tier-1 suite (``pytest -x -q --durations=10``) under the
+tracer, merges parent + child hits, prints a per-file table, and exits
+non-zero if aggregate core coverage falls below the floor.
+
+Usage:  PYTHONPATH=src python scripts/coverage_gate.py [--floor PCT] [pytest args...]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import sys
+import tempfile
+import threading
+import uuid
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CORE_DIR = os.path.join(REPO, "src", "repro", "core")
+DEFAULT_FLOOR = 80.0
+
+_hits: set = set()  # (abspath, lineno)
+_remaining: dict = {}  # code object -> set of not-yet-seen lines
+_done: set = set()  # fully covered code objects (skip tracing new calls)
+_core_files: frozenset = frozenset()
+_dump_dir = ""
+
+
+def _line_tracer(frame, event, arg):
+    if event == "line":
+        code = frame.f_code
+        rem = _remaining.get(code)
+        if rem is None:
+            rem = _remaining[code] = {
+                ln for (_s, _e, ln) in code.co_lines() if ln
+            }
+        _hits.add((code.co_filename, frame.f_lineno))
+        rem.discard(frame.f_lineno)
+        if not rem:
+            _done.add(code)
+    return _line_tracer
+
+
+def _call_tracer(frame, event, arg):
+    if event != "call":
+        return None
+    code = frame.f_code
+    if code.co_filename not in _core_files or code in _done:
+        return None
+    return _line_tracer
+
+
+def _dump_child():
+    """Installed as procrun._COV_HOOK: forked workers/routers call this just
+    before os._exit so their (inherited + own) hit lines reach the parent
+    via the dump directory."""
+    try:
+        path = os.path.join(
+            _dump_dir, f"cov-{os.getpid()}-{uuid.uuid4().hex[:8]}.txt"
+        )
+        with open(path, "w") as f:
+            for fn, ln in _hits:
+                f.write(f"{fn}\t{ln}\n")
+    except Exception:
+        pass
+
+
+def _executable_lines(path: str) -> set:
+    with open(path, "r") as f:
+        src = f.read()
+    lines: set = set()
+    stack = [compile(src, path, "exec")]
+    while stack:
+        code = stack.pop()
+        lines.update(ln for (_s, _e, ln) in code.co_lines() if ln)
+        for const in code.co_consts:
+            if hasattr(const, "co_lines"):
+                stack.append(const)
+    return lines
+
+
+class _CoveragePlugin:
+    def pytest_sessionstart(self, session):
+        # trace BEFORE the first core import so module bodies are counted
+        threading.settrace(_call_tracer)
+        sys.settrace(_call_tracer)
+        import repro.core.procrun as procrun
+
+        procrun._COV_HOOK = _dump_child
+
+    def pytest_sessionfinish(self, session, exitstatus):
+        sys.settrace(None)
+        threading.settrace(None)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--floor", type=float, default=DEFAULT_FLOOR,
+                    help=f"minimum aggregate %% (default {DEFAULT_FLOOR})")
+    ap.add_argument("pytest_args", nargs="*",
+                    help="extra pytest args (default: -x -q --durations=10)")
+    args = ap.parse_args(argv)
+
+    global _core_files, _dump_dir
+    core_paths = sorted(glob.glob(os.path.join(CORE_DIR, "*.py")))
+    _core_files = frozenset(core_paths)
+    _dump_dir = tempfile.mkdtemp(prefix="repro_cov_")
+    # Watchdog headroom: line tracing slows the hot core paths, so the
+    # conftest scales per-test limits by this factor under the gate.
+    os.environ.setdefault("REPRO_TIMEOUT_SCALE", "3")
+
+    import pytest
+
+    pytest_args = args.pytest_args or ["-x", "-q", "--durations=10"]
+    rc = pytest.main(pytest_args, plugins=[_CoveragePlugin()])
+    if rc != 0:
+        return int(rc)
+
+    # merge child dumps
+    for path in glob.glob(os.path.join(_dump_dir, "cov-*.txt")):
+        try:
+            with open(path) as f:
+                for line in f:
+                    fn, _, ln = line.rstrip("\n").partition("\t")
+                    if fn in _core_files and ln:
+                        _hits.add((fn, int(ln)))
+            os.unlink(path)
+        except (OSError, ValueError):
+            pass
+    try:
+        os.rmdir(_dump_dir)
+    except OSError:
+        pass
+
+    print(f"\ncoverage gate: src/repro/core/ (floor {args.floor:.0f}%)")
+    total_exec = total_hit = 0
+    for path in core_paths:
+        execable = _executable_lines(path)
+        hit = {ln for (fn, ln) in _hits if fn == path} & execable
+        total_exec += len(execable)
+        total_hit += len(hit)
+        pct = 100.0 * len(hit) / len(execable) if execable else 100.0
+        print(f"  {os.path.relpath(path, REPO):<38} "
+              f"{len(hit):>5}/{len(execable):<5} {pct:6.1f}%")
+    agg = 100.0 * total_hit / total_exec if total_exec else 100.0
+    print(f"  {'TOTAL':<38} {total_hit:>5}/{total_exec:<5} {agg:6.1f}%")
+    if agg < args.floor:
+        print(f"coverage gate: FAIL — {agg:.1f}% < floor {args.floor:.0f}%")
+        return 2
+    print("coverage gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,19 +1,23 @@
 #!/usr/bin/env bash
 # Tier-1 verification + perf-plumbing smoke + docs link check (see ROADMAP.md).
 #
-#   ./scripts/verify.sh          # full: tier-1 pytest + bench smoke + docs-check
-#   ./scripts/verify.sh --fast   # pytest only
+#   ./scripts/verify.sh          # full: gated tier-1 + bench smoke + docs-check
+#   ./scripts/verify.sh --fast   # gated tier-1 pytest only
 #
-# The bench smoke (~5 s) runs the thread/process/batched/staged backends end
-# to end and rewrites BENCH_core.json, so the perf plumbing cannot silently
-# rot.  The docs check (scripts/check_links.py) keeps docs/, the root
-# markdown files, and benchmarks/README.md free of broken relative links.
+# The tier-1 suite runs under scripts/coverage_gate.py: pytest -x -q with
+# --durations=10 (slow-test regressions surface in every run) plus a
+# line-coverage floor of 80% over src/repro/core/ — a drop below the floor
+# fails verification.  The bench smoke (~15 s) runs the thread/process/
+# batched/staged/auto-allocated backends end to end and rewrites
+# BENCH_core.json, so the perf plumbing cannot silently rot.  The docs check
+# (scripts/check_links.py) keeps docs/, the root markdown files, and
+# benchmarks/README.md free of broken relative links.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+python scripts/coverage_gate.py
 
 if [[ "${1:-}" != "--fast" ]]; then
     python -m benchmarks.bench_core --smoke

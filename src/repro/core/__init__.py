@@ -29,9 +29,15 @@ from .pipeline import (
     compile_graph,
     compile_pipeline,
 )
+from .costmodel import (
+    CostModel,
+    OccupancyMonitor,
+    proportional_allocation,
+    resolve_workers,
+)
 from .scheduler import HEURISTICS, Scheduler
 from .runtime import RunReport, StreamRuntime, run_graph, run_pipeline
-from .procrun import ProcessRuntime
+from .procrun import ProcessRuntime, UnstagedGraphWarning
 from .shm import ShmReorderRing, ShmSpscRing
 
 __all__ = [
@@ -59,6 +65,10 @@ __all__ = [
     "Merge",
     "compile_graph",
     "compile_pipeline",
+    "CostModel",
+    "OccupancyMonitor",
+    "proportional_allocation",
+    "resolve_workers",
     "HEURISTICS",
     "Scheduler",
     "RunReport",
@@ -66,6 +76,7 @@ __all__ = [
     "run_graph",
     "run_pipeline",
     "ProcessRuntime",
+    "UnstagedGraphWarning",
     "ShmReorderRing",
     "ShmSpscRing",
 ]

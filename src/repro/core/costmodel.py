@@ -1,0 +1,389 @@
+"""Cost-model-driven per-stage worker allocation (ROADMAP: "per-stage
+worker-count allocation from cost priors").
+
+The staged process backend (:mod:`.procrun`) cuts a pipeline into stages and
+— before this module — handed every data-parallel stage the same flat
+``num_workers``.  That starves a skewed pipeline's hot stage: the paper's
+central claim is that handling *load imbalance*, not merely exposing data
+parallelism, is what makes ordered streaming scale.  Following BriskStream's
+relative-rate cost model (arXiv 1904.03604) and TStream's punctuation-bounded
+live restructuring (arXiv 1904.03800), this module supplies:
+
+- :func:`proportional_allocation` — divide a core budget across stages in
+  proportion to their predicted load so stage throughputs equalize (the
+  classic largest-remainder method; stateful stages stay pinned at one
+  worker, keyed stages cap at their partition count).
+- :class:`CostModel` — per-stage service cost + relative flow (tuples per
+  source tuple), seeded from declared :class:`~.operators.OpSpec` priors or
+  explicit ``cost_priors``, optionally refined by :meth:`CostModel.calibrate`
+  (a short profiled dry run of the actual operator functions on buffered
+  source tuples — legal because operator fns are required to be
+  deterministic and side-effect-free) and by live observations
+  (:meth:`CostModel.observe`).
+- :class:`OccupancyMonitor` — samples the per-stage progress/backlog
+  counters already flowing through :class:`~.shm.ExchangeRing` (drained
+  serials = stage input tuples, ingress-ring queue depths = occupancy),
+  re-estimates stage costs from observed service rates, and proposes a new
+  width vector when occupancy drifts past a threshold for several
+  consecutive samples — the trigger for :class:`~.procrun.ProcessRuntime`'s
+  elastic replanning.
+
+The thread backend's adaptive controller (:meth:`.scheduler.Scheduler.adapt`)
+shares the cost surface (:func:`op_cost_us` folds ``cost_priors`` into
+declared priors on both paths) but keeps ceil-of-share caps: a thread-side
+``dop_cap`` is a cap, not a reservation, so a hot operator must stay able to
+absorb idle workers — hard-partitioning applies only where widths reserve
+forked processes.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .operators import OpSpec, STATEFUL
+
+#: default worker budget for ``workers="auto"``: one process per core plus
+#: one to hide exchange/feeder latency (stages overlap, so mild
+#: oversubscription keeps the hot stage fed while feeders run).
+def default_budget() -> int:
+    return max((os.cpu_count() or 2) + 1, 2)
+
+
+def resolve_workers(num_workers, budget: Optional[int] = None) -> int:
+    """Resolve the ``num_workers`` API value ("auto" | int) to an int.
+
+    The thread backend and :class:`~.pipeline.GraphPipeline` construction
+    need a concrete integer; ``"auto"`` means "one worker per core" there
+    (the process backend does finer per-stage division via
+    :class:`CostModel`)."""
+    if num_workers == "auto":
+        return budget if budget is not None else max(os.cpu_count() or 2, 2)
+    if not isinstance(num_workers, int):
+        raise ValueError(
+            f"num_workers must be an int or 'auto', got {num_workers!r}"
+        )
+    return num_workers
+
+
+def op_cost_us(op: OpSpec, cost_priors: Optional[Dict[str, float]]) -> float:
+    """Declared per-tuple cost of ``op`` in µs, with ``cost_priors``
+    (``{op name: cost_us}``) taking precedence over the spec's own prior."""
+    if cost_priors and op.name in cost_priors:
+        return max(float(cost_priors[op.name]), 1e-3)
+    return max(float(op.cost_us), 1e-3)
+
+
+def proportional_allocation(
+    loads: Sequence[float],
+    budget: int,
+    mins: Sequence[int],
+    caps: Sequence[int],
+) -> List[int]:
+    """Divide ``budget`` workers across stages proportionally to ``loads``.
+
+    Every stage first receives ``mins[i]`` (the allocator never zeroes a
+    stage); the remaining budget is split by the largest-remainder method of
+    each stage's load share, clipped to ``caps[i]``.  Equalizing
+    ``width_i / load_i`` equalizes predicted stage throughput — the pipeline
+    moves at the pace of its slowest stage, so the optimum gives each stage
+    width proportional to its load.  Leftover budget that no un-capped stage
+    can absorb is simply not spent.  ``sum(result) <= max(budget,
+    sum(mins))`` always holds.
+    """
+    n = len(loads)
+    if not (n == len(mins) == len(caps)):
+        raise ValueError("loads/mins/caps must have equal length")
+    widths = [max(int(m), 0) for m in mins]
+    caps = [max(int(c), w) for c, w in zip(caps, widths)]
+    spare = budget - sum(widths)
+    while spare > 0:
+        # ideal extra share for each growable stage, by load
+        grow = [i for i in range(n) if widths[i] < caps[i]]
+        if not grow:
+            break
+        total = sum(loads[i] for i in grow) or float(len(grow))
+        ideal = {
+            i: spare * ((loads[i] / total) if total else 1.0 / len(grow))
+            for i in grow
+        }
+        granted = 0
+        for i in grow:
+            take = min(int(ideal[i]), caps[i] - widths[i])
+            widths[i] += take
+            granted += take
+        if granted == 0:
+            # largest remainder: hand single workers to the biggest shares
+            order = sorted(grow, key=lambda i: ideal[i] - int(ideal[i]),
+                           reverse=True)
+            for i in order:
+                if spare - granted <= 0:
+                    break
+                if widths[i] < caps[i]:
+                    widths[i] += 1
+                    granted += 1
+            if granted == 0:
+                break
+        spare -= granted
+    return widths
+
+
+# --------------------------------------------------------------- cost model
+@dataclass
+class StageProfile:
+    """Predicted shape of one stage: per-tuple service cost and relative
+    input flow (stage input tuples per pipeline source tuple)."""
+
+    index: int
+    kind: str  # "stateless" | "keyed" | "stateful"
+    cost_us: float
+    flow: float = 1.0
+    selectivity: float = 1.0  # stage output tuples per stage input tuple
+    measured: bool = False  # True once calibration/observation replaced priors
+
+    @property
+    def load(self) -> float:
+        """Relative work rate: input flow × per-tuple cost (BriskStream's
+        relative-rate model — absolute input rates cancel out)."""
+        return self.flow * self.cost_us
+
+
+class CostModel:
+    """Per-stage cost/flow accounting + the allocation rule.
+
+    Built from the planner's :class:`~.procrun.StagePlan` list.  Stage cost
+    is the sum of each operator's per-tuple cost weighted by its within-stage
+    input flow (the running selectivity product); stage flow chains the same
+    product across stages.
+    """
+
+    def __init__(self, plans: Sequence, cost_priors: Optional[Dict[str, float]] = None):
+        self.plans = list(plans)
+        self.cost_priors = dict(cost_priors) if cost_priors else None
+        self.profiles: List[StageProfile] = []
+        flow = 1.0
+        for plan in self.plans:
+            cost = 0.0
+            sel = 1.0
+            for op in plan.ops:
+                cost += sel * op_cost_us(op, self.cost_priors)
+                sel *= max(float(op.selectivity), 0.0)
+            if not plan.ops:  # identity pass-through stage
+                cost = 1e-3
+            self.profiles.append(
+                StageProfile(plan.index, plan.kind, max(cost, 1e-3), flow, sel)
+            )
+            flow = max(flow * sel, 1e-9)
+
+    # ------------------------------------------------------------ refinement
+    def calibrate(self, sample: Sequence, min_tuples: int = 8) -> bool:
+        """Profile the real operator functions on ``sample`` source tuples.
+
+        Dry-runs each stage's operator run with throwaway state (operator fns
+        are deterministic and side-effect-free by contract, so this is
+        invisible to the later real run), measuring per-tuple stage cost and
+        selectivity.  Returns True if the sample was large enough to trust.
+        """
+        if len(sample) < min_tuples:
+            return False
+        from .procrun import _apply_segment, _init_states  # late: avoid cycle
+
+        values = list(sample)
+        for prof, plan in zip(self.profiles, self.plans):
+            if not values:
+                break
+            states = _init_states(plan.ops)
+            outs: list = []
+            t0 = time.perf_counter()
+            for v in values:
+                outs.extend(_apply_segment(plan.ops, states, v))
+            dt = time.perf_counter() - t0
+            prof.cost_us = max(dt * 1e6 / len(values), 1e-3)
+            prof.selectivity = len(outs) / len(values)
+            prof.measured = True
+            values = outs
+        self._rechain_flows()
+        return True
+
+    def observe(self, index: int, cost_us: float, alpha: float = 0.5) -> None:
+        """Fold a live per-worker service-cost observation into stage
+        ``index`` (EMA; used by :class:`OccupancyMonitor`)."""
+        prof = self.profiles[index]
+        if prof.measured:
+            prof.cost_us = (1 - alpha) * prof.cost_us + alpha * max(cost_us, 1e-3)
+        else:
+            prof.cost_us = max(cost_us, 1e-3)
+            prof.measured = True
+
+    def observe_flows(self, drained: Sequence[int]) -> None:
+        """Update relative flows from the stages' drained-serial counters
+        (stage i's serials count its *input* tuples, so the ratios are the
+        exact observed flow fractions)."""
+        if not drained or drained[0] <= 0:
+            return
+        base = float(drained[0])
+        for prof, d in zip(self.profiles, drained):
+            if d > 0:
+                prof.flow = max(d / base, 1e-9)
+
+    def _rechain_flows(self) -> None:
+        flow = 1.0
+        for prof in self.profiles:
+            prof.flow = flow
+            flow = max(flow * prof.selectivity, 1e-9)
+
+    # ------------------------------------------------------------ allocation
+    def loads(self) -> List[float]:
+        return [p.load for p in self.profiles]
+
+    def stage_caps(self) -> List[int]:
+        caps = []
+        for plan, prof in zip(self.plans, self.profiles):
+            if prof.kind == "stateful":
+                caps.append(1)  # intrinsic serial constraint
+            elif prof.kind == "keyed":
+                caps.append(max(plan.ops[0].num_partitions, 1))
+            else:
+                caps.append(1 << 30)
+        return caps
+
+    def allocate(self, budget: int) -> List[int]:
+        """Width vector for ``budget`` total workers (each stage >= 1,
+        stateful pinned at 1, keyed capped at its partition count)."""
+        mins = [1] * len(self.profiles)
+        # stateful stages carry load but cannot widen: exclude their load so
+        # the remaining budget divides over the stages that can absorb it.
+        loads = [
+            0.0 if p.kind == "stateful" else p.load for p in self.profiles
+        ]
+        return proportional_allocation(loads, budget, mins, self.stage_caps())
+
+    def describe(self) -> str:
+        return " ".join(
+            f"s{p.index}[{p.kind} cost={p.cost_us:.1f}us flow={p.flow:.2f}"
+            f"{' meas' if p.measured else ''}]"
+            for p in self.profiles
+        )
+
+
+# --------------------------------------------------------- occupancy monitor
+@dataclass
+class _Snapshot:
+    ts: float
+    drained: List[int]  # per-stage drained serials (reorder shared_next - 1)
+    backlog: List[int]  # per-stage queued ingress slots
+
+
+class OccupancyMonitor:
+    """Watches live stage counters and proposes elastic replans.
+
+    Fed by the process-backend supervisor each ``interval`` seconds with the
+    per-stage counters the :class:`~.shm.ExchangeRing` already publishes.
+    When one stage holds more than ``occupancy_threshold`` of the queued
+    work for ``patience`` consecutive samples, the monitor proposes growing
+    it by one worker — funded by spare budget if any, else by shrinking the
+    idlest resizable stage (shrink listed first so the supervisor frees the
+    budget before spending it).  The one-worker step is deliberate: observed
+    occupancy says *which* stage is starved with certainty, but service-cost
+    estimates for non-saturated stages are only upper bounds, so stepwise
+    rebalancing converges without thrashing on estimation noise.  Live
+    service rates still refresh the cost model (for reporting and for the
+    next static allocation).
+    """
+
+    def __init__(
+        self,
+        model: CostModel,
+        budget: int,
+        *,
+        interval: float = 0.25,
+        occupancy_threshold: float = 0.55,
+        min_backlog: int = 8,
+        patience: int = 3,
+    ):
+        self.model = model
+        self.budget = budget
+        self.interval = interval
+        self.occupancy_threshold = occupancy_threshold
+        self.min_backlog = min_backlog
+        self.patience = patience
+        self._prev: Optional[_Snapshot] = None
+        self._next_at = 0.0
+        self._streak = 0
+        self._streak_stage = -1  # patience counts CONSECUTIVE samples of ONE stage
+        self.samples = 0  # instrumentation
+
+    def due(self, now: float) -> bool:
+        return now >= self._next_at
+
+    def sample(
+        self,
+        now: float,
+        drained: Sequence[int],
+        backlog: Sequence[int],
+        widths: Sequence[int],
+        resizable: Sequence[bool],
+    ) -> Optional[List[Tuple[int, int]]]:
+        """Feed one counter snapshot; returns ``[(stage, new_width), ...]``
+        (shrinks first) when a replan should happen, else None."""
+        self._next_at = now + self.interval
+        snap = _Snapshot(now, list(drained), list(backlog))
+        prev, self._prev = self._prev, snap
+        self.samples += 1
+        if prev is None:
+            return None
+        dt = now - prev.ts
+        if dt <= 0:
+            return None
+        # refresh measured costs: a backlogged stage is service-limited, so
+        # its drain rate ≈ width / cost; an unsaturated stage's drain rate
+        # only upper-bounds its cost (it is arrival-limited), so it may only
+        # lower the estimate.
+        for i, width in enumerate(widths):
+            dd = snap.drained[i] - prev.drained[i]
+            if dd <= 0 or width <= 0:
+                continue
+            measured = width * dt * 1e6 / dd
+            if (
+                snap.backlog[i] >= self.min_backlog
+                or measured < self.model.profiles[i].cost_us
+            ):
+                self.model.observe(i, measured)
+        self.model.observe_flows(snap.drained)
+
+        total_backlog = sum(snap.backlog)
+        if total_backlog < self.min_backlog:
+            self._streak = 0
+            return None
+        hot = max(range(len(widths)), key=lambda i: snap.backlog[i])
+        caps = self.model.stage_caps()
+        if (
+            snap.backlog[hot] / total_backlog < self.occupancy_threshold
+            or not resizable[hot]
+            or widths[hot] >= caps[hot]
+        ):
+            # no drift, or drift that is unaddressable (hot stage pinned or
+            # already at cap): do not thrash the others
+            self._streak = 0
+            return None
+        proposal: List[Tuple[int, int]] = []
+        if self.budget - sum(widths) <= 0:
+            donors = [
+                i for i in range(len(widths))
+                if i != hot and resizable[i] and widths[i] > 1
+            ]
+            if not donors:
+                self._streak = 0
+                return None
+            donor = min(donors, key=lambda i: snap.backlog[i])
+            proposal.append((donor, widths[donor] - 1))
+        proposal.append((hot, widths[hot] + 1))
+        if hot != self._streak_stage:  # drift must persist on ONE stage —
+            self._streak = 0  # an alternating backlog leader never replans
+            self._streak_stage = hot
+        self._streak += 1
+        if self._streak < self.patience:
+            return None
+        self._streak = 0
+        return proposal

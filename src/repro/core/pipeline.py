@@ -290,11 +290,14 @@ class GraphPipeline:
         reorder_scheme: str = "non_blocking",
         worklist_scheme: str = "hybrid",
         reorder_size: int = 1024,
-        num_workers: int = 1,
+        num_workers=1,  # int, or "auto" for one worker per core
         marker_interval: int = 64,
         collect_outputs: bool = False,
         batch_size: int = 1,
     ):
+        from .costmodel import resolve_workers  # late: pipeline loads first
+
+        num_workers = resolve_workers(num_workers)
         self.node_specs = dict(nodes)
         self.edges = [tuple(e) for e in edges]
         self.marker_interval = marker_interval

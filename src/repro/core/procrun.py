@@ -69,15 +69,51 @@ import os
 import pickle
 import time
 import uuid
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
+from .costmodel import CostModel, OccupancyMonitor, default_budget
 from .operators import OpSpec, PARTITIONED, STATEFUL, STATELESS, _Marker
-from .pipeline import GraphPipeline, NodeSpec, percentile_latencies
+from .pipeline import GraphPipeline, Merge, NodeSpec, Split, percentile_latencies
 from .runtime import RunReport
 from . import shm
 
 _PICKLE = pickle.HIGHEST_PROTOCOL
+
+# Optional coverage hook for forked children: they exit via os._exit (no
+# atexit), so the coverage gate (scripts/coverage_gate.py) installs a dump
+# callable here pre-fork; workers/routers invoke it right before _exit.
+_COV_HOOK: Optional[Callable[[], None]] = None
+
+
+# Idle-nap tuning for child processes.  On this class of kernel a single
+# time.sleep() costs ~50 µs of CPU regardless of the requested duration, so
+# liveness comes from napping LESS OFTEN, not napping shorter: floors start
+# high enough to avoid micro-nap storms and caps bound the wake rate of a
+# starved process (the latency cost is ms-scale on drain edges only).
+_IDLE_MIN = 2e-5
+_IDLE_MAX = 2e-3
+_CONN_POLL_IVL = 0.005  # router-side parent-pipe poll period (spills/control)
+
+
+class UnstagedGraphWarning(UserWarning):
+    """``backend="process"`` could not stage part of the graph.
+
+    Routing nodes (``Split``/``Merge``) and everything downstream of them run
+    serially in the parent tail, so their throughput is bounded by one core.
+    ``unstaged`` names the nodes left in the tail.
+    """
+
+    def __init__(self, unstaged: Sequence[str]):
+        self.unstaged = tuple(unstaged)
+        super().__init__(
+            "backend='process' cannot stage routing nodes: "
+            f"{', '.join(self.unstaged)} run(s) serially in the parent tail "
+            "(throughput bounded by the parent core); restructure the graph "
+            "into a linear prefix or use backend='thread' for "
+            "Split/Merge-heavy graphs"
+        )
 
 
 def _chain_nodes(specs: Sequence[OpSpec]):
@@ -94,11 +130,22 @@ class StagePlan:
     ops: List[OpSpec] = field(default_factory=list)
     workers: int = 1
     index: int = 0
+    # Ring headroom for elastic replanning: the exchange is built with this
+    # many ingress rings so the live group can be re-forked wider than its
+    # initial width without re-creating shared memory.  0 = no headroom.
+    max_workers: int = 0
 
     @property
     def recoverable(self) -> bool:
         """Only stateless stages survive a worker crash (no lost state)."""
         return all(op.kind == STATELESS for op in self.ops)
+
+    @property
+    def resizable(self) -> bool:
+        """Elastic replanning can re-fork this stage at a new width:
+        stateless trivially, keyed via quiesced state migration; stateful
+        stages are pinned at one worker."""
+        return self.kind != "stateful" and max(self.max_workers, 1) > 1
 
     def describe(self) -> str:
         names = ",".join(op.name for op in self.ops) or "<identity>"
@@ -110,13 +157,19 @@ def _plan_stages(
     edges: Sequence[Tuple[str, str]],
     num_workers: int,
     max_stages: Optional[int],
+    allocate: Optional[Callable[[List["StagePlan"]], List[int]]] = None,
 ):
     """Cut the graph's linear ingress prefix into stages.
 
     Returns ``(stages, tail_nodes, tail_edges)``.  The walk stops at the
     first routing node (Split/Merge) or fan-out — that remainder is the
     parent-side tail.  ``max_stages=1`` reproduces the ingress-only plan
-    (maximal stateless run, or leading partitioned op + stateless run)."""
+    (maximal stateless run, or leading partitioned op + stateless run).
+
+    ``allocate`` replaces the flat ``num_workers`` width with a cost-model
+    allocation: called with the stage list, it returns one width per stage
+    (see :meth:`~.costmodel.CostModel.allocate`); stateful stages stay
+    pinned at 1 regardless."""
     cap = max_stages if max_stages and max_stages > 0 else (1 << 30)
     succ: dict[str, list] = {n: [] for n in nodes}
     pred: dict[str, list] = {n: [] for n in nodes}
@@ -161,6 +214,11 @@ def _plan_stages(
 
     if not stages:  # routing-headed graph: identity pass-through stage
         stages = [StagePlan("stateless", [], num_workers, 0)]
+    if allocate is not None:
+        widths = allocate(stages)
+        for plan, w in zip(stages, widths):
+            if plan.kind != "stateful":
+                plan.workers = max(int(w), 1)
     tail_nodes = {k: v for k, v in nodes.items() if k not in seg_names}
     tail_edges = [(u, v) for u, v in edges if u not in seg_names]
     return stages, tail_nodes, tail_edges
@@ -209,7 +267,7 @@ def _publish(reorder, conn, serial, tag, data, span) -> None:
     if len(data) > reorder.payload_bytes:
         conn.send(("spill", serial, tag, data))  # body via pipe, before the tag
         tag, data = shm.TAG_SPILL, b""
-    spin = 1e-6
+    spin = _IDLE_MIN
     while True:
         st = reorder.try_publish(serial, tag, data, span)
         if st != shm.ShmReorderRing.FULL:
@@ -217,16 +275,18 @@ def _publish(reorder, conn, serial, tag, data, span) -> None:
         if reorder.stopped():
             return
         time.sleep(spin)
-        spin = min(spin * 2, 1e-3)
+        spin = min(spin * 2, _IDLE_MAX)
 
 
-def _worker_main(wid, ingress, reorder, conn, seg_ops):
+def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None):
     """Stage worker body (entered via fork; exits with os._exit).
 
     Consumes peek → process → publish → advance so a crash strands at most
-    one uncommitted unit (see module docstring)."""
+    one uncommitted unit (see module docstring).  ``preload`` carries
+    migrated per-key state after an elastic resize (the supervisor filters
+    the merged stage state down to this worker's key ownership)."""
     ingress.sync_consumer()  # crash replacement: resume at the shared cursor
-    states = _init_states(seg_ops)
+    states = preload if preload is not None else _init_states(seg_ops)
     busy = 0.0
     processed = 0
     code = 0
@@ -238,16 +298,16 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops):
     # the drain moves past it.
     replay = True
     try:
-        idle = 1e-6
+        idle = _IDLE_MIN
         while True:
             rec = ingress.peek()
             if rec is None:
                 if ingress.closed() or reorder.stopped():
                     break
                 time.sleep(idle)
-                idle = min(idle * 2, 1e-3)
+                idle = min(idle * 2, _IDLE_MAX)
                 continue
-            idle = 1e-6
+            idle = _IDLE_MIN
             serial, tag, data, nslots = rec
             t_begin = time.perf_counter()
             if tag == shm.TAG_KUNIT:
@@ -261,14 +321,28 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops):
                     results.append((serials[i], _apply_segment(seg_ops, states, v), m))
                 processed += len(values)
                 busy += time.perf_counter() - t_begin
-                for s, outs, m in results:  # per-tuple slots: the downstream
-                    if m is None:  # drain restores the cross-worker interleave
+                # Per-SERIAL results so the downstream drain restores the
+                # cross-worker interleave — but published as ONE batched
+                # TAG_KBUNDLES slot at the unit's first serial (the drainer
+                # scatter-stashes the rest), so reorder-ring traffic stays
+                # per-unit.  Oversized batches fall back to per-tuple slots
+                # (which may individually spill).
+                entries = []
+                for s, outs, m in results:
+                    if m is None:
                         btag, bdata = shm.encode_bundle(outs)
                     else:
                         if not outs:
                             m.exit = time.perf_counter()
                         btag, bdata = shm.TAG_MBUNDLE, pickle.dumps((outs, m), _PICKLE)
-                    _publish(reorder, conn, s, btag, bdata, 1)
+                    entries.append((s, btag, bdata))
+                blob = pickle.dumps(entries, _PICKLE) if len(entries) > 1 else b""
+                if len(entries) > 1 and len(blob) <= reorder.payload_bytes:
+                    _publish(reorder, conn, entries[0][0],
+                             shm.TAG_KBUNDLES, blob, 1)
+                else:
+                    for s, btag, bdata in entries:
+                        _publish(reorder, conn, s, btag, bdata, 1)
             else:  # TAG_UNIT: contiguous serial span [serial, serial+len)
                 values, marks = pickle.loads(data)
                 by_off = dict(marks) if marks else None
@@ -304,10 +378,16 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops):
         except Exception:
             pass
     try:
+        if code == 0 and ingress.handoff_requested():
+            # elastic resize: the group is quiesced; hand worker-local state
+            # back so the supervisor can re-shard it across the new width
+            conn.send(("state", wid, pickle.dumps(states, _PICKLE)))
         conn.send(("stats", wid, busy, processed))
         conn.close()
     except Exception:
         pass
+    if _COV_HOOK is not None:
+        _COV_HOOK()
     os._exit(code)  # skip inherited atexit/resource_tracker teardown
 
 
@@ -322,15 +402,18 @@ class _Dispatcher:
                  io_batch: int, max_inflight: int):
         self.x = exchange
         self.plan = plan
-        self.workers = plan.workers
+        self.workers = plan.workers  # ACTIVE width (<= exchange.consumers)
         self.io_batch = max(1, io_batch)
         self.max_inflight = max_inflight
+        self.paused = False  # elastic replan: gate intake + liveness flushes
         self.keyed = plan.kind == "keyed"
+        # accumulators/queues sized at the exchange's max width so an elastic
+        # resize only moves the active-width cursor, never reallocates
         if self.keyed:
             head = plan.ops[0]
             self._key_fn, self._part = head.key_fn, head.partitioner
             # per-worker accumulators: (serials, values, marks)
-            self._acc = [([], [], []) for _ in range(self.workers)]
+            self._acc = [([], [], []) for _ in range(exchange.consumers)]
         else:
             self._vals: list = []
             self._marks: list = []
@@ -340,9 +423,16 @@ class _Dispatcher:
         # sealed units awaiting ring space: per-worker FIFO (keyed units must
         # stay ordered per ring; cross-ring order is restored by the reorder)
         self._outq: list[collections.deque] = [
-            collections.deque() for _ in range(self.workers)
+            collections.deque() for _ in range(exchange.consumers)
         ]
         self._queued = 0
+
+    def set_workers(self, w: int) -> None:
+        """Elastic resize: point routing at the new active width.  Only legal
+        on a quiesced dispatcher (accumulators and out-queues empty — the
+        supervisor's pause → quiesce protocol guarantees it)."""
+        self.workers = w
+        self._rr = itertools.cycle(range(w))
 
     # -- intake gate --------------------------------------------------------
     def inflight(self) -> int:
@@ -351,7 +441,8 @@ class _Dispatcher:
     def ready(self) -> bool:
         """Whether the feeder should accept more upstream tuples."""
         return (
-            self._queued < 2 * self.workers
+            not self.paused
+            and self._queued < 2 * self.workers
             and self.inflight() < self.max_inflight
         )
 
@@ -435,19 +526,26 @@ class _Dispatcher:
         release partial units.  Keyed batches fill unevenly, so a waiting
         partial can hold exactly the serial the downstream drain (and
         therefore the inflight window) is blocked on — keeping it would
-        deadlock.  Returns True if anything was dispatched."""
+        deadlock.  Returns True if anything was dispatched.  No-op while the
+        dispatcher is paused for an elastic replan (nothing may enter the
+        rings mid-quiesce)."""
+        if self.paused:
+            return False
         self.flush()
         return self.pump()
 
 
 # -------------------------------------------------------------- router process
-def _pump_router_conn(conn, spills) -> None:
-    """Drain parent→router messages (spill bodies); never blocks."""
+def _pump_router_conn(conn, spills, ctrl=None) -> None:
+    """Drain parent→router messages (spill bodies + elastic pause/resume
+    control, which lands in ``ctrl``); never blocks."""
     try:
         while conn.poll():
             msg = conn.recv()
             if msg[0] == "spill":
                 spills[msg[1]] = (msg[2], msg[3])
+            elif ctrl is not None:
+                ctrl.append(msg)
     except (EOFError, OSError):
         pass
 
@@ -469,17 +567,50 @@ def _router_main(ridx, upstream, exchange, conn, plan, io_batch, max_inflight):
     """Exchange-router body: drain the upstream stage's reorder ring (stream
     order), re-stamp serials, seal/route units into the downstream stage, and
     cascade EOF.  Never runs operator ``fn`` bodies — though keyed routing
-    does evaluate the downstream head's ``key_fn``/``partitioner`` here."""
+    does evaluate the downstream head's ``key_fn``/``partitioner`` here.
+
+    Elastic replanning control rides the parent pipe: ``("pause",)`` makes
+    the router flush its partial units, stop feeding the stage, and ack with
+    ``("paused", ridx, next_serial)`` — the serial boundary the supervisor
+    quiesces to; ``("resume", new_width)`` re-points routing at the re-forked
+    group and continues the stream."""
     disp = _Dispatcher(exchange, plan, io_batch, max_inflight)
     spills: dict[int, tuple[int, bytes]] = {}
+    ctrl: collections.deque = collections.deque()
+    pump_conn = lambda: _pump_router_conn(conn, spills, ctrl)  # noqa: E731
     busy = 0.0
     code = 0
     try:
-        idle = 1e-6
+        idle = _IDLE_MIN
         eof = False
+        acked = False
+        conn_at = 0.0
         while not eof:
             if upstream.stopped():
                 break
+            now = time.monotonic()
+            if now >= conn_at or disp.paused:
+                # the parent pipe carries only rare traffic (spill bodies,
+                # elastic control): poll it on a period, not per iteration —
+                # Connection.poll() is a ~20 µs syscall on this kernel
+                conn_at = now + _CONN_POLL_IVL
+                pump_conn()
+            while ctrl:
+                msg = ctrl.popleft()
+                if msg[0] == "pause":
+                    disp.flush()  # seal partials: drain to a serial boundary
+                    disp.paused, acked = True, False
+                elif msg[0] == "resume":
+                    disp.set_workers(msg[1])
+                    disp.paused = False
+            if disp.paused:
+                if disp.pump():
+                    continue  # keep moving sealed units into the rings
+                if not acked and not disp.pending():
+                    conn.send(("paused", ridx, disp.next_serial))
+                    acked = True
+                time.sleep(1e-3)
+                continue
             drained = 0
             if disp.ready():
                 t0 = time.perf_counter()
@@ -492,42 +623,39 @@ def _router_main(ridx, upstream, exchange, conn, plan, io_batch, max_inflight):
                         eof = True
                         break
                     if tag == shm.TAG_SPILL:
-                        tag, data = _await_spill(
-                            spills, t, lambda: _pump_router_conn(conn, spills)
-                        )
+                        tag, data = _await_spill(spills, t, pump_conn)
                     _route_result(disp, conn, tag, data)
                     drained += 1
                 if drained:
                     busy += time.perf_counter() - t0
             if drained or eof:
-                idle = 1e-6
+                idle = _IDLE_MIN
                 disp.pump()
                 continue
-            _pump_router_conn(conn, spills)
             moved = disp.pump()
             if not moved and idle >= 1e-4:
                 moved = disp.stall_flush()  # liveness: see _Dispatcher
             if moved:
-                idle = 1e-6
+                idle = _IDLE_MIN
             else:
                 time.sleep(idle)
-                idle = min(idle * 2, 1e-3)
+                idle = min(idle * 2, _IDLE_MAX)
         if eof:
             disp.flush()
-            spin = 1e-6
+            spin = _IDLE_MIN
             while disp.pending():  # drain our queue into the rings
                 if not disp.pump():
                     if exchange.reorder.stopped():
                         break
                     time.sleep(spin)
-                    spin = min(spin * 2, 1e-3)
+                    spin = min(spin * 2, _IDLE_MAX)
             exchange.close_ingress()  # workers drain what is left, then exit
-            spin = 1e-6
+            spin = _IDLE_MIN
             while not disp.publish_eof():  # cascade EOF downstream
                 if exchange.reorder.stopped():
                     break
                 time.sleep(spin)
-                spin = min(spin * 2, 1e-3)
+                spin = min(spin * 2, _IDLE_MAX)
     except BaseException as exc:  # noqa: BLE001
         code = 71
         try:
@@ -539,6 +667,8 @@ def _router_main(ridx, upstream, exchange, conn, plan, io_batch, max_inflight):
         conn.close()
     except Exception:
         pass
+    if _COV_HOOK is not None:
+        _COV_HOOK()
     os._exit(code)
 
 
@@ -578,6 +708,20 @@ class ProcessRuntime:
     (stateful stages always run one worker); ``stages`` caps how many stages
     the planner may cut (``None`` = as many as the graph allows, ``1`` = the
     ingress-only plan of PR 2).
+
+    ``num_workers="auto"`` replaces the flat width with a cost-model
+    allocation (:mod:`.costmodel`): a ``worker_budget`` (default: cores + 1)
+    is divided across stages in proportion to their predicted load, from
+    declared/explicit ``cost_priors`` or — when no priors are given — a short
+    profiled calibration pass over the first ``calibrate_tuples`` source
+    tuples.  Auto mode also enables **elastic replanning** (``elastic=True``
+    forces it for flat widths too): the supervisor samples per-stage
+    occupancy every ``replan_interval`` seconds and, when one stage holds
+    more than ``replan_threshold`` of the queued work for
+    ``replan_patience`` consecutive samples, quiesces the affected stages at
+    a serial-number boundary and re-forks their worker groups at the
+    re-estimated widths (keyed state migrates through the quiesced handoff;
+    see ``docs/architecture.md``).
     """
 
     def __init__(
@@ -585,7 +729,7 @@ class ProcessRuntime:
         nodes: Dict[str, NodeSpec],
         edges: Sequence[Tuple[str, str]],
         *,
-        num_workers: int = 4,
+        num_workers=4,  # int, or "auto" for cost-model allocation
         marker_interval: int = 64,
         collect_outputs: bool = False,
         io_batch: Optional[int] = None,
@@ -599,10 +743,23 @@ class ProcessRuntime:
         restart_on_crash: bool = True,
         reorder_scheme: str = "non_blocking",
         worklist_scheme: str = "hybrid",
+        worker_budget: Optional[int] = None,
+        cost_priors: Optional[Dict[str, float]] = None,
+        elastic: Optional[bool] = None,
+        calibrate_tuples: int = 64,
+        replan_interval: float = 0.25,
+        replan_threshold: float = 0.55,
+        replan_patience: int = 3,
         **_ignored,  # thread-backend knobs (heuristic, ...) have no meaning here
     ):
-        if num_workers < 1:
-            raise ValueError("need at least one worker process")
+        self.auto_workers = num_workers == "auto"
+        if self.auto_workers:
+            num_workers = 1  # provisional; the allocator sets real widths
+        if not isinstance(num_workers, int) or num_workers < 1:
+            raise ValueError(
+                "num_workers must be a positive int or 'auto', got "
+                f"{num_workers!r}"
+            )
         if "fork" not in multiprocessing.get_all_start_methods():
             raise RuntimeError(
                 "process backend requires the fork start method (POSIX); "
@@ -621,22 +778,61 @@ class ProcessRuntime:
         if io_batch is None:
             io_batch = batch_size if batch_size and batch_size > 1 else 32
         self.io_batch = max(1, io_batch)
-        # In-flight serials are doubly bounded: by the reorder window
-        # (correctness — workers must be able to publish) and by this backlog
-        # throttle (latency — an unbounded backlog pushes queueing delay into
-        # every marker while adding nothing once each worker has spare units).
-        units = max_inflight if max_inflight else 8 * num_workers
-        self.max_inflight = min(reorder_size, max(units * self.io_batch, 1))
         self.restart_on_crash = restart_on_crash
+        # Parent nap ceiling while the stages grind.  On small boxes the
+        # supervisor's wake rate competes with the worker groups for cores;
+        # raising the cap trades a little drain latency for worker headroom.
+        self.parent_idle_cap = float(_ignored.pop("parent_idle_cap", 5e-4))
         self._tail_opts = dict(
             reorder_scheme=reorder_scheme, worklist_scheme=worklist_scheme
         )
 
+        self.cost_priors = dict(cost_priors) if cost_priors else None
+        self.worker_budget = worker_budget
+        self.calibrate_tuples = max(int(calibrate_tuples), 0)
+        self.elastic = self.auto_workers if elastic is None else bool(elastic)
+        self.replan_interval = replan_interval
+        self.replan_threshold = replan_threshold
+        self.replan_patience = replan_patience
+
         self.node_specs = dict(nodes)
         self.edges = [tuple(e) for e in edges]
+        allocate = None
+        if self.auto_workers:
+            budget = worker_budget if worker_budget else default_budget()
+            self.worker_budget = budget
+
+            def allocate(plans):  # noqa: F811 — prior-based initial widths
+                self.cost_model = CostModel(plans, self.cost_priors)
+                return self.cost_model.allocate(budget)
+
         self.stage_plans, tail_nodes, tail_edges = _plan_stages(
-            self.node_specs, self.edges, num_workers, stages
+            self.node_specs, self.edges, num_workers, stages, allocate
         )
+        if not self.auto_workers:
+            self.cost_model = CostModel(self.stage_plans, self.cost_priors)
+        if self.worker_budget is None:
+            # elastic replanning with flat widths: the budget it may
+            # redistribute is exactly what the flat plan spent
+            self.worker_budget = sum(p.workers for p in self.stage_plans)
+        self._set_stage_headroom()
+        # In-flight serials are doubly bounded: by the reorder window
+        # (correctness — workers must be able to publish) and by this backlog
+        # throttle (latency — an unbounded backlog pushes queueing delay into
+        # every marker while adding nothing once each worker has spare units).
+        widest = max(p.workers for p in self.stage_plans)
+        self._explicit_inflight = max_inflight is not None
+        units = max_inflight if max_inflight else 8 * max(num_workers, widest)
+        self.max_inflight = min(reorder_size, max(units * self.io_batch, 1))
+
+        unstaged_routing = [
+            name for name, spec in tail_nodes.items()
+            if isinstance(spec, (Split, Merge))
+        ]
+        if unstaged_routing:
+            warnings.warn(
+                UnstagedGraphWarning(sorted(tail_nodes)), stacklevel=3
+            )
         self._tail: Optional[GraphPipeline] = None
         if tail_nodes:
             self._tail = GraphPipeline(
@@ -668,15 +864,39 @@ class ProcessRuntime:
         self._worker_processed = 0
         self.restarts = 0  # crash-recovery instrumentation
 
+        # elastic replanning state
+        self._monitor: Optional[OccupancyMonitor] = None
+        self._resizes: collections.deque = collections.deque()
+        self._active_replan: Optional[dict] = None
+        self._handoff: dict[tuple[int, int], bytes] = {}  # (stage, widx) -> blob
+        self.replans = 0  # completed elastic replan events (instrumentation)
+
     @classmethod
     def from_chain(cls, specs: Sequence[OpSpec], **kw) -> "ProcessRuntime":
         nodes, edges = _chain_nodes(list(specs))
         return cls(nodes, edges, **kw)
 
+    def _set_stage_headroom(self) -> None:
+        """Fix each stage's ring headroom (``StagePlan.max_workers``): the
+        widest group an elastic resize may re-fork.  Bounded by the worker
+        budget minus one worker for every other stage, and by the stage's
+        intrinsic cap (stateful: 1, keyed: its partition count)."""
+        caps = self.cost_model.stage_caps()
+        spare = max(self.worker_budget - (len(self.stage_plans) - 1), 1)
+        for plan, cap in zip(self.stage_plans, caps):
+            if not self.elastic or plan.kind == "stateful":
+                plan.max_workers = plan.workers
+            else:
+                plan.max_workers = max(min(cap, spare), plan.workers)
+
     # --------------------------------------------------------------- topology
     @property
     def num_stages(self) -> int:
         return len(self.stage_plans)
+
+    def stage_widths(self) -> list[int]:
+        """Current per-stage worker-group widths (allocation introspection)."""
+        return [p.workers for p in self.stage_plans]
 
     def worker_groups(self) -> list[list[multiprocessing.Process]]:
         """Live worker processes per stage (crash tests / introspection)."""
@@ -687,13 +907,14 @@ class ProcessRuntime:
         return groups
 
     # -------------------------------------------------------------- lifecycle
-    def _fork_worker(self, stage: int, widx: int, slot: Optional[int] = None):
+    def _fork_worker(self, stage: int, widx: int, slot: Optional[int] = None,
+                     preload=None):
         x = self._exchanges[stage]
         parent_conn, child_conn = self._ctx.Pipe(duplex=False)
         proc = self._ctx.Process(
             target=_worker_main,
             args=(widx, x.rings[widx], x.reorder, child_conn,
-                  self.stage_plans[stage].ops),
+                  self.stage_plans[stage].ops, preload),
             daemon=True,
         )
         proc.start()
@@ -727,7 +948,7 @@ class ProcessRuntime:
         self._exchanges = [
             shm.ExchangeRing(
                 f"{run_id}_s{plan.index}",
-                plan.workers,
+                max(plan.max_workers, plan.workers),  # elastic ring headroom
                 ring_slots=self.ring_slots,
                 slot_bytes=self.slot_bytes,
                 reorder_size=self.reorder_size,
@@ -735,6 +956,8 @@ class ProcessRuntime:
             )
             for plan in self.stage_plans
         ]
+        for x, plan in zip(self._exchanges, self.stage_plans):
+            x.set_active_width(plan.workers)
         # stage-0 workers first (supervision order mirrors the dataflow)
         for stage, plan in enumerate(self.stage_plans):
             for w in range(plan.workers):
@@ -746,6 +969,18 @@ class ProcessRuntime:
             self.max_inflight,
         )
         self._eof_seen = False
+        self._monitor = None
+        if self.elastic and any(p.resizable for p in self.stage_plans):
+            self._monitor = OccupancyMonitor(
+                self.cost_model,
+                self.worker_budget,
+                interval=self.replan_interval,
+                occupancy_threshold=self.replan_threshold,
+                patience=self.replan_patience,
+            )
+        self._resizes.clear()
+        self._active_replan = None
+        self._handoff = {}
 
     def stop(self) -> None:
         """Tear everything down; idempotent, always unlinks shared memory."""
@@ -774,6 +1009,10 @@ class ProcessRuntime:
         self._procs, self._pinfo, self._conns = [], [], []
         self._router_conns = {}
         self._disp = None
+        self._monitor = None
+        self._active_replan = None
+        self._resizes.clear()
+        self._handoff = {}
 
     # ---------------------------------------------------------------- plumbing
     def _drain_conns(self, final: bool = False) -> None:
@@ -808,6 +1047,19 @@ class ProcessRuntime:
         elif kind == "marks":  # probes dropped mid-pipeline (filtered tuples)
             for m in msg[1]:
                 self._record_dropped(m)
+        elif kind == "state":  # elastic handoff: worker-local state snapshot
+            info = self._pinfo[idx]
+            if info[0] == "worker":
+                self._handoff[(info[1], info[2])] = msg[2]
+        elif kind == "paused":  # router acked an elastic pause
+            rep = self._active_replan
+            if (
+                rep is not None
+                and rep["phase"] == "pausing"
+                and rep["stage"] == msg[1]
+            ):
+                rep["boundary"] = msg[2]
+                rep["phase"] = "quiesce"
         elif kind == "error" and not ignore_errors:
             raise RuntimeError(f"worker {msg[1]} failed: {msg[2]}")
 
@@ -868,6 +1120,174 @@ class ProcessRuntime:
         self._fork_worker(stage, widx, slot=idx)
         self.restarts += 1
 
+    # ------------------------------------------------------ elastic replanning
+    # Protocol (see docs/architecture.md): pause the stage's feeder → let the
+    # stage drain to a serial-number boundary (every dispatched serial
+    # processed, published, AND consumed downstream) → ask the quiesced group
+    # to hand its worker-local state back over the pipes → re-fork the group
+    # at the new width with the state re-sharded by the new key routing →
+    # resume the feeder.  Order and loss-freedom are inherited from the crash
+    # protocol: nothing is in flight across the boundary, and the re-forked
+    # workers consume the same rings with peek → publish → advance.
+    def _drive_elastic(self, now: float, src_done: bool) -> None:
+        if self._active_replan is not None:
+            self._step_replan(now, src_done)
+            return
+        if self._resizes:
+            if src_done:  # drain phase: a resize can no longer pay for itself
+                self._resizes.clear()
+                return
+            stage, new_w = self._resizes.popleft()
+            self._begin_replan(stage, new_w, now)
+            return
+        if self._monitor is None or src_done or not self._monitor.due(now):
+            return
+        drained = [x.progress()[0] for x in self._exchanges]
+        backlog = [x.backlog_slots() for x in self._exchanges]
+        widths = [p.workers for p in self.stage_plans]
+        resizable = [p.resizable for p in self.stage_plans]
+        props = self._monitor.sample(now, drained, backlog, widths, resizable)
+        for stage, w in props or ():
+            plan = self.stage_plans[stage]
+            w = min(max(w, 1), plan.max_workers)
+            if w != plan.workers:
+                self._resizes.append((stage, w))
+
+    def _begin_replan(self, stage: int, new_w: int, now: float) -> None:
+        rep = {
+            "stage": stage, "new_w": new_w,
+            "deadline": now + 10.0, "boundary": None,
+        }
+        if stage == 0:  # the parent itself is the feeder
+            self._disp.paused = True
+            self._disp.flush()
+            rep["phase"] = "flush"
+        else:
+            conn = self._router_conns.get(stage)
+            if conn is None:
+                return
+            try:
+                conn.send(("pause",))
+            except (BrokenPipeError, OSError):
+                return  # router already gone (EOF cascade): replan is moot
+            rep["phase"] = "pausing"
+        self._active_replan = rep
+
+    def _step_replan(self, now: float, src_done: bool) -> None:
+        rep = self._active_replan
+        stage = rep["stage"]
+        plan = self.stage_plans[stage]
+        x = self._exchanges[stage]
+        phase = rep["phase"]
+        if phase in ("flush", "pausing", "quiesce") and (
+            src_done or now > rep["deadline"]
+        ):
+            self._abort_replan()  # nothing irreversible has happened yet
+            return
+        if phase == "flush":  # stage 0: push the sealed partials into rings
+            self._disp.pump()
+            if not self._disp.pending():
+                rep["boundary"] = self._disp.next_serial
+                rep["phase"] = "quiesce"
+        elif phase == "pausing":
+            # waiting for the router's ("paused", stage, serial) ack, which
+            # arrives via _on_message; a router that exited meanwhile (EOF
+            # cascade raced the pause) makes the replan moot
+            ridx = self._router_slot(stage)
+            if ridx is None or self._procs[ridx] is None:
+                self._abort_replan()
+        elif phase == "quiesce":
+            if (
+                x.backlog_slots() == 0
+                and x.reorder.shared_next() >= rep["boundary"]
+            ):
+                # serial boundary reached: every dispatched tuple processed,
+                # published, and drained downstream — collect the group
+                for key in [k for k in self._handoff if k[0] == stage]:
+                    del self._handoff[key]
+                x.request_handoff()  # before close: exiting workers see it
+                x.close_ingress()
+                rep["expected"] = [
+                    i for i, info in enumerate(self._pinfo)
+                    if info[0] == "worker" and info[1] == stage
+                    and self._procs[i] is not None
+                ]
+                rep["phase"] = "collect"
+        elif phase == "collect":
+            if now > rep["deadline"]:
+                raise RuntimeError(
+                    f"elastic replan of stage {stage} stuck collecting "
+                    "worker state (quiesced workers failed to exit)"
+                )
+            if all(self._procs[i] is None for i in rep["expected"]):
+                self._finish_replan(rep, plan, x)
+
+    def _finish_replan(self, rep: dict, plan: StagePlan, x) -> None:
+        stage, new_w = rep["stage"], rep["new_w"]
+        preloads = self._build_preloads(plan, new_w)
+        x.reopen_ingress()
+        for j in range(new_w):
+            self._fork_worker(stage, j, preload=preloads[j])
+        plan.workers = new_w
+        x.set_active_width(new_w)
+        if stage == 0:
+            self._disp.set_workers(new_w)
+            self._disp.paused = False
+        else:
+            conn = self._router_conns.get(stage)
+            if conn is not None:
+                conn.send(("resume", new_w))
+        self.replans += 1
+        self._active_replan = None
+
+    def _abort_replan(self) -> None:
+        rep, self._active_replan = self._active_replan, None
+        self._resizes.clear()  # stale siblings of an aborted width vector
+        stage = rep["stage"]
+        if stage == 0:
+            self._disp.paused = False
+        else:
+            conn = self._router_conns.get(stage)
+            if conn is not None:
+                try:  # resume at the unchanged width
+                    conn.send(("resume", self.stage_plans[stage].workers))
+                except (BrokenPipeError, OSError):
+                    pass
+
+    def _router_slot(self, stage: int) -> Optional[int]:
+        for i, info in enumerate(self._pinfo):
+            if info[0] == "router" and info[1] == stage:
+                return i
+        return None
+
+    def _build_preloads(self, plan: StagePlan, new_w: int) -> list:
+        """Merge the quiesced group's handed-off state and re-shard it by the
+        new width's key routing (worker j owns keys with
+        ``partitioner(key) % new_w == j`` — exactly how the dispatcher will
+        route them)."""
+        merged = _init_states(plan.ops)
+        for (stage, _widx), blob in sorted(self._handoff.items()):
+            if stage != plan.index:
+                continue
+            st = pickle.loads(blob)
+            for oi, op in enumerate(plan.ops):
+                if op.kind == PARTITIONED:
+                    merged[oi].update(st[oi])  # key sets are disjoint
+        preloads = []
+        for j in range(new_w):
+            states_j = []
+            for oi, op in enumerate(plan.ops):
+                if op.kind == PARTITIONED:
+                    part = op.partitioner
+                    states_j.append({
+                        k: v for k, v in merged[oi].items()
+                        if part(k) % new_w == j
+                    })
+                else:  # stateless placeholder (stateful stages never resize)
+                    states_j.append({})
+            preloads.append(states_j)
+        return preloads
+
     # ------------------------------------------------------------------ drive
     def run(
         self,
@@ -876,10 +1296,32 @@ class ProcessRuntime:
         drain: bool = True,
         drain_timeout: float = 60.0,
     ) -> RunReport:
+        src = iter(source)
+        if (
+            self.auto_workers
+            and self.cost_priors is None
+            and self.calibrate_tuples > 0
+        ):
+            # calibration pass: profile the operator fns on a buffered prefix
+            # of the real stream (dry run, state discarded), then re-allocate
+            # widths from the measured costs before any process is forked
+            sample = list(itertools.islice(src, self.calibrate_tuples))
+            if self.cost_model.calibrate(sample):
+                widths = self.cost_model.allocate(self.worker_budget)
+                for plan, w in zip(self.stage_plans, widths):
+                    if plan.kind != "stateful":
+                        plan.workers = max(int(w), 1)
+                self._set_stage_headroom()
+                if not self._explicit_inflight:  # user's latency cap wins
+                    widest = max(p.workers for p in self.stage_plans)
+                    self.max_inflight = min(
+                        self.reorder_size, 8 * widest * self.io_batch
+                    )
+            if sample:
+                src = itertools.chain(sample, src)
         self._setup()
         t0 = time.perf_counter()
         n_in = 0
-        src = iter(source)
         src_done = False
         eof_published = False
         deadline = None
@@ -930,6 +1372,8 @@ class ProcessRuntime:
                     monitor_at = now + 0.02
                     self._drain_conns()
                     self._check_procs()
+                    if self._monitor is not None or self._active_replan:
+                        self._drive_elastic(now, src_done)
 
                 # -- termination ---------------------------------------------
                 if self._eof_seen:
@@ -953,13 +1397,13 @@ class ProcessRuntime:
                     # back off while the stages grind: a busy-polling parent
                     # steals the very cores the worker groups need
                     time.sleep(idle)
-                    idle = min(idle * 2, 5e-4)
+                    idle = min(idle * 2, self.parent_idle_cap)
         finally:
             self.stop()
         wall = time.perf_counter() - t0
         return self._report(n_in, wall)
 
-    def _drain_final(self, limit: int = 64) -> bool:
+    def _drain_final(self, limit: int = 256) -> bool:
         progress = False
         for _ in range(limit):
             got = self._exchanges[-1].reorder.poll()

@@ -17,6 +17,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Iterable, Optional
 
+from .costmodel import resolve_workers
 from .pipeline import CompiledPipeline, GraphPipeline
 from .scheduler import Scheduler
 
@@ -48,10 +49,11 @@ class StreamRuntime:
     def __init__(
         self,
         pipeline: GraphPipeline,
-        num_workers: int = 4,
+        num_workers=4,  # int, or "auto" for one worker per core
         heuristic: str = "ct",
         **sched_kw,
     ):
+        num_workers = resolve_workers(num_workers)
         self.pipeline = pipeline
         self.num_workers = num_workers
         sched_kw.setdefault("edges", getattr(pipeline, "sched_edges", None))
@@ -168,7 +170,7 @@ def run_pipeline(
     specs,
     source: Iterable,
     *,
-    num_workers: int = 4,
+    num_workers=4,  # int, or "auto" for cost-model-driven allocation
     heuristic: str = "ct",
     reorder_scheme: str = "non_blocking",
     worklist_scheme: str = "hybrid",
@@ -177,6 +179,7 @@ def run_pipeline(
     backend: str = "thread",
     batch_size: int = 1,
     reorder_size: int = 1024,
+    cost_priors=None,  # {op name: cost_us} overriding declared priors
     **kw,
 ) -> tuple[CompiledPipeline, RunReport]:
     """Convenience one-shot: compile, run to drain, report.
@@ -187,9 +190,17 @@ def run_pipeline(
     which exposes the same result surface (``outputs``, ``egress_count``,
     ``markers``).  ``batch_size > 1`` enables the threaded path's
     micro-batched tuple flow and doubles as the process backend's dispatch
-    unit size (``io_batch``) when the latter is not given.  Process-only
-    knobs ride ``**kw``: ``stages`` (max process stages; ``1`` = ingress-only
-    plan), ``io_batch``, ``max_inflight``, ring geometry.
+    unit size (``io_batch``) when the latter is not given.
+
+    ``num_workers="auto"`` sizes parallelism from the cost model
+    (:mod:`.costmodel`): the process backend divides a ``worker_budget``
+    (default cores + 1, via ``**kw``) across its stages in proportion to
+    predicted load — from ``cost_priors`` or a short calibration pass — and
+    elastically replans live when observed occupancy drifts; the thread
+    backend resolves it to one worker per core and feeds ``cost_priors`` to
+    the scheduler.  Process-only knobs ride ``**kw``: ``stages`` (max process
+    stages; ``1`` = ingress-only plan), ``io_batch``, ``max_inflight``,
+    ``worker_budget``, ``elastic``, ``replan_interval``, ring geometry.
     """
     if backend == "process":
         from .procrun import _chain_nodes
@@ -206,10 +217,12 @@ def run_pipeline(
             backend=backend,
             batch_size=batch_size,
             reorder_size=reorder_size,
+            cost_priors=cost_priors,
             **kw,
         )
     if backend != "thread":
         raise ValueError(f"unknown backend {backend!r} (thread | process)")
+    num_workers = resolve_workers(num_workers)
     pipe = CompiledPipeline(
         specs,
         reorder_scheme=reorder_scheme,
@@ -220,7 +233,10 @@ def run_pipeline(
         batch_size=batch_size,
         reorder_size=reorder_size,
     )
-    rt = StreamRuntime(pipe, num_workers=num_workers, heuristic=heuristic, **kw)
+    rt = StreamRuntime(
+        pipe, num_workers=num_workers, heuristic=heuristic,
+        cost_priors=cost_priors, **kw,
+    )
     report = rt.run(source)
     return pipe, report
 
@@ -230,7 +246,7 @@ def run_graph(
     edges,
     source: Iterable,
     *,
-    num_workers: int = 4,
+    num_workers=4,  # int, or "auto" for cost-model-driven allocation
     heuristic: str = "ct",
     reorder_scheme: str = "non_blocking",
     worklist_scheme: str = "hybrid",
@@ -239,6 +255,7 @@ def run_graph(
     backend: str = "thread",
     batch_size: int = 1,
     reorder_size: int = 1024,
+    cost_priors=None,  # {op name: cost_us} overriding declared priors
     **kw,
 ) -> tuple[GraphPipeline, RunReport]:
     """Convenience one-shot for DAG pipelines: compile, run to drain, report.
@@ -246,8 +263,11 @@ def run_graph(
     ``backend="process"`` cuts the graph's linear prefix into process stages
     at partitioned/stateful boundaries (shared-memory exchange edges between
     worker groups) and executes any uncuttable remainder in the parent in
-    serial order (see :mod:`.procrun`); semantics are unchanged.  ``stages=1``
-    (via ``**kw``) restores the ingress-only plan.
+    serial order (see :mod:`.procrun`; a :class:`~.procrun.UnstagedGraphWarning`
+    is emitted when routing nodes land in that tail); semantics are
+    unchanged.  ``stages=1`` (via ``**kw``) restores the ingress-only plan;
+    ``num_workers="auto"`` enables cost-model worker allocation + elastic
+    replanning (see :func:`run_pipeline`).
     """
     if backend == "process":
         from .procrun import ProcessRuntime
@@ -262,12 +282,14 @@ def run_graph(
             reorder_scheme=reorder_scheme,
             worklist_scheme=worklist_scheme,
             reorder_size=reorder_size,
+            cost_priors=cost_priors,
             **kw,
         )
         report = rt.run(source)
         return rt, report
     if backend != "thread":
         raise ValueError(f"unknown backend {backend!r} (thread | process)")
+    num_workers = resolve_workers(num_workers)
     pipe = GraphPipeline(
         nodes,
         edges,
@@ -279,6 +301,9 @@ def run_graph(
         batch_size=batch_size,
         reorder_size=reorder_size,
     )
-    rt = StreamRuntime(pipe, num_workers=num_workers, heuristic=heuristic, **kw)
+    rt = StreamRuntime(
+        pipe, num_workers=num_workers, heuristic=heuristic,
+        cost_priors=cost_priors, **kw,
+    )
     report = rt.run(source)
     return pipe, report

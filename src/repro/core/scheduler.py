@@ -29,8 +29,9 @@ from __future__ import annotations
 import math
 import threading
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
+from .costmodel import op_cost_us
 from .operators import OperatorNode
 
 HEURISTICS = ("qst", "lp", "et", "ct", "adaptive")
@@ -50,6 +51,7 @@ class Scheduler:
         edges: Optional[Sequence[Tuple[int, int, float]]] = None,
         num_workers: int = 4,  # machine parallelism (adaptive controller)
         adapt_interval: float = 0.02,  # s between controller re-estimations
+        cost_priors: Optional[Dict[str, float]] = None,  # {op name: cost_us}
     ):
         if heuristic not in HEURISTICS:
             raise ValueError(f"unknown heuristic {heuristic!r}; pick from {HEURISTICS}")
@@ -60,6 +62,10 @@ class Scheduler:
         self.window = window
         self.num_workers = num_workers
         self.adapt_interval = adapt_interval
+        # Explicit cost priors override each spec's declared cost_us until
+        # live estimates warm up — the same override surface the process
+        # backend's allocator uses (costmodel.op_cost_us).
+        self.cost_priors = dict(cost_priors) if cost_priors else None
         self.adaptations = 0  # controller invocations (instrumentation)
         self._lock = threading.Lock()
         self._window_start = time.perf_counter()
@@ -84,7 +90,8 @@ class Scheduler:
     # ------------------------------------------------------------------ utils
     def _cost(self, i: int) -> float:
         n = self.nodes[i]
-        return max(n.stats.cost(n.spec.cost_us * 1e-6), 1e-9)
+        prior = op_cost_us(n.spec, self.cost_priors) * 1e-6
+        return max(n.stats.cost(prior), 1e-9)
 
     def _selectivity(self, i: int) -> float:
         n = self.nodes[i]
@@ -139,8 +146,16 @@ class Scheduler:
         resize each operator's effective parallelism cap M_i proportionally to
         its share of total load (in_rate_i · c_i), bounded by its max DOP.
 
-        Estimates refresh implicitly: :meth:`OpStats.cost`/``selectivity``
-        fold in measured busy time and tuple counts once warmed up.
+        A ``dop_cap`` is a *cap*, not a reservation: idle operators consume
+        no workers, so caps may sum past ``num_workers`` and a hot operator
+        must stay able to absorb every idle worker — which is why this uses
+        ceil-of-share rather than the process backend's hard-partitioning
+        :func:`~.costmodel.proportional_allocation` (there a stage width
+        reserves forked processes).  The two backends do share one *cost*
+        surface: :func:`~.costmodel.op_cost_us` folds ``cost_priors``
+        overrides into the declared priors on both paths.  Estimates refresh
+        implicitly: :meth:`OpStats.cost`/``selectivity`` fold in measured
+        busy time and tuple counts once warmed up.
         """
         in_rate, _ = self._flows()
         loads = [in_rate[i] * self._cost(i) for i in range(len(self.nodes))]

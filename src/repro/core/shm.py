@@ -18,7 +18,9 @@ Ring wire format
   offset 0) are each written by exactly one process, so no cross-process
   atomic RMW is needed — the only primitive required is an aligned 8-byte
   store.  Offset 16 is the producer-owned ``closed`` flag (EOF: drain what is
-  left, then stop).  Consumption is split into :meth:`ShmSpscRing.peek` /
+  left, then stop); offset 24 is the supervisor-owned ``handoff`` flag
+  (elastic resize: the exiting consumer first sends its worker-local state
+  back over its pipe).  Consumption is split into :meth:`ShmSpscRing.peek` /
   :meth:`ShmSpscRing.advance` so a consumer can *read* a record, act on it,
   and only then commit the head — the basis of crash replay (below).
 
@@ -89,6 +91,10 @@ TAG_BUNDLES = 8  # span result: pickle((bundles, out_marks, dropped_marks))
 TAG_EOF = 9  # end-of-stream marker published by the feeder at last_serial+1
 TAG_UNIT = 10  # contiguous dispatch unit: pickle((values, marks)); serial=head
 TAG_KUNIT = 11  # keyed dispatch unit: pickle((serials, values, marks))
+TAG_KBUNDLES = 12  # batched keyed results: pickle([(serial, tag, data), ...])
+# published as ONE slot at the unit's first serial; the drainer scatters the
+# non-head serials into a local stash (see ShmReorderRing.poll), which is
+# what keeps a keyed stage's reorder traffic per-unit instead of per-tuple
 
 _I8 = struct.Struct("<q")
 _F8 = struct.Struct("<d")
@@ -139,7 +145,7 @@ class ShmSpscRing:
     """
 
     _HDR = 64  # tail:8 @0 (producer-owned), head:8 @8 (consumer-owned),
-    # closed:8 @16 (producer-owned)
+    # closed:8 @16 (producer-owned), handoff:8 @24 (supervisor-owned)
     _REC = struct.Struct("<IBq")  # total_len, tag, serial
 
     def __init__(self, name_prefix: str, slots: int = 4096, slot_bytes: int = 512):
@@ -201,6 +207,34 @@ class ShmSpscRing:
     def close_ring(self) -> None:
         """Producer-side EOF: consumers drain whatever is left, then stop."""
         self._store(16, 1)
+
+    # -- supervisor (elastic replanning) ------------------------------------
+    def request_handoff(self) -> None:
+        """Ask the consumer to send its worker-local state back over its pipe
+        before exiting (elastic resize: the group is re-forked at a new width
+        and keyed state must migrate).  Set BEFORE :meth:`close_ring` so the
+        exiting worker observes it."""
+        self._store(24, 1)
+
+    def handoff_requested(self) -> bool:
+        return self._load(24) != 0
+
+    def reopen_ring(self) -> None:
+        """Clear the EOF/handoff flags so a quiesced ring (head == tail) can
+        serve a freshly forked replacement group after an elastic resize."""
+        self._store(16, 0)
+        self._store(24, 0)
+
+    # -- progress counters (any process) ------------------------------------
+    def consumed_slots(self) -> int:
+        """Slots the consumer has committed — a monotone per-worker progress
+        counter the supervisor samples for the cost model."""
+        return self._load(8)
+
+    def queued_slots(self) -> int:
+        """Slots currently queued (produced − consumed): the stage-occupancy
+        signal behind elastic replanning."""
+        return max(self._load(0) - self._load(8), 0)
 
     # -- consumer -----------------------------------------------------------
     def sync_consumer(self) -> None:
@@ -284,7 +318,8 @@ class ShmReorderRing:
     and idle drainers check it so teardown never strands a process.
     """
 
-    _HDR = 64  # next:8 @0 (drainer-owned), stop:8 @8 (supervisor-owned)
+    _HDR = 64  # next:8 @0 (drainer-owned), stop:8 @8 (supervisor-owned),
+    # active group width:8 @16 (supervisor-owned metadata)
     _SLOT_HDR = struct.Struct("<qIIB")  # seq, len, span, tag
 
     PUBLISHED = 0
@@ -307,6 +342,12 @@ class ShmReorderRing:
             _I8.pack_into(self._buf, self._HDR + j * self.slot_bytes, 0)
         _I8.pack_into(self._buf, 0, 1)  # next = 1
         self._next = 1  # drainer-side mirror
+        # drainer-local scatter stash for TAG_KBUNDLES slots: a keyed worker
+        # publishes a whole unit's results (interleaved serials) as one slot
+        # at the unit's first serial; the remaining (serial -> (tag, data))
+        # entries wait here until the contiguous sweep reaches them.  Bounded
+        # by the ring window (every stashed serial is < next + size).
+        self._stash: dict = {}
         self.name = self._shm.name
 
     # -- worker side --------------------------------------------------------
@@ -336,14 +377,31 @@ class ShmReorderRing:
     # -- drainer side -------------------------------------------------------
     def poll(self) -> Optional[Tuple[int, int, bytes, int]]:
         """Consume the next in-order slot -> (serial, tag, payload, span);
-        ``next`` advances past the slot's whole serial span."""
-        off = self._HDR + (self._next % self.size) * self.slot_bytes
-        seq, length, span, tag = self._SLOT_HDR.unpack_from(self._buf, off)
-        if seq != self._next:
-            return None
-        body = off + self._SLOT_HDR.size
-        data = bytes(self._buf[body : body + length])
+        ``next`` advances past the slot's whole serial span.  A
+        ``TAG_KBUNDLES`` slot is unpacked transparently: the head serial's
+        entry is returned now, the rest scatter into the drainer-local stash
+        and are returned when the sweep reaches their serials."""
         t = self._next
+        hit = self._stash.pop(t, None)
+        if hit is None:
+            off = self._HDR + (t % self.size) * self.slot_bytes
+            seq, length, span, tag = self._SLOT_HDR.unpack_from(self._buf, off)
+            if seq != t:
+                return None
+            body = off + self._SLOT_HDR.size
+            data = bytes(self._buf[body : body + length])
+            if tag == TAG_KBUNDLES:
+                head = None
+                for s, etag, edata in pickle.loads(data):
+                    if s == t:
+                        head = (etag, edata)
+                    else:
+                        self._stash[s] = (etag, edata)
+                tag, data = head
+                span = 1
+        else:
+            tag, data = hit
+            span = 1
         self._next += max(span, 1)
         _I8.pack_into(self._buf, 0, self._next)  # widen the window
         return t, tag, data, span
@@ -374,6 +432,15 @@ class ShmReorderRing:
     def stopped(self) -> bool:
         return _I8.unpack_from(self._buf, 8)[0] != 0
 
+    # -- group-width metadata (supervisor-owned, any process may read) ------
+    def set_active_width(self, w: int) -> None:
+        """Publish the stage's live worker-group width (elastic resizes
+        rewrite it; routers/monitors read it for introspection)."""
+        _I8.pack_into(self._buf, 16, w)
+
+    def active_width(self) -> int:
+        return _I8.unpack_from(self._buf, 16)[0]
+
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
         self._buf = None
@@ -398,6 +465,12 @@ class ExchangeRing:
     results into the single ``reorder`` ring, whose contiguous drain restores
     stream order for the next hop.  Pure structure: routing/sealing policy
     lives in :mod:`.procrun`.
+
+    ``consumers`` is the *maximum* group width: elastic replanning
+    (:mod:`.costmodel`) may run fewer live workers than rings.  The live
+    width rides the reorder-ring header (:meth:`set_active_width`) and the
+    per-ring cursors double as the cost model's progress/occupancy counters
+    (:meth:`progress`, :meth:`backlog_slots`).
     """
 
     def __init__(
@@ -420,11 +493,43 @@ class ExchangeRing:
         self.reorder = ShmReorderRing(
             name_prefix, size=reorder_size, payload_bytes=reorder_payload
         )
+        self.reorder.set_active_width(consumers)
+
+    # -- group-width metadata ----------------------------------------------
+    def set_active_width(self, w: int) -> None:
+        self.reorder.set_active_width(w)
+
+    def active_width(self) -> int:
+        return self.reorder.active_width()
+
+    # -- sampling counters (supervisor-side cost model) ---------------------
+    def progress(self) -> Tuple[int, list]:
+        """(drained serials, per-worker consumed-slot counters) — the publish
+        counters :class:`~.costmodel.OccupancyMonitor` samples."""
+        return (
+            max(self.reorder.shared_next() - 1, 0),
+            [r.consumed_slots() for r in self.rings],
+        )
+
+    def backlog_slots(self) -> int:
+        """Queued ingress slots across the group (stage occupancy proxy)."""
+        return sum(r.queued_slots() for r in self.rings)
 
     def close_ingress(self) -> None:
         """Producer-side EOF on every ingress ring (workers drain, then exit)."""
         for r in self.rings:
             r.close_ring()
+
+    def request_handoff(self) -> None:
+        """Elastic resize: flag every ring so exiting workers send state."""
+        for r in self.rings:
+            r.request_handoff()
+
+    def reopen_ingress(self) -> None:
+        """Clear EOF/handoff flags after a quiesced resize (see
+        :meth:`ShmSpscRing.reopen_ring`)."""
+        for r in self.rings:
+            r.reopen_ring()
 
     def request_stop(self) -> None:
         self.reorder.request_stop()

@@ -122,6 +122,24 @@ def keyed_hotspot_chain(
     ]
 
 
+def skewed_stage_chain(
+    spin_hot: int = 10000, spin_cold: int = 30, num_partitions: int = 64
+) -> list[OpSpec]:
+    """SL(hot) → PS(cold): a deliberately *skewed* staged pipeline — the
+    leading stateless stage carries ``spin_hot/spin_cold``× the work of the
+    keyed stage behind it.  A flat per-stage worker count starves the hot
+    stage (the even split of a small core budget leaves it one worker),
+    which is exactly the load-imbalance failure mode the paper's scaling
+    argument targets; cost-model allocation (``workers="auto"``)
+    concentrates the budget on it instead.  The ``auto_vs_flat_process``
+    benchmark workload (``benchmarks/bench_core.py``)."""
+    return [
+        cpu_bound_stateless("hot", spin=spin_hot),
+        cpu_bound_partitioned("cold", spin=spin_cold,
+                              num_partitions=num_partitions),
+    ]
+
+
 def partitioned_parametric(
     name: str = "param_ps",
     matrix_n: int = 8,

@@ -256,9 +256,10 @@ def run_query(
     *,
     seed: int = 0,
     backend: str = "thread",
-    num_workers: int = 4,
+    num_workers=4,  # int, or "auto" for cost-model worker allocation
     batch_size: int = 1,
     heuristic: str = "ct",
+    cost_priors=None,
     **kw,
 ):
     """One-shot runner with backend plumb-through: compile query ``name`` and
@@ -266,7 +267,13 @@ def run_query(
     and ``batch_size``; ``process`` cuts the query into staged process worker
     groups at its partitioned/stateful boundaries (e.g. Q1's SL|PS|PS|SF
     becomes four stages) — pass ``stages=1`` via ``**kw`` for the ingress-only
-    plan, ``io_batch``/``max_inflight`` for exchange tuning.  Returns
+    plan, ``io_batch``/``max_inflight`` for exchange tuning.
+
+    ``num_workers="auto"`` sizes each stage's worker group from the query's
+    declared per-op cost/selectivity priors (table 1 carries them on every
+    ``OpSpec``) via :mod:`repro.core.costmodel` — the skew-aware allocation
+    a hot ``sessionize``/``basket_pairs`` stage wants; ``cost_priors=``
+    ``{op name: cost_us}`` overrides the declared numbers.  Returns
     ``(pipeline_or_runtime, RunReport)``."""
     from repro.core import run_pipeline
 
@@ -278,6 +285,7 @@ def run_query(
         num_workers=num_workers,
         batch_size=batch_size,
         heuristic=heuristic,
+        cost_priors=cost_priors,
         **kw,
     )
 

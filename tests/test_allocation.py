@@ -1,0 +1,334 @@
+"""Skew/allocation test battery (ISSUE 4 tentpole contract).
+
+Zipf-skewed keyed chains driven through flat vs. cost-model ("auto") worker
+allocation across micro-batch sizes and stage shapes must produce output
+exactly equal to the thread backend — and the allocator must give the hot
+stage at least as many workers as any cold data-parallel stage.  Plus unit
+coverage of the proportional allocator, calibration, the occupancy monitor's
+drift detection, and an end-to-end elastic-replan run (quiesce at a serial
+boundary, keyed state migration, re-fork at a new width).
+
+Process tests ride the 60 s watchdog like the rest of the process-backend
+suite.
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline env: degrade to seeded randomized sampling
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (
+    CostModel,
+    OpSpec,
+    OccupancyMonitor,
+    ProcessRuntime,
+    proportional_allocation,
+    resolve_workers,
+    run_pipeline,
+)
+from repro.core.procrun import _chain_nodes, _plan_stages
+
+
+# ------------------------------------------------- fork/pickle-safe operators
+def _double(v):
+    return [v * 2 + 1]
+
+
+def _fan2(v):
+    return [v, v + 3]
+
+
+def _drop5(v):
+    return [v] if v % 5 else []
+
+
+def _mod11(v):
+    return v % 11
+
+
+def _fst(t):
+    return t[0]
+
+
+def _zero():
+    return 0
+
+
+def _tup_inc(t):  # stateless over keyed output tuples
+    return [(t[0], t[1] + 3)]
+
+
+def _tup_drop5(t):
+    return [t] if t[1] % 5 else []
+
+
+def _ksum(s, k, v):
+    s = (s or 0) + (v if isinstance(v, int) else v[1])
+    return s, [(k, s % 99991)]
+
+
+def _kcount(s, k, t):
+    s = (s or 0) + 1
+    return s, [(k, s, t[1] % 997)]
+
+
+def _count(s, t):
+    return s + 1, [(s, t[1])]
+
+
+def _spin_hot(v):
+    x = float(v)
+    for _ in range(400):
+        x = (x * 1.0000001 + 1.31) % 97.0
+    return [int(x * 1000)]
+
+
+# Stage shapes: (specs builder, {op name: cost_us} priors, hot stage index).
+# Remember the planner's stage grammar: a leading stateless run is stage 0,
+# every partitioned/stateful op heads a new stage and absorbs its trailing
+# stateless run.
+def _shape_interior_hot():
+    specs = [
+        OpSpec("pre", "stateless", _double, cost_us=2),
+        OpSpec("hot", "partitioned", _ksum, key_fn=_mod11,
+               num_partitions=22, init_state=_zero, cost_us=120),
+        OpSpec("post", "stateless", _tup_inc, cost_us=2),
+    ]
+    return specs, {"pre": 2, "hot": 120, "post": 2}, 1
+
+
+def _shape_leading_keyed_hot():
+    specs = [
+        OpSpec("hot", "partitioned", _ksum, key_fn=_mod11,
+               num_partitions=22, init_state=_zero, cost_us=90),
+        OpSpec("mid", "stateless", _tup_drop5, cost_us=2),
+        OpSpec("cold", "partitioned", _kcount, key_fn=_fst,
+               num_partitions=22, init_state=_zero, cost_us=3),
+    ]
+    return specs, {"hot": 90, "mid": 2, "cold": 3}, 0
+
+
+def _shape_hot_prefix():
+    specs = [
+        OpSpec("hot", "stateless", _double, cost_us=150),
+        OpSpec("cold", "partitioned", _ksum, key_fn=_mod11,
+               num_partitions=22, init_state=_zero, cost_us=4),
+        OpSpec("tail", "stateful", _count, init_state=_zero, cost_us=1),
+    ]
+    return specs, {"hot": 150, "cold": 4, "tail": 1}, 0
+
+
+SHAPES = {
+    "interior_hot": _shape_interior_hot,
+    "leading_keyed_hot": _shape_leading_keyed_hot,
+    "hot_prefix": _shape_hot_prefix,
+}
+
+
+def _zipf_values(n: int, seed: int, skew: float = 2.0, universe: int = 400):
+    """Deterministic zipf-skewed int stream (hot keys dominate — the keyed
+    load imbalance the battery drives through both allocations)."""
+    rng = random.Random(seed)
+    return [
+        1 + min(int(universe * (rng.random() ** skew)), universe - 1)
+        for _ in range(n)
+    ]
+
+
+# -------------------------------------------------- allocator unit/properties
+@settings(max_examples=20, deadline=None)
+@given(
+    loads=st.lists(st.integers(min_value=0, max_value=1000), min_size=1,
+                   max_size=6),
+    budget=st.integers(min_value=0, max_value=12),
+    cap=st.integers(min_value=1, max_value=4),
+)
+def test_property_proportional_allocation_invariants(loads, budget, cap):
+    n = len(loads)
+    mins = [1] * n
+    caps = [cap] * n
+    widths = proportional_allocation([float(l) for l in loads], budget,
+                                     mins, caps)
+    assert len(widths) == n
+    assert all(mins[i] <= widths[i] <= caps[i] for i in range(n))
+    assert sum(widths) <= max(budget, sum(mins))
+    # monotone in load: an uncapped hotter stage never gets fewer workers
+    for i in range(n):
+        for j in range(n):
+            if loads[i] > loads[j] and widths[i] < caps[i]:
+                assert widths[i] >= widths[j], (loads, widths)
+
+
+def test_allocation_pins_stateful_and_caps_keyed():
+    specs, priors, _hot = _shape_hot_prefix()
+    nodes, edges = _chain_nodes(specs)
+    plans, _, _ = _plan_stages(nodes, edges, 1, None)
+    model = CostModel(plans, priors)
+    widths = model.allocate(budget=8)
+    # stateful stage pinned at 1 regardless of leftover budget
+    assert widths[[p.kind for p in plans].index("stateful")] == 1
+    # the hot stage soaked up the budget
+    assert widths[0] == max(widths)
+    assert sum(widths) <= 8
+    # keyed cap: partition count bounds the keyed stage
+    assert widths[1] <= 22
+
+
+def test_resolve_workers_auto_and_validation():
+    assert resolve_workers(3) == 3
+    assert resolve_workers("auto") >= 2
+    assert resolve_workers("auto", budget=7) == 7
+    with pytest.raises(ValueError):
+        resolve_workers("many")
+
+
+# --------------------------------------------- the zipf flat-vs-auto battery
+@pytest.mark.timeout(60)
+@settings(max_examples=4, deadline=None)
+@given(
+    shape=st.sampled_from(sorted(SHAPES)),
+    batch_size=st.sampled_from([1, 7, 32]),
+    n=st.integers(min_value=40, max_value=350),
+    skew=st.sampled_from([15, 25]),  # zipf exponent x10
+    seed=st.integers(min_value=0, max_value=5),
+)
+def test_property_zipf_flat_vs_auto_exact_equality(shape, batch_size, n,
+                                                   skew, seed):
+    """Flat AND auto allocation must both reproduce the thread backend's
+    egress exactly on zipf-skewed keyed chains, for batch_size {1, 7, 32}
+    across stage shapes; the allocator must give the hot stage >= as many
+    workers as any cold data-parallel stage."""
+    specs, priors, hot = SHAPES[shape]()
+    src = _zipf_values(n, seed=seed, skew=skew / 10.0)
+    ref, _ = run_pipeline(
+        specs, src, num_workers=2, collect_outputs=True, backend="thread"
+    )
+    flat, _ = run_pipeline(
+        specs, src, num_workers=2, collect_outputs=True,
+        backend="process", batch_size=batch_size,
+    )
+    assert flat.outputs == ref.outputs
+    auto, _ = run_pipeline(
+        specs, src, num_workers="auto", worker_budget=4, cost_priors=priors,
+        collect_outputs=True, backend="process", batch_size=batch_size,
+    )
+    assert auto.outputs == ref.outputs
+    widths = auto.stage_widths()
+    dp = [i for i, p in enumerate(auto.stage_plans) if p.kind != "stateful"]
+    assert all(widths[hot] >= widths[i] for i in dp), (widths, hot)
+    assert widths[hot] >= 2  # budget 4 over <=2 dp stages: hot gets spare
+
+
+@pytest.mark.timeout(60)
+def test_calibration_profiles_real_costs_without_priors():
+    """workers='auto' with no priors: the calibration dry run must measure
+    the hot stateless prefix and hand it the spare budget — and the profiled
+    warm-up must not disturb the stream (exact output equality)."""
+    specs = [
+        OpSpec("hot", "stateless", _spin_hot),  # declared cost_us defaults!
+        OpSpec("cold", "partitioned", _ksum, key_fn=_mod11,
+               num_partitions=22, init_state=_zero),
+    ]
+    src = _zipf_values(2500, seed=3)
+    ref, _ = run_pipeline(specs, src, num_workers=1, collect_outputs=True)
+    rt, report = run_pipeline(
+        specs, src, num_workers="auto", worker_budget=3,
+        backend="process", collect_outputs=True, batch_size=16,
+    )
+    assert rt.outputs == ref.outputs
+    assert report.tuples_in == len(src)
+    widths = rt.stage_widths()
+    assert widths[0] > widths[1], widths  # measured, not declared, costs won
+    assert rt.cost_model.profiles[0].measured
+
+
+# ------------------------------------------------------- occupancy monitoring
+def test_occupancy_monitor_proposes_growing_the_hot_stage():
+    specs, priors, _hot = _shape_interior_hot()
+    nodes, edges = _chain_nodes(specs)
+    plans, _, _ = _plan_stages(nodes, edges, 1, None)
+    model = CostModel(plans, {"pre": 2, "hot": 2, "post": 2})  # wrong priors
+    mon = OccupancyMonitor(model, budget=3, interval=0.0, patience=2)
+    widths, resizable = [1, 1], [True, True]
+    # stage 1 drains slowly with a dominant backlog; stage 0 keeps pace
+    proposal = None
+    for tick in range(1, 6):
+        proposal = mon.sample(
+            now=float(tick),
+            drained=[tick * 1000, tick * 50],
+            backlog=[0, 64],
+            widths=widths,
+            resizable=resizable,
+        )
+        if proposal:
+            break
+    assert proposal, "monitor never reacted to sustained occupancy drift"
+    assert dict(proposal).get(1) == 2, proposal  # grow the hot keyed stage
+    assert model.profiles[1].measured  # live rates replaced the bad prior
+
+
+def test_occupancy_monitor_ignores_unaddressable_drift():
+    specs, priors, _hot = _shape_hot_prefix()
+    nodes, edges = _chain_nodes(specs)
+    plans, _, _ = _plan_stages(nodes, edges, 1, None)
+    model = CostModel(plans, priors)
+    mon = OccupancyMonitor(model, budget=3, interval=0.0, patience=1)
+    for tick in range(1, 5):
+        proposal = mon.sample(
+            now=float(tick),
+            drained=[tick * 100, tick * 100, tick * 90],
+            backlog=[0, 0, 64],  # the STATEFUL stage is hot: nothing to do
+            widths=[1, 1, 1],
+            resizable=[True, True, False],
+        )
+        assert not proposal
+
+
+# ---------------------------------------------------------- elastic replanning
+@pytest.mark.timeout(60)
+def test_elastic_replan_reforks_at_new_width_exact_output():
+    """Deliberately wrong priors under-provision the hot stage; the
+    supervisor must detect the drift, quiesce at a serial boundary, migrate
+    keyed state through the handoff, re-fork at the corrected widths — and
+    the egress must still equal the sequential reference exactly."""
+    specs = [
+        OpSpec("hot", "stateless", _spin_hot, cost_us=1),  # actually ~30 µs
+        OpSpec("cold", "partitioned", _ksum, key_fn=_mod11,
+               num_partitions=22, init_state=_zero, cost_us=80),  # actually ~2
+    ]
+    src = _zipf_values(25000, seed=7)
+    ref, _ = run_pipeline(specs, src, num_workers=1, collect_outputs=True)
+    rt = ProcessRuntime.from_chain(
+        specs, num_workers="auto", worker_budget=3, collect_outputs=True,
+        cost_priors={"hot": 1.0, "cold": 80.0},
+        replan_interval=0.05, replan_patience=2, batch_size=32,
+    )
+    assert rt.stage_widths() == [1, 2]  # the lie: cold got the spare worker
+    report = rt.run(src)
+    assert rt.replans >= 1, "no elastic replan event fired"
+    assert rt.stage_widths()[0] >= 2, rt.stage_widths()  # hot stage re-forked wider
+    assert rt.outputs == ref.outputs
+    assert report.tuples_in == len(src)
+
+
+@pytest.mark.timeout(60)
+def test_elastic_disabled_keeps_widths_fixed():
+    specs = [
+        OpSpec("hot", "stateless", _spin_hot, cost_us=1),
+        OpSpec("cold", "partitioned", _ksum, key_fn=_mod11,
+               num_partitions=22, init_state=_zero, cost_us=80),
+    ]
+    src = list(range(1, 4000))
+    ref, _ = run_pipeline(specs, src, num_workers=1, collect_outputs=True)
+    rt = ProcessRuntime.from_chain(
+        specs, num_workers="auto", worker_budget=3, collect_outputs=True,
+        cost_priors={"hot": 1.0, "cold": 80.0}, elastic=False,
+    )
+    widths0 = rt.stage_widths()
+    rt.run(src)
+    assert rt.replans == 0
+    assert rt.stage_widths() == widths0
+    assert rt.outputs == ref.outputs

@@ -233,6 +233,154 @@ def test_process_worker_exception_propagates():
         )
 
 
+# ----------------------------------------------------------- crash soak
+def _soak_hot(v):
+    x = float(v)
+    for _ in range(300):
+        x = (x * 1.0000001 + 1.31) % 97.0
+    return [int(x * 1000)]
+
+
+def _soak_mod(v):
+    return v % 9
+
+
+def _soak_ksum(s, k, v):
+    s = (s or 0) + v
+    return s, [(k, s % 99991)]
+
+
+def _soak_zero():
+    return 0
+
+
+@pytest.mark.timeout(120)
+def test_crash_soak_ten_kills_including_during_elastic_replan():
+    """Soak: SIGKILL a random stage-0 (stateless, recoverable) worker 10
+    times over one run while elastic replans churn (deliberately wrong
+    priors force a resize mid-run, so kills land in every replan phase).
+    Egress must equal the sequential reference exactly and no shared-memory
+    segment may leak."""
+    import random
+    import threading
+
+    from repro.core import ProcessRuntime
+
+    specs = [
+        OpSpec("hot", "stateless", _soak_hot, cost_us=1),  # lie: ~25 µs
+        OpSpec(
+            "cold", "partitioned", _soak_ksum, key_fn=_soak_mod,
+            num_partitions=18, init_state=_soak_zero, cost_us=60,  # lie: ~2
+        ),
+    ]
+    src = list(range(1, 30001))
+    states, expected = {}, []
+    for v in src:
+        x = float(v)
+        for _ in range(300):
+            x = (x * 1.0000001 + 1.31) % 97.0
+        out = int(x * 1000)
+        k = out % 9
+        states[k] = states.get(k, 0) + out
+        expected.append((k, states[k] % 99991))
+
+    before = _shm_segments()
+    rt = ProcessRuntime.from_chain(
+        specs, num_workers="auto", worker_budget=3, collect_outputs=True,
+        cost_priors={"hot": 1.0, "cold": 60.0},
+        replan_interval=0.05, replan_patience=2, batch_size=32,
+    )
+    kills = {"done": 0}
+    stop_killer = threading.Event()
+
+    def killer():
+        rng = random.Random(0xC0FFEE)
+        while kills["done"] < 10 and not stop_killer.is_set():
+            time.sleep(0.05)
+            victims = rt.worker_groups()[0] if rt._procs else []
+            victims = [p for p in victims if p.is_alive()]
+            if not victims:
+                continue
+            try:
+                os.kill(rng.choice(victims).pid, signal.SIGKILL)
+                kills["done"] += 1
+            except (ProcessLookupError, AttributeError):
+                continue
+
+    th = threading.Thread(target=killer, daemon=True)
+    orig_setup = rt._setup
+
+    def chaos_setup():
+        orig_setup()
+        th.start()
+
+    rt._setup = chaos_setup
+    try:
+        report = rt.run(src)
+    finally:
+        stop_killer.set()
+        th.join(timeout=5)
+    assert kills["done"] >= 10, f"soak only landed {kills['done']} kills"
+    assert rt.restarts >= 1, "no crash recovery happened"
+    assert rt.outputs == expected
+    assert report.tuples_in == len(src)
+    assert _shm_segments() == before
+
+
+def _slow_ksum(s, k, v):
+    x = 0
+    for _ in range(200):
+        x += 1
+    s = (s or 0) + v
+    return s, [(k, s)]
+
+
+def _slow_count(s, v):
+    x = 0
+    for _ in range(200):
+        x += 1
+    return s + 1, [(v, s + 1)]
+
+
+@pytest.mark.timeout(60)
+@pytest.mark.parametrize("kind", ["keyed", "stateful"])
+def test_kill_in_stateful_stage_raises_cleanly_no_leak(kind):
+    """A SIGKILL in a keyed/stateful stage is unrecoverable (worker-local
+    state is gone): the runtime must raise a clear error — not hang, not
+    silently drop tuples — and still unlink every shm segment."""
+    if kind == "keyed":
+        stage_op = OpSpec(
+            "ks", "partitioned", _slow_ksum, key_fn=lambda v: v % 7,
+            num_partitions=14, init_state=lambda: 0,
+        )
+    else:
+        stage_op = OpSpec("ct", "stateful", _slow_count, init_state=lambda: 0)
+    specs = [OpSpec("id", "stateless", lambda v: [v]), stage_op]
+    before = _shm_segments()
+    rt = ProcessRuntime.from_chain(specs, num_workers=2, collect_outputs=True)
+
+    orig_setup = rt._setup
+
+    def chaos_setup():
+        orig_setup()
+        victim = rt.worker_groups()[1][0].pid
+        import threading
+
+        def killer():
+            time.sleep(0.05)
+            try:
+                os.kill(victim, signal.SIGKILL)
+            except ProcessLookupError:
+                pass
+
+        threading.Thread(target=killer, daemon=True).start()
+
+    rt._setup = chaos_setup
+    with pytest.raises(RuntimeError, match="worker-local state|died"):
+        rt.run(range(1, 60000))
+    assert _shm_segments() == before
+
+
 # ------------------------------------------------------------- shm hygiene
 @pytest.mark.timeout(60)
 def test_no_shared_memory_leaks_across_repeated_runs():

@@ -142,6 +142,40 @@ def test_stage_planner_cuts_at_state_boundaries():
     assert len(tail_nodes2) == 2
 
 
+# ------------------------------------------------- unstaged routing warning
+def test_unstaged_routing_nodes_emit_structured_warning():
+    """backend='process' used to run Split/Merge graphs' routing region in
+    the parent tail silently; it must now emit a structured warning naming
+    the unstaged nodes."""
+    import warnings
+
+    from repro.core import Merge, ProcessRuntime, Split, UnstagedGraphWarning
+
+    nodes = {
+        "pre": _op_from_code(0, 0),
+        "split": Split("round_robin"),
+        "a": _op_from_code(0, 1),
+        "b": _op_from_code(0, 2),
+        "merge": Merge(),
+    }
+    edges = [
+        ("pre", "split"), ("split", "a"), ("split", "b"),
+        ("a", "merge"), ("b", "merge"),
+    ]
+    with pytest.warns(UnstagedGraphWarning) as rec:
+        ProcessRuntime(nodes, edges, num_workers=1)
+    w = rec[0].message
+    assert set(w.unstaged) == {"split", "a", "b", "merge"}
+    assert "split" in str(w) and "parent tail" in str(w)
+
+    # plain chains — even under an explicit stage cap — must stay silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UnstagedGraphWarning)
+        ProcessRuntime.from_chain(
+            [_op_from_code(0, 0), _op_from_code(4, 1)], num_workers=1, stages=1
+        )
+
+
 # --------------------------------------------- egress_throughput regression
 def _nullify(v):
     return []
