@@ -48,12 +48,13 @@ import platform
 import sys
 import time
 
-from repro.core import run_pipeline
 from repro.streams.parametric import (
     cpu_bound_chain,
     keyed_hotspot_chain,
     skewed_stage_chain,
 )
+
+from .common import engine_run
 
 SPIN = 100  # ~24 µs of GIL-bound work per tuple across the 3-stage chain
 STAGES = 3
@@ -107,6 +108,8 @@ def _ab_configs():
 
 
 def _run_once(cfg: dict, n: int, workers: int):
+    """One measured run on the Engine surface (compile → plan-on-the-fly →
+    execute); returns ``(handle, report)`` like the legacy one-shot did."""
     kw = dict(
         num_workers=cfg.get("workers", workers),
         backend=cfg["backend"],
@@ -118,7 +121,7 @@ def _run_once(cfg: dict, n: int, workers: int):
         kw["parent_idle_cap"] = cfg["parent_idle_cap"]
     if cfg.get("workers") == "auto" and "worker_budget" in cfg:
         kw["worker_budget"] = cfg["worker_budget"]
-    return run_pipeline(WORKLOADS[cfg["workload"]](), range(n), **kw)
+    return engine_run(WORKLOADS[cfg["workload"]](), range(n), **kw)
 
 
 def _run_config(cfg: dict, seconds: float, workers: int):

@@ -36,3 +36,15 @@ def uniform_key_sampler(key_space: int = 10_000):
 
 def fmt_row(*cols) -> str:
     return ",".join(str(c) for c in cols)
+
+
+def engine_run(graph, source, **knobs):
+    """Run a chain (list of OpSpec) or ``(nodes, edges)`` graph on the
+    Engine API with flat legacy knobs (strictly parsed — a typo'd knob
+    raises ``ConfigError`` instead of silently measuring the wrong config);
+    returns ``(handle, RunReport)`` like the deprecated one-shots did."""
+    from repro.core import Engine, EngineConfig
+
+    engine = Engine(EngineConfig.from_kwargs(**knobs))
+    result = engine.run(graph, source)
+    return result.handle(), result.report

@@ -7,11 +7,10 @@ operators *inside* split/merge branches.
 """
 from __future__ import annotations
 
-from repro.core import run_graph
 from repro.core.simulate import SimConfig, simulate
 from repro.streams.tpcxbb import DAG_QUERIES, sim_ops
 
-from .common import fmt_row
+from .common import engine_run, fmt_row
 
 QUERIES = ("q1", "q2", "q3", "q4", "q15")
 
@@ -61,8 +60,8 @@ def run_dag(print_fn=print, n_tuples=6000):
             best_thru, best_lat = 0.0, 0.0
             for w in (2, 4):
                 nodes, edges, src = builder(n=n_tuples)
-                _, r = run_graph(
-                    nodes, edges, list(src),
+                _, r = engine_run(
+                    (nodes, edges), list(src),
                     num_workers=w, heuristic="ct", worklist_scheme=scheme,
                 )
                 if r.throughput > best_thru:

@@ -12,12 +12,11 @@ reported (the thread runtime is GIL-bound; the process backend is the point).
 """
 from __future__ import annotations
 
-from repro.core import run_graph, run_pipeline
 from repro.core.simulate import SimConfig, simulate
 from repro.streams.parametric import cpu_bound_chain
 from repro.streams.tpcxbb import DAG_QUERIES, sim_ops
 
-from .common import fmt_row
+from .common import engine_run, fmt_row
 
 N_TUPLES = 15_000
 QUERIES = ("q1", "q2", "q3", "q4", "q15")
@@ -55,7 +54,7 @@ def run_backends(print_fn=print, workers=(2, 4), n_tuples=15_000):
     parallelism; fig8 rows gain a backend column)."""
     for backend in BACKENDS:
         for w in workers:
-            _, r = run_pipeline(
+            _, r = engine_run(
                 cpu_bound_chain(stages=3, spin=100),
                 range(n_tuples),
                 num_workers=w,
@@ -77,7 +76,9 @@ def run_dag(print_fn=print, workers=(2, 4), n_tuples=6000):
         for h in DAG_HEURISTICS:
             for w in workers:
                 nodes, edges, src = builder(n=n_tuples)
-                _, r = run_graph(nodes, edges, list(src), num_workers=w, heuristic=h)
+                _, r = engine_run(
+                    (nodes, edges), list(src), num_workers=w, heuristic=h
+                )
                 print_fn(
                     fmt_row(
                         "fig8dag", q, h, w,

@@ -1,12 +1,12 @@
 """The paper's fig. 1 example: high-mobility fraud detection over call-data
-records, as an ordered streaming pipeline.
+records, as an ordered streaming pipeline on the Engine API.
 
   filter(area) -> project(location record) -> compute speed (by phone)
   -> filter(speed > T) -> windowed count
 
   PYTHONPATH=src python examples/fraud_detection.py
 """
-from repro.core import OpSpec, run_pipeline
+from repro.core import Engine, EngineConfig, OpSpec
 from repro.streams.sources import cdr_stream
 
 SPEED_T = 25.0  # cells/second — teleporting phones exceed this
@@ -53,15 +53,15 @@ def main():
         OpSpec("windowed_count", "stateful", windowed_count,
                init_state=lambda: None, cost_us=3, selectivity=0.1),
     ]
-    pipe, report = run_pipeline(
-        specs,
-        cdr_stream(30_000, seed=7),
-        num_workers=4,
-        heuristic="ct",
-        collect_outputs=True,
-    )
-    print(report)
-    alerts = pipe.outputs
+    engine = Engine(EngineConfig(
+        backend="thread", num_workers=4, collect_outputs=True,
+        thread={"heuristic": "ct"},
+    ))
+    plan = engine.plan(specs)
+    print(plan.explain())
+    result = engine.run(plan, cdr_stream(30_000, seed=7))
+    print(result.report)
+    alerts = result.outputs
     print(f"{len(alerts)} windows with high-mobility alerts; first 5: {alerts[:5]}")
     assert alerts, "expected some fraud windows with the seeded fraudsters"
     # windows must egress in order (ordered processing)

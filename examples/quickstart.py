@@ -1,9 +1,9 @@
-"""Quickstart: build an ordered streaming pipeline, run it on the threaded
-runtime, and check the ordering guarantee end-to-end.
+"""Quickstart: compile -> plan -> execute on the Engine API, and check the
+ordering guarantee end-to-end.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import OpSpec, run_pipeline
+from repro.core import Engine, EngineConfig, OpSpec
 
 
 def main():
@@ -25,11 +25,20 @@ def main():
         ),
     ]
     source = list(range(1, 5001))
-    pipe, report = run_pipeline(
-        specs, source, num_workers=4, heuristic="ct", collect_outputs=True
-    )
-    print(report)
-    print("first outputs:", pipe.outputs[:5])
+
+    # compile → plan: the execution plan is a first-class, inspectable artifact
+    engine = Engine(EngineConfig(
+        backend="thread", num_workers=4, collect_outputs=True,
+        thread={"heuristic": "ct"},
+    ))
+    plan = engine.plan(specs)
+    print(plan.explain())
+    print()
+
+    # plan → execute: run to drain, uniform JobResult on every backend
+    result = engine.run(plan, source)
+    print(result.report)
+    print("first outputs:", result.outputs[:5])
 
     # ordering check vs sequential oracle
     state = {}
@@ -40,7 +49,7 @@ def main():
         state[k] = state.get(k, 0) + vv
         if state[k] % 2 == 0:
             expected.append((k, state[k]))
-    assert pipe.outputs == expected, "ordered-execution guarantee violated!"
+    assert result.outputs == expected, "ordered-execution guarantee violated!"
     print(f"ordered execution verified over {len(expected)} outputs")
 
 

@@ -1,22 +1,29 @@
-"""Run the TPCx-BB streaming queries (paper §7) on the threaded runtime.
+"""Run the TPCx-BB streaming queries (paper §7) on the Engine API — print
+the physical plan, then execute on the chosen backend.
 
-  PYTHONPATH=src python examples/tpcxbb_stream.py [q1|q2|q3|q4|q15] [n_tuples]
+  PYTHONPATH=src python examples/tpcxbb_stream.py [q1|q2|q3|q4|q15] [n_tuples] [thread|process]
 """
 import sys
 
-from repro.core import run_pipeline
+from repro.core import Engine, EngineConfig
 from repro.streams.tpcxbb import QUERIES
 
 
 def main():
     qname = sys.argv[1] if len(sys.argv) > 1 else "q2"
     n = int(sys.argv[2]) if len(sys.argv) > 2 else 20_000
+    backend = sys.argv[3] if len(sys.argv) > 3 else "thread"
     specs, source = QUERIES[qname](n=n)
-    pipe, report = run_pipeline(
-        specs, source, num_workers=4, heuristic="ct", collect_outputs=True
-    )
-    print(f"{qname}: {report}")
-    print(f"egress tuples: {pipe.egress_count}; sample: {pipe.outputs[:2]}")
+    engine = Engine(EngineConfig(
+        backend=backend,
+        num_workers="auto" if backend == "process" else 4,
+        collect_outputs=True,
+    ))
+    plan = engine.plan(specs)
+    print(plan.explain())
+    result = engine.run(plan, source)
+    print(f"{qname}: {result.report}")
+    print(f"egress tuples: {result.egress_count}; sample: {result.outputs[:2]}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Public-API lint (wired into ``scripts/verify.sh``).
+
+Every name in ``repro.core.__all__`` must (a) import — a stale ``__all__``
+entry is a broken promise — and (b) carry a non-empty docstring when it is a
+class or function (constants are exempt: their meaning is documented where
+they are defined).  Classes are additionally checked for docstrings on their
+public methods, so the Engine surface cannot grow undocumented entry points.
+
+Exit code 0 = clean, 1 = violations (listed on stderr).
+
+Usage:  PYTHONPATH=src python scripts/api_lint.py
+"""
+from __future__ import annotations
+
+import inspect
+import sys
+
+
+def main() -> int:
+    import repro.core as core
+
+    problems: list[str] = []
+    exported = getattr(core, "__all__", None)
+    if not exported:
+        print("api-lint: repro.core has no __all__", file=sys.stderr)
+        return 1
+    for name in exported:
+        try:
+            obj = getattr(core, name)
+        except AttributeError:
+            problems.append(f"{name}: listed in __all__ but not importable")
+            continue
+        if not (inspect.isclass(obj) or inspect.isfunction(obj)):
+            continue  # constants / instances: documented at definition site
+        if not (getattr(obj, "__doc__", None) or "").strip():
+            problems.append(f"{name}: missing docstring")
+            continue
+        if inspect.isclass(obj):
+            for mname, member in vars(obj).items():
+                if mname.startswith("_"):
+                    continue
+                fn = member
+                if isinstance(member, (staticmethod, classmethod)):
+                    fn = member.__func__
+                elif isinstance(member, property):
+                    fn = member.fget
+                if not inspect.isfunction(fn):
+                    continue
+                if fn.__name__ == "<lambda>":
+                    continue  # dataclass field default, not an entry point
+                if not (getattr(fn, "__doc__", None) or "").strip():
+                    problems.append(f"{name}.{mname}: missing docstring")
+    if problems:
+        print(f"api-lint: {len(problems)} violation(s)", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print(f"api-lint: OK ({len(exported)} exported names)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

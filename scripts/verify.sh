@@ -4,10 +4,16 @@
 #   ./scripts/verify.sh          # full: gated tier-1 + bench smoke + docs-check
 #   ./scripts/verify.sh --fast   # gated tier-1 pytest only
 #
+# scripts/api_lint.py gates the public surface first: every name in
+# repro.core.__all__ must import and every exported class/function (and
+# public method) must carry a docstring — the Engine API cannot grow
+# undocumented entry points.
+#
 # The tier-1 suite runs under scripts/coverage_gate.py: pytest -x -q with
 # --durations=10 (slow-test regressions surface in every run) plus a
-# line-coverage floor of 80% over src/repro/core/ — a drop below the floor
-# fails verification.  The bench smoke (~15 s) runs the thread/process/
+# line-coverage floor of 80% over src/repro/core/ (plus a stricter 85%
+# per-file floor on core/api.py, the public surface) — a drop below either
+# floor fails verification.  The bench smoke (~15 s) runs the thread/process/
 # batched/staged/auto-allocated backends end to end and rewrites
 # BENCH_core.json, so the perf plumbing cannot silently rot.  The docs check
 # (scripts/check_links.py) keeps docs/, the root markdown files, and
@@ -17,6 +23,7 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+python scripts/api_lint.py
 python scripts/coverage_gate.py
 
 if [[ "${1:-}" != "--fast" ]]; then

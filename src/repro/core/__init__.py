@@ -39,8 +39,32 @@ from .scheduler import HEURISTICS, Scheduler
 from .runtime import RunReport, StreamRuntime, run_graph, run_pipeline
 from .procrun import ProcessRuntime, UnstagedGraphWarning
 from .shm import ShmReorderRing, ShmSpscRing
+from .api import (
+    ConfigError,
+    Engine,
+    EngineConfig,
+    JobHandle,
+    JobResult,
+    PhysicalPlan,
+    PlannedOp,
+    PlannedStage,
+    ProcessOptions,
+    Session,
+    ThreadOptions,
+)
 
 __all__ = [
+    "ConfigError",
+    "Engine",
+    "EngineConfig",
+    "JobHandle",
+    "JobResult",
+    "PhysicalPlan",
+    "PlannedOp",
+    "PlannedStage",
+    "ProcessOptions",
+    "Session",
+    "ThreadOptions",
     "AtomicFlag",
     "AtomicLong",
     "SerialAssigner",

@@ -129,6 +129,62 @@ def proportional_allocation(
     return widths
 
 
+def graph_flows(
+    nodes: Dict[str, object],
+    edges: Sequence[Tuple[str, str]],
+    cost_priors: Optional[Dict[str, float]] = None,
+):
+    """Predicted per-operator flow profile of a dataflow graph.
+
+    Propagates relative input flow (tuples per source tuple) through the
+    topology — a ``Split`` divides its inbound flow evenly across branches,
+    a ``Merge`` sums — chaining each :class:`~.operators.OpSpec`'s declared
+    selectivity, with ``cost_priors`` overriding declared per-tuple costs.
+    Returns ``(op_rows, routing_names)`` where ``op_rows`` is a list of
+    ``(node_name, spec, flow, cost_us)`` tuples in topological order (op
+    nodes only) and ``routing_names`` lists the Split/Merge node names.
+    Shared by :meth:`.api.Engine.plan` (the plan's per-op load table) and
+    kept here so the plan surface and the allocator price operators with
+    the same :func:`op_cost_us` rule.
+    """
+    names = set(nodes)
+    indeg = {n: 0 for n in names}
+    succ: Dict[str, list] = {n: [] for n in names}
+    for u, v in edges:
+        if u not in names or v not in names:
+            raise ValueError(f"edge ({u!r}, {v!r}) references unknown node")
+        succ[u].append(v)
+        indeg[v] += 1
+    flow = {n: (1.0 if indeg[n] == 0 else 0.0) for n in names}
+    ready = sorted(n for n in names if indeg[n] == 0)
+    order: list = []
+    while ready:
+        n = ready.pop(0)
+        order.append(n)
+        for v in succ[n]:
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                ready.append(v)
+    if len(order) != len(names):
+        raise ValueError("graph has a cycle")
+    op_rows = []
+    routing = []
+    for n in order:
+        spec = nodes[n]
+        if isinstance(spec, OpSpec):
+            out_flow = flow[n] * max(float(spec.selectivity), 0.0)
+            op_rows.append((n, spec, flow[n], op_cost_us(spec, cost_priors)))
+        else:  # Split/Merge: flow passes through (a split divides evenly)
+            routing.append(n)
+            out_flow = flow[n]
+        outs = succ[n]
+        if outs:
+            share = out_flow / len(outs) if len(outs) > 1 else out_flow
+            for v in outs:
+                flow[v] += share
+    return op_rows, routing
+
+
 # --------------------------------------------------------------- cost model
 @dataclass
 class StageProfile:
@@ -235,9 +291,12 @@ class CostModel:
 
     # ------------------------------------------------------------ allocation
     def loads(self) -> List[float]:
+        """Per-stage relative loads (``flow × cost``), allocation's input."""
         return [p.load for p in self.profiles]
 
     def stage_caps(self) -> List[int]:
+        """Per-stage width caps: stateful = 1, keyed = partition count,
+        stateless = effectively unbounded."""
         caps = []
         for plan, prof in zip(self.plans, self.profiles):
             if prof.kind == "stateful":
@@ -260,6 +319,7 @@ class CostModel:
         return proportional_allocation(loads, budget, mins, self.stage_caps())
 
     def describe(self) -> str:
+        """One-line human rendering of the per-stage profiles."""
         return " ".join(
             f"s{p.index}[{p.kind} cost={p.cost_us:.1f}us flow={p.flow:.2f}"
             f"{' meas' if p.measured else ''}]"
@@ -315,6 +375,7 @@ class OccupancyMonitor:
         self.samples = 0  # instrumentation
 
     def due(self, now: float) -> bool:
+        """Whether the next sampling interval has elapsed."""
         return now >= self._next_at
 
     def sample(

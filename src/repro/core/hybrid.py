@@ -31,10 +31,16 @@ Operate = Callable[[int, Hashable, Any], None]
 
 
 class Worklist:
+    """Interface: add(serial, key, item) enqueues; consume(worker, operate,
+    budget) runs up to ``budget`` tuples through ``operate``; len() is the
+    queued-tuple count the scheduler reads."""
+
     def add(self, serial: int, key: Hashable, item: Any) -> None:
+        """Enqueue one keyed tuple under its serial."""
         raise NotImplementedError
 
     def consume(self, worker_id: int, operate: Operate, budget: int) -> int:
+        """Process up to ``budget`` queued tuples; returns how many ran."""
         raise NotImplementedError
 
     def __len__(self) -> int:
@@ -53,9 +59,11 @@ class SharedQueueWorklist(Worklist):
         self.blocked_time = 0.0
 
     def add(self, serial, key, item):
+        """Enqueue on the single shared queue."""
         self._queue.append((serial, key, item))
 
     def consume(self, worker_id, operate, budget):
+        """Dequeue+key-lock atomically (may block on a busy key — §4.1's flaw)."""
         done = 0
         while done < budget:
             t0 = time.perf_counter()
@@ -94,6 +102,7 @@ class PartitionedQueueWorklist(Worklist):
         self._size = AtomicLong(0)
 
     def add(self, serial, key, item):
+        """Enqueue on the tuple's bucket queue."""
         # Count BEFORE publishing: a consumer may process-and-decrement the
         # moment the tuple is visible, and a transiently negative size makes
         # __len__ raise (len() must be >= 0), killing the worker thread.
@@ -101,6 +110,7 @@ class PartitionedQueueWorklist(Worklist):
         self._queues[self._partitioner(key)].append((serial, key, item))
 
     def consume(self, worker_id, operate, budget):
+        """Drain only the buckets this worker statically owns (p % W == w)."""
         done = 0
         my = worker_id % self._num_workers
         for p in range(my, len(self._queues), self._num_workers):
@@ -139,6 +149,7 @@ class HybridQueueWorklist(Worklist):
 
     # fig. 7 addInput
     def add(self, serial, key, item):
+        """Enqueue on the tuple's partition queue + the master queue."""
         p = self._partitioner(key)
         self._size.fetch_add(1)  # before publishing (see PartitionedQueue.add)
         self._partition_queues[p].append((serial, key, item))
@@ -146,6 +157,8 @@ class HybridQueueWorklist(Worklist):
 
     # fig. 7 consumeInputs (+ scheduler budget)
     def consume(self, worker_id, operate, budget):
+        """Fig. 7: first worker into a partition becomes its active worker;
+        losers delegate their tuple to it and move on (never blocking)."""
         done = 0
         while done < budget:
             try:
@@ -186,6 +199,8 @@ def make_worklist(
     partitioner: Callable[[Hashable], int],
     num_workers: int = 1,
 ) -> Worklist:
+    """Build the worklist scheme by name: ``hybrid`` (fig. 7), ``partitioned``
+    (§4.2 static bucket ownership), or ``shared`` (§4.1 single queue)."""
     if scheme == "hybrid":
         return HybridQueueWorklist(num_partitions, partitioner)
     if scheme == "partitioned":

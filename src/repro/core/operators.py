@@ -86,6 +86,7 @@ class OpStats:
         return self.busy_time / self.consumed
 
     def selectivity(self, prior: float) -> float:
+        """Estimated outputs per input (``prior`` until estimates warm up)."""
         if self.consumed < 8:
             return prior
         return self.produced / self.consumed
@@ -155,6 +156,7 @@ class OperatorNode:
 
     # ---- producer side ----------------------------------------------------
     def push(self, value: Any, marker: Optional[_Marker] = None) -> None:
+        """Enqueue one tuple (serial assigned here, in push order)."""
         serial = self._serials.next()
         if self.spec.kind == PARTITIONED:
             key = self.spec.key_fn(value)
@@ -181,6 +183,7 @@ class OperatorNode:
 
     # ---- scheduler interface -----------------------------------------------
     def worklist_size(self) -> int:
+        """Queued tuples awaiting this operator (scheduler's I_i)."""
         if self.spec.kind == PARTITIONED:
             return len(self._worklist)
         if self.batched:
@@ -188,6 +191,8 @@ class OperatorNode:
         return len(self._queue)
 
     def schedulable(self) -> bool:
+        """Whether a worker may be assigned here: queued work exists and the
+        effective parallelism cap ``min(max_dop, dop_cap)`` is not reached."""
         cap = min(self.max_dop, self.dop_cap)
         return self.workers.load() < cap and self.worklist_size() > 0
 
@@ -296,6 +301,7 @@ class OperatorNode:
             self._reorder.send(serial, (outs, out_markers))
 
     def overflow_count(self) -> int:
+        """Serials parked past the reorder window (0 = no overflow)."""
         return 0 if self._reorder is None else self._reorder.parked_count()
 
     def _account(self, dt: float, n_out: int, n_in: int = 1) -> None:

@@ -508,6 +508,8 @@ class GraphPipeline:
 
     # ---- ingress ------------------------------------------------------------
     def push(self, value: Any) -> None:
+        """Push one tuple at the graph ingress (thread-safe; markers are
+        injected here every ``marker_interval`` pushes)."""
         marker = None
         n = self._ingress.fetch_add(1) + 1
         if self._first_push_ts is None:
@@ -572,9 +574,32 @@ class GraphPipeline:
     # ---- metrics ---------------------------------------------------------------
     @property
     def egress_count(self) -> int:
+        """Tuples egressed so far."""
         return self._egress_count
 
+    @property
+    def ingress_count(self) -> int:
+        """Tuples pushed at ingress so far (atomic; any thread may read)."""
+        return self._ingress.load()
+
+    def outputs_since(self, start: int) -> list:
+        """Snapshot of collected outputs from index ``start`` on, taken under
+        the egress lock — the incremental read behind the streaming
+        :class:`~.api.Session`'s ordered ``results()`` iterator (requires
+        ``collect_outputs=True``)."""
+        with self._egress_lock:
+            return self.outputs[start:]
+
+    def consume_outputs(self, n: int) -> None:
+        """Release the first ``n`` collected outputs (under the egress lock).
+        The streaming Session trims its consumed prefix through this so a
+        long-lived session's memory stays bounded by its in-flight window,
+        not its full egress history."""
+        with self._egress_lock:
+            del self.outputs[:n]
+
     def processing_latencies(self, lo: float = 0.2, hi: float = 0.8) -> list[float]:
+        """Marker latencies in the [lo, hi] arrival-percentile window (§7)."""
         with self._markers_lock:
             ms = list(self.markers)
         return percentile_latencies(ms, lo, hi)
@@ -638,8 +663,10 @@ class CompiledPipeline(GraphPipeline):
 
 
 def compile_pipeline(specs: Sequence[OpSpec], **kw) -> CompiledPipeline:
+    """Compile a linear operator chain (``CompiledPipeline(specs, **kw)``)."""
     return CompiledPipeline(specs, **kw)
 
 
 def compile_graph(nodes: Dict[str, NodeSpec], edges, **kw) -> GraphPipeline:
+    """Compile a dataflow DAG (``GraphPipeline(nodes, edges, **kw)``)."""
     return GraphPipeline(nodes, edges, **kw)

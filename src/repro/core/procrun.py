@@ -750,6 +750,7 @@ class ProcessRuntime:
         replan_interval: float = 0.25,
         replan_threshold: float = 0.55,
         replan_patience: int = 3,
+        stage_widths: Optional[Sequence[int]] = None,  # pin a PhysicalPlan's widths
         **_ignored,  # thread-backend knobs (heuristic, ...) have no meaning here
     ):
         self.auto_workers = num_workers == "auto"
@@ -811,6 +812,20 @@ class ProcessRuntime:
         )
         if not self.auto_workers:
             self.cost_model = CostModel(self.stage_plans, self.cost_priors)
+        # Executing a pre-made PhysicalPlan: pin the planner's widths (the
+        # plan was built from the same priors, so this is reproducibility,
+        # not override) and skip the run-time calibration pass — elastic
+        # replanning, when enabled, may still adjust the live widths.
+        self.pinned_widths = list(stage_widths) if stage_widths else None
+        if self.pinned_widths:
+            if len(self.pinned_widths) != len(self.stage_plans):
+                raise ValueError(
+                    f"stage_widths has {len(self.pinned_widths)} entries for "
+                    f"{len(self.stage_plans)} planned stages"
+                )
+            for plan, w in zip(self.stage_plans, self.pinned_widths):
+                if plan.kind != "stateful":
+                    plan.workers = max(int(w), 1)
         if self.worker_budget is None:
             # elastic replanning with flat widths: the budget it may
             # redistribute is exactly what the flat plan spent
@@ -825,6 +840,7 @@ class ProcessRuntime:
         units = max_inflight if max_inflight else 8 * max(num_workers, widest)
         self.max_inflight = min(reorder_size, max(units * self.io_batch, 1))
 
+        self.tail_node_names = sorted(tail_nodes)  # plan introspection
         unstaged_routing = [
             name for name, spec in tail_nodes.items()
             if isinstance(spec, (Split, Merge))
@@ -873,6 +889,7 @@ class ProcessRuntime:
 
     @classmethod
     def from_chain(cls, specs: Sequence[OpSpec], **kw) -> "ProcessRuntime":
+        """Build a runtime for a linear operator chain (names auto-derived)."""
         nodes, edges = _chain_nodes(list(specs))
         return cls(nodes, edges, **kw)
 
@@ -892,6 +909,7 @@ class ProcessRuntime:
     # --------------------------------------------------------------- topology
     @property
     def num_stages(self) -> int:
+        """How many stages the planner cut (1 = ingress-only plan)."""
         return len(self.stage_plans)
 
     def stage_widths(self) -> list[int]:
@@ -1289,6 +1307,139 @@ class ProcessRuntime:
         return preloads
 
     # ------------------------------------------------------------------ drive
+    # The parent-side drive surface is split into a push-driven *stream
+    # protocol* — start_stream() → stream_push()* → end_stream() →
+    # finish_stream() — with run() as the finite-iterable driver on top.
+    # Everything here executes in the caller's thread (the parent is a thin
+    # single-threaded supervisor), so the streaming :class:`~.api.Session`
+    # can interleave pushes with ordered result reads without extra locking:
+    # _service_once() is the one crank that moves dispatch, final-ring
+    # drain, the serial tail, supervision, and elastic replanning forward.
+
+    def start_stream(self) -> None:
+        """Fork the stage worker groups and arm the push-driven protocol.
+
+        Unlike :meth:`run`, no source calibration pass happens here (there
+        is no source yet): ``workers="auto"`` widths come from declared or
+        explicit ``cost_priors`` — elastic replanning, when enabled, refines
+        them live from observed occupancy."""
+        self._setup()
+        self._stream_t0 = time.perf_counter()
+        self._n_in = 0
+        self._src_done = False
+        self._eof_published = False
+        self._monitor_at = self._stream_t0
+        self._stall = 0
+        self._idle = 2e-5
+
+    def _stream_add(self, value: Any) -> None:
+        """Seal one tuple into the stage-0 dispatcher (marker accounting)."""
+        if self._first_push_ts is None:
+            self._first_push_ts = time.perf_counter()
+        self._n_in += 1
+        marker = None
+        if self.marker_interval and self._n_in % self.marker_interval == 0:
+            marker = _Marker(time.perf_counter())
+        self._disp.add(value, marker)
+
+    def stream_push(self, value: Any) -> None:
+        """Push one tuple into the live stream (blocking backpressure).
+
+        When the dispatcher's intake gate is closed (in-flight window full or
+        out-queues backed up), services the pipeline until space frees — so a
+        fast producer is throttled to the pipeline's pace instead of growing
+        an unbounded parent-side queue.  Worker/router failures surface here
+        (and in :meth:`finish_stream`) as ``RuntimeError``."""
+        if self._src_done:
+            raise RuntimeError("stream input already closed (end_stream)")
+        spin = _IDLE_MIN
+        while not self._disp.ready():
+            if self._service_once():
+                spin = _IDLE_MIN
+            else:
+                time.sleep(spin)
+                spin = min(spin * 2, self.parent_idle_cap)
+        self._stream_add(value)
+
+    def end_stream(self) -> None:
+        """Close the stream's input side: flush partial dispatch units and
+        let the in-band EOF cascade begin once the queues drain."""
+        if not self._src_done:
+            self._src_done = True
+            self._disp.flush()
+
+    def _service_once(self) -> bool:
+        """One supervisor crank: dispatch sealed units, publish EOF when the
+        input side is done, drain the final reorder ring (running the serial
+        tail), and run periodic supervision (child pipes, crash re-fork,
+        elastic replanning).  Returns True if anything moved."""
+        progress = False
+        disp = self._disp
+        if disp.pump():
+            progress = True
+        if self._src_done and not self._eof_published and not disp.pending():
+            if disp.publish_eof():
+                self._eof_published = True
+                progress = True
+        if self._drain_final():
+            progress = True
+        if progress and self._tail is not None:
+            self._pump_tail()
+        now = time.perf_counter()
+        if now >= self._monitor_at:
+            self._monitor_at = now + 0.02
+            self._drain_conns()
+            self._check_procs()
+            if self._monitor is not None or self._active_replan:
+                self._drive_elastic(now, self._src_done)
+        if progress:
+            self._stall = 0
+        else:
+            self._stall += 1
+            if self._stall >= 50:
+                disp.stall_flush()  # liveness: see _Dispatcher
+                self._stall = 0
+        return progress
+
+    def stream_drained(self) -> bool:
+        """True once the in-band EOF reached the parent and the serial tail
+        (if any) is quiescent — i.e. every pushed tuple has egressed."""
+        if not self._eof_seen:
+            return False
+        if self._tail is None:
+            return True
+        self._pump_tail()
+        return self._tail.drained()
+
+    def finish_stream(self, drain_timeout: float = 60.0) -> RunReport:
+        """Drain the closed stream to quiescence, tear down, and report."""
+        self.end_stream()
+        deadline = time.perf_counter() + drain_timeout
+        try:
+            while not self.stream_drained():
+                if self._service_once():
+                    self._idle = 2e-5
+                    continue
+                if time.perf_counter() > deadline:
+                    raise TimeoutError("process pipeline failed to drain")
+                # back off while the stages grind: a busy-polling parent
+                # steals the very cores the worker groups need
+                time.sleep(self._idle)
+                self._idle = min(self._idle * 2, self.parent_idle_cap)
+        finally:
+            self.stop()
+        wall = time.perf_counter() - self._stream_t0
+        return self._report(self._n_in, wall)
+
+    def collected_outputs(self) -> list:
+        """The live ordered output list (``collect_outputs=True``): the
+        tail pipeline's when a serial tail exists, else the parent's own.
+        Parent-side state mutated only by the caller's thread, so streaming
+        readers may index into it between :meth:`_service_once` cranks."""
+        if self._tail is not None:
+            return self._tail.outputs
+        return self.outputs
+
     def run(
         self,
         source: Iterable,
@@ -1296,11 +1447,15 @@ class ProcessRuntime:
         drain: bool = True,
         drain_timeout: float = 60.0,
     ) -> RunReport:
+        """Drive a finite ``source`` to drain and report — the one-shot
+        driver over the stream protocol above (plus the ``workers="auto"``
+        calibration pass, which needs the source's first tuples)."""
         src = iter(source)
         if (
             self.auto_workers
             and self.cost_priors is None
             and self.calibrate_tuples > 0
+            and self.pinned_widths is None
         ):
             # calibration pass: profile the operator fns on a buffered prefix
             # of the real stream (dry run, state discarded), then re-allocate
@@ -1319,89 +1474,41 @@ class ProcessRuntime:
                     )
             if sample:
                 src = itertools.chain(sample, src)
-        self._setup()
-        t0 = time.perf_counter()
-        n_in = 0
-        src_done = False
-        eof_published = False
+        self.start_stream()
         deadline = None
-        monitor_at = t0
-        disp = self._disp
-        stall = 0
-        idle = 2e-5
-
         try:
             while True:
                 progress = False
-
                 # -- intake: seal source tuples into stage-0 units -----------
-                while not src_done and disp.ready():
+                while not self._src_done and self._disp.ready():
                     try:
                         value = next(src)
                     except StopIteration:
-                        src_done = True
-                        disp.flush()
+                        self.end_stream()
                         deadline = time.perf_counter() + drain_timeout
                         break
-                    if self._first_push_ts is None:
-                        self._first_push_ts = time.perf_counter()
-                    n_in += 1
-                    marker = None
-                    if self.marker_interval and n_in % self.marker_interval == 0:
-                        marker = _Marker(time.perf_counter())
-                    disp.add(value, marker)
+                    self._stream_add(value)
                     progress = True
-
-                # -- dispatch sealed units to stage-0 rings ------------------
-                if disp.pump():
+                if self._service_once():
                     progress = True
-                if src_done and not eof_published and not disp.pending():
-                    if disp.publish_eof():
-                        eof_published = True
-                        progress = True
-
-                # -- drain the final reorder ring in serial order ------------
-                if self._drain_final():
-                    progress = True
-                if progress and self._tail is not None:
-                    self._pump_tail()
-
-                # -- supervision (periodic) ----------------------------------
-                now = time.perf_counter()
-                if now >= monitor_at:
-                    monitor_at = now + 0.02
-                    self._drain_conns()
-                    self._check_procs()
-                    if self._monitor is not None or self._active_replan:
-                        self._drive_elastic(now, src_done)
-
                 # -- termination ---------------------------------------------
-                if self._eof_seen:
-                    if self._tail is None or self._tail.drained():
-                        break
-                    self._pump_tail()
-                    if self._tail.drained():
-                        break
-                if not drain and src_done:
+                if self._eof_seen and self.stream_drained():
+                    break
+                if not drain and self._src_done:
                     break
                 if progress:
-                    stall = 0
-                    idle = 2e-5
+                    self._idle = 2e-5
                 else:
-                    stall += 1
-                    if stall == 50:
-                        disp.stall_flush()  # liveness: see _Dispatcher
-                        stall = 0
                     if deadline is not None and time.perf_counter() > deadline:
                         raise TimeoutError("process pipeline failed to drain")
                     # back off while the stages grind: a busy-polling parent
                     # steals the very cores the worker groups need
-                    time.sleep(idle)
-                    idle = min(idle * 2, self.parent_idle_cap)
+                    time.sleep(self._idle)
+                    self._idle = min(self._idle * 2, self.parent_idle_cap)
         finally:
             self.stop()
-        wall = time.perf_counter() - t0
-        return self._report(n_in, wall)
+        wall = time.perf_counter() - self._stream_t0
+        return self._report(self._n_in, wall)
 
     def _drain_final(self, limit: int = 256) -> bool:
         progress = False
@@ -1468,11 +1575,13 @@ class ProcessRuntime:
     # ----------------------------------------------------------------- report
     @property
     def egress_count(self) -> int:
+        """Tuples egressed so far (tail-aware)."""
         if self._tail is not None:
             return self._tail.egress_count
         return self._egress_count
 
     def processing_latencies(self, lo: float = 0.2, hi: float = 0.8) -> list:
+        """Marker latencies in the [lo, hi] arrival-percentile window (§7)."""
         ms = self.markers if self._tail is None else self._tail.markers
         return percentile_latencies(ms, lo, hi)
 

@@ -60,6 +60,7 @@ class ReorderBuffer:
     """Common interface: send(t, output) -> bool; drains via send_downstream."""
 
     def send(self, t: int, output: Any) -> bool:  # pragma: no cover - interface
+        """Admit serial ``t``'s output bundle; False = retry later (back-pressure)."""
         raise NotImplementedError
 
     def send_blocking(self, t: int, output: Any, spin: float = 1e-6) -> None:
@@ -89,6 +90,7 @@ class LockBasedReorderBuffer(ReorderBuffer):
         self.blocked_time = 0.0
 
     def send(self, t: int, output: Any) -> bool:
+        """Admit serial ``t`` under the global lock; always succeeds."""
         t0 = time.perf_counter()
         with self._lock:
             self.blocked_time += time.perf_counter() - t0
@@ -123,11 +125,14 @@ class NonBlockingReorderBuffer(ReorderBuffer):
         self.rejected_adds = 0  # entry-condition failures (ring full for t)
 
     def accepts(self, t: int) -> bool:
+        """Entry condition ``next <= t < next + size`` (no side effects)."""
         n = self._next.load()
         return n <= t < n + self._size
 
     # -- paper fig. 4 ------------------------------------------------------
     def send(self, t: int, output: Any) -> bool:
+        """Try to admit serial ``t`` (entry condition ``next <= t < next+s``),
+        then drain the contiguous ready prefix; False = window full, retry."""
         success = self._try_add(t, output)
         self._send_pending_outputs()
         return success
@@ -187,6 +192,8 @@ class ParkingReorderBuffer:
         self._lock = threading.Lock()
 
     def send(self, t: int, output: Any) -> None:
+        """Admit serial ``t``, parking it (never blocking, never failing) if
+        the inner ring's window cannot accept it yet."""
         if not self._inner.send(t, output):
             with self._lock:
                 self._parked[t] = output
@@ -194,6 +201,7 @@ class ParkingReorderBuffer:
         self.flush()
 
     def flush(self) -> None:
+        """Re-send parked serials the advancing window can now accept."""
         while True:
             with self._lock:
                 while self._heap and self._heap[0] not in self._parked:
@@ -215,6 +223,7 @@ class ParkingReorderBuffer:
             # window advanced during the re-park: retry, we may be last
 
     def parked_count(self) -> int:
+        """How many serials are currently parked (0 = fully drained)."""
         with self._lock:
             return len(self._parked)
 
@@ -222,6 +231,8 @@ class ParkingReorderBuffer:
 def make_reorder_buffer(
     scheme: str, send_downstream: Callable[[Any], None], size: int = 1024
 ) -> ReorderBuffer:
+    """Build the reorder scheme by name: ``non_blocking`` (fig. 4, bounded
+    ring of ``size`` serials) or ``lock_based`` (fig. 2)."""
     if scheme == "non_blocking":
         return NonBlockingReorderBuffer(send_downstream, size=size)
     if scheme == "lock_based":

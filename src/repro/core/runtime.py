@@ -46,6 +46,12 @@ class RunReport:
 
 
 class StreamRuntime:
+    """Threaded execution backend: ``num_workers`` worker threads pulling
+    (operator, budget) assignments from a central :class:`~.scheduler
+    .Scheduler` to drive a compiled :class:`~.pipeline.GraphPipeline`;
+    ``heuristic="adaptive"`` adds the controller thread that periodically
+    remaps per-operator parallelism caps (paper §2.2/§6)."""
+
     def __init__(
         self,
         pipeline: GraphPipeline,
@@ -64,6 +70,11 @@ class StreamRuntime:
         self._threads: list[threading.Thread] = []
         self._controller: Optional[threading.Thread] = None
         self._busy = [0.0] * num_workers
+        # First operator-fn exception seen by any worker.  A raising op kills
+        # its worker thread and strands the in-flight tuple, so the pipeline
+        # can never drain; recording it lets run()/Session raise a clear
+        # error instead of hanging until the drain deadline.
+        self.worker_error: Optional[BaseException] = None
 
     # ------------------------------------------------------------------ workers
     _IDLE_MIN = 1e-5  # first miss: 10 µs
@@ -86,9 +97,12 @@ class StreamRuntime:
             t0 = time.perf_counter()
             try:
                 node.work(wid, budget)
+            except BaseException as exc:  # noqa: BLE001 — recorded, not lost
+                self.worker_error = exc
+                return  # this worker is done; drivers observe worker_error
             finally:
                 self.scheduler.release(node)
-            self._busy[wid] += time.perf_counter() - t0
+                self._busy[wid] += time.perf_counter() - t0
 
     def _controller_loop(self) -> None:
         """Adaptive controller (heuristic="adaptive"): periodically re-estimate
@@ -98,6 +112,7 @@ class StreamRuntime:
             self._stop.wait(self.scheduler.adapt_interval)
 
     def start(self) -> None:
+        """Start the worker threads (and the adaptive controller, if any)."""
         self._stop.clear()
         self._threads = [
             threading.Thread(target=self._worker_loop, args=(w,), daemon=True)
@@ -112,6 +127,7 @@ class StreamRuntime:
             self._controller.start()
 
     def stop(self) -> None:
+        """Signal and join every worker thread (idempotent)."""
         self._stop.set()
         for t in self._threads:
             t.join(timeout=5.0)
@@ -139,12 +155,22 @@ class StreamRuntime:
             if drain:
                 deadline = time.perf_counter() + drain_timeout
                 while not self.pipeline.drained():
+                    if self.worker_error is not None:
+                        raise RuntimeError(
+                            f"worker failed: {self.worker_error!r}"
+                        ) from self.worker_error
                     if time.perf_counter() > deadline:
                         raise TimeoutError("pipeline failed to drain")
                     time.sleep(1e-4)
         finally:
             self.stop()
-        wall = time.perf_counter() - t0
+        return self.make_report(n_in, time.perf_counter() - t0)
+
+    def make_report(self, n_in: int, wall: float) -> RunReport:
+        """Summarize a finished (stopped, drained) run over ``wall`` seconds
+        and ``n_in`` ingress tuples.  Factored out of :meth:`run` so the
+        streaming :class:`~.api.Session` surface can report on a
+        push-driven window with the exact same conventions."""
         lats = self.pipeline.processing_latencies()
         lats_sorted = sorted(lats)
         mean_lat = sum(lats) / len(lats) if lats else 0.0
@@ -166,144 +192,51 @@ class StreamRuntime:
         )
 
 
-def run_pipeline(
-    specs,
-    source: Iterable,
-    *,
-    num_workers=4,  # int, or "auto" for cost-model-driven allocation
-    heuristic: str = "ct",
-    reorder_scheme: str = "non_blocking",
-    worklist_scheme: str = "hybrid",
-    collect_outputs: bool = False,
-    marker_interval: int = 64,
-    backend: str = "thread",
-    batch_size: int = 1,
-    reorder_size: int = 1024,
-    cost_priors=None,  # {op name: cost_us} overriding declared priors
-    **kw,
-) -> tuple[CompiledPipeline, RunReport]:
-    """Convenience one-shot: compile, run to drain, report.
+def _deprecated_one_shot(name: str) -> None:
+    import warnings
 
-    ``backend="process"`` runs the chain on :class:`~.procrun.ProcessRuntime`
-    (staged OS-process worker groups + shared-memory exchange rings; same
-    ordered semantics).  The returned "pipeline" is then the runtime itself,
-    which exposes the same result surface (``outputs``, ``egress_count``,
-    ``markers``).  ``batch_size > 1`` enables the threaded path's
-    micro-batched tuple flow and doubles as the process backend's dispatch
-    unit size (``io_batch``) when the latter is not given.
+    warnings.warn(
+        f"{name}() is deprecated; use repro.core.Engine — "
+        "engine = Engine(EngineConfig(...)); plan = engine.plan(...); "
+        "engine.run(plan, source) (or engine.open(plan) for streaming)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
-    ``num_workers="auto"`` sizes parallelism from the cost model
-    (:mod:`.costmodel`): the process backend divides a ``worker_budget``
-    (default cores + 1, via ``**kw``) across its stages in proportion to
-    predicted load — from ``cost_priors`` or a short calibration pass — and
-    elastically replans live when observed occupancy drifts; the thread
-    backend resolves it to one worker per core and feeds ``cost_priors`` to
-    the scheduler.  Process-only knobs ride ``**kw``: ``stages`` (max process
-    stages; ``1`` = ingress-only plan), ``io_batch``, ``max_inflight``,
-    ``worker_budget``, ``elastic``, ``replan_interval``, ring geometry.
+
+def run_pipeline(specs, source: Iterable, **kw):
+    """Deprecated one-shot: compile an operator chain, run to drain, report.
+
+    Thin shim over the :class:`~.api.Engine` path — ``kw`` is parsed by
+    :meth:`~.api.EngineConfig.from_kwargs` (unknown or conflicting options
+    raise :class:`~.api.ConfigError` instead of being silently swallowed)
+    and the run goes through ``Engine.run``.  Returns ``(handle, report)``
+    where ``handle`` is a :class:`~.api.JobResult`-backed proxy exposing the
+    documented result surface (``outputs``, ``egress_count``, ``markers``)
+    identically for both backends, plus pass-through access to the
+    underlying executed pipeline/runtime.  New code should call
+    :class:`~.api.Engine` directly (``engine.plan`` → ``engine.run`` /
+    ``engine.open``).
     """
-    if backend == "process":
-        from .procrun import _chain_nodes
+    from .api import Engine, EngineConfig
 
-        return run_graph(
-            *_chain_nodes(list(specs)),
-            source,
-            num_workers=num_workers,
-            heuristic=heuristic,
-            reorder_scheme=reorder_scheme,
-            worklist_scheme=worklist_scheme,
-            collect_outputs=collect_outputs,
-            marker_interval=marker_interval,
-            backend=backend,
-            batch_size=batch_size,
-            reorder_size=reorder_size,
-            cost_priors=cost_priors,
-            **kw,
-        )
-    if backend != "thread":
-        raise ValueError(f"unknown backend {backend!r} (thread | process)")
-    num_workers = resolve_workers(num_workers)
-    pipe = CompiledPipeline(
-        specs,
-        reorder_scheme=reorder_scheme,
-        worklist_scheme=worklist_scheme,
-        num_workers=num_workers,
-        collect_outputs=collect_outputs,
-        marker_interval=marker_interval,
-        batch_size=batch_size,
-        reorder_size=reorder_size,
-    )
-    rt = StreamRuntime(
-        pipe, num_workers=num_workers, heuristic=heuristic,
-        cost_priors=cost_priors, **kw,
-    )
-    report = rt.run(source)
-    return pipe, report
+    _deprecated_one_shot("run_pipeline")
+    engine = Engine(EngineConfig.from_kwargs(**kw))
+    result = engine.run(list(specs), source)
+    return result.handle(), result.report
 
 
-def run_graph(
-    nodes,
-    edges,
-    source: Iterable,
-    *,
-    num_workers=4,  # int, or "auto" for cost-model-driven allocation
-    heuristic: str = "ct",
-    reorder_scheme: str = "non_blocking",
-    worklist_scheme: str = "hybrid",
-    collect_outputs: bool = False,
-    marker_interval: int = 64,
-    backend: str = "thread",
-    batch_size: int = 1,
-    reorder_size: int = 1024,
-    cost_priors=None,  # {op name: cost_us} overriding declared priors
-    **kw,
-) -> tuple[GraphPipeline, RunReport]:
-    """Convenience one-shot for DAG pipelines: compile, run to drain, report.
+def run_graph(nodes, edges, source: Iterable, **kw):
+    """Deprecated one-shot for DAG pipelines: compile, run to drain, report.
 
-    ``backend="process"`` cuts the graph's linear prefix into process stages
-    at partitioned/stateful boundaries (shared-memory exchange edges between
-    worker groups) and executes any uncuttable remainder in the parent in
-    serial order (see :mod:`.procrun`; a :class:`~.procrun.UnstagedGraphWarning`
-    is emitted when routing nodes land in that tail); semantics are
-    unchanged.  ``stages=1`` (via ``**kw``) restores the ingress-only plan;
-    ``num_workers="auto"`` enables cost-model worker allocation + elastic
-    replanning (see :func:`run_pipeline`).
+    Thin shim over the :class:`~.api.Engine` path (see :func:`run_pipeline`
+    for the shim contract); ``backend="process"`` cuts the graph's linear
+    prefix into process stages exactly as before, and routing nodes left in
+    the parent tail still emit :class:`~.procrun.UnstagedGraphWarning`.
     """
-    if backend == "process":
-        from .procrun import ProcessRuntime
+    from .api import Engine, EngineConfig
 
-        rt = ProcessRuntime(
-            nodes,
-            edges,
-            num_workers=num_workers,
-            collect_outputs=collect_outputs,
-            marker_interval=marker_interval,
-            batch_size=batch_size,
-            reorder_scheme=reorder_scheme,
-            worklist_scheme=worklist_scheme,
-            reorder_size=reorder_size,
-            cost_priors=cost_priors,
-            **kw,
-        )
-        report = rt.run(source)
-        return rt, report
-    if backend != "thread":
-        raise ValueError(f"unknown backend {backend!r} (thread | process)")
-    num_workers = resolve_workers(num_workers)
-    pipe = GraphPipeline(
-        nodes,
-        edges,
-        reorder_scheme=reorder_scheme,
-        worklist_scheme=worklist_scheme,
-        num_workers=num_workers,
-        collect_outputs=collect_outputs,
-        marker_interval=marker_interval,
-        batch_size=batch_size,
-        reorder_size=reorder_size,
-    )
-    rt = StreamRuntime(
-        pipe, num_workers=num_workers, heuristic=heuristic,
-        cost_priors=cost_priors, **kw,
-    )
-    report = rt.run(source)
-    return pipe, report
+    _deprecated_one_shot("run_graph")
+    engine = Engine(EngineConfig.from_kwargs(**kw))
+    result = engine.run((dict(nodes), list(edges)), source)
+    return result.handle(), result.report

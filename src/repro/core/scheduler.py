@@ -126,6 +126,24 @@ class Scheduler:
             n.worklist_size() == 0 and n.workers.load() == 0 for n in self.nodes
         )
 
+    def snapshot(self) -> List[dict]:
+        """Live per-operator scheduling state, one dict per node: name,
+        queued work, allotted workers, effective parallelism cap, and the
+        current cost/selectivity estimates.  The introspection feed behind
+        :meth:`.api.Session.stats` on the thread backend."""
+        out = []
+        for i, n in enumerate(self.nodes):
+            out.append({
+                "op": n.spec.name,
+                "kind": n.spec.kind,
+                "worklist": n.worklist_size(),
+                "workers": n.workers.load(),
+                "dop_cap": min(n.dop_cap, n.max_dop),
+                "cost_us": self._cost(i) * 1e6,
+                "selectivity": self._selectivity(i),
+            })
+        return out
+
     # ---------------------------------------------------------------- acquire
     def acquire(self) -> Optional[Tuple[OperatorNode, int]]:
         """Pick (node, tuple budget) for a worker, or None if nothing to do."""
@@ -138,6 +156,7 @@ class Scheduler:
             return node, self._budget(idx)
 
     def release(self, node: OperatorNode) -> None:
+        """Return a worker's allotment after its :meth:`acquire` time slice."""
         node.workers.fetch_sub(1)
 
     # ------------------------------------------------------------- controller

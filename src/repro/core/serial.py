@@ -20,21 +20,25 @@ class AtomicLong:
         self._lock = threading.Lock()
 
     def load(self) -> int:
+        """Read the current value (linearizable)."""
         # int reads are atomic under the GIL; take the lock anyway so the
         # semantics do not depend on CPython implementation details.
         with self._lock:
             return self._value
 
     def fetch_add(self, delta: int = 1) -> int:
+        """Atomically add ``delta``; returns the PREVIOUS value."""
         with self._lock:
             old = self._value
             self._value += delta
             return old
 
     def fetch_sub(self, delta: int = 1) -> int:
+        """Atomically subtract ``delta``; returns the PREVIOUS value."""
         return self.fetch_add(-delta)
 
     def store(self, value: int) -> None:
+        """Atomically overwrite the value."""
         with self._lock:
             self._value = value
 
@@ -60,6 +64,7 @@ class AtomicFlag:
         return not self._lock.acquire(blocking=False)
 
     def clear(self) -> None:
+        """Release the flag so the next ``test_and_set`` succeeds."""
         self._lock.release()
 
 
@@ -72,7 +77,9 @@ class SerialAssigner:
         self._counter = AtomicLong(start)
 
     def next(self) -> int:
+        """Claim and return the next serial number."""
         return self._counter.fetch_add(1)
 
     def peek(self) -> int:
+        """The serial the next :meth:`next` call would return (no claim)."""
         return self._counter.load()

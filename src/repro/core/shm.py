@@ -163,9 +163,9 @@ class ShmSpscRing:
         self._head = 0  # consumer-side mirror
         self.name = self._shm.name
 
-    # max payload bytes of a single record
     @property
     def capacity_bytes(self) -> int:
+        """Max payload bytes a single record can carry (span limit)."""
         return (self.slots - 1) * self.slot_bytes - self._REC.size
 
     # -- counters (aligned 8-byte single-writer stores) ---------------------
@@ -217,6 +217,7 @@ class ShmSpscRing:
         self._store(24, 1)
 
     def handoff_requested(self) -> bool:
+        """Whether the supervisor flagged an elastic state handoff."""
         return self._load(24) != 0
 
     def reopen_ring(self) -> None:
@@ -285,6 +286,7 @@ class ShmSpscRing:
         return serial, tag, data
 
     def closed(self) -> bool:
+        """Producer-side EOF flag: drain what is left, then stop."""
         return self._load(16) != 0
 
     def __len__(self) -> int:  # records are >=1 slot; used as emptiness hint
@@ -292,10 +294,12 @@ class ShmSpscRing:
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
+        """Detach this process's mapping (does not free the segment)."""
         self._buf = None
         self._shm.close()
 
     def unlink(self) -> None:
+        """Free the shared-memory segment (idempotent)."""
         try:
             self._shm.unlink()
         except FileNotFoundError:
@@ -359,6 +363,9 @@ class ShmReorderRing:
         return _I8.unpack_from(self._buf, 0)[0]
 
     def try_publish(self, t: int, tag: int, data: bytes, span: int = 1) -> int:
+        """Publish serial ``t``'s result slot (covering ``span`` serials).
+        Returns ``PUBLISHED``, ``FULL`` (window not there yet — retry), or
+        ``STALE`` (already drained: crash replay — drop)."""
         n = self.shared_next()
         if t < n:
             return self.STALE
@@ -408,6 +415,7 @@ class ShmReorderRing:
 
     @property
     def next_serial(self) -> int:
+        """Drainer-side mirror of the next serial to consume."""
         return self._next
 
     def published(self, t: int) -> bool:
@@ -430,6 +438,7 @@ class ShmReorderRing:
         _I8.pack_into(self._buf, 8, 1)
 
     def stopped(self) -> bool:
+        """Teardown flag: publishers/drainers must abandon the stream."""
         return _I8.unpack_from(self._buf, 8)[0] != 0
 
     # -- group-width metadata (supervisor-owned, any process may read) ------
@@ -439,14 +448,17 @@ class ShmReorderRing:
         _I8.pack_into(self._buf, 16, w)
 
     def active_width(self) -> int:
+        """The stage's live worker-group width (supervisor-published)."""
         return _I8.unpack_from(self._buf, 16)[0]
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
+        """Detach this process's mapping (does not free the segment)."""
         self._buf = None
         self._shm.close()
 
     def unlink(self) -> None:
+        """Free the shared-memory segment (idempotent)."""
         try:
             self._shm.unlink()
         except FileNotFoundError:

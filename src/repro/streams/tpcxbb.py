@@ -273,21 +273,32 @@ def run_query(
     declared per-op cost/selectivity priors (table 1 carries them on every
     ``OpSpec``) via :mod:`repro.core.costmodel` — the skew-aware allocation
     a hot ``sessionize``/``basket_pairs`` stage wants; ``cost_priors=``
-    ``{op name: cost_us}`` overrides the declared numbers.  Returns
-    ``(pipeline_or_runtime, RunReport)``."""
-    from repro.core import run_pipeline
+    ``{op name: cost_us}`` overrides the declared numbers.
+
+    Runs natively on the :class:`repro.core.Engine` surface (``**kw`` is
+    parsed strictly by :meth:`repro.core.EngineConfig.from_kwargs`, so typos
+    raise :class:`repro.core.ConfigError`); returns ``(handle, RunReport)``
+    where ``handle`` exposes the uniform result surface (``outputs``,
+    ``egress_count``, ``markers``) plus backend introspection pass-through.
+    For plan inspection without running, build the engine yourself::
+
+        engine = Engine(EngineConfig.from_kwargs(backend="process",
+                                                 num_workers="auto"))
+        print(engine.plan(QUERIES["q2"](n=1)[0]).explain())
+    """
+    from repro.core import Engine, EngineConfig
 
     specs, src = QUERIES[name](n=n, seed=seed)
-    return run_pipeline(
-        specs,
-        src,
+    engine = Engine(EngineConfig.from_kwargs(
         backend=backend,
         num_workers=num_workers,
         batch_size=batch_size,
         heuristic=heuristic,
         cost_priors=cost_priors,
         **kw,
-    )
+    ))
+    result = engine.run(specs, src)
+    return result.handle(), result.report
 
 
 # ------------------------------------------------------------------ DAG forms
