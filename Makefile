@@ -1,5 +1,5 @@
 # Convenience targets; the source of truth is scripts/verify.sh (ROADMAP.md).
-.PHONY: verify test bench docs-check
+.PHONY: verify test bench analyze docs-check
 
 verify:
 	./scripts/verify.sh
@@ -9,6 +9,9 @@ test:
 
 bench:
 	PYTHONPATH=src python -m benchmarks.bench_core
+
+analyze:
+	PYTHONPATH=src python -m repro.analysis --check
 
 docs-check:
 	python scripts/check_links.py

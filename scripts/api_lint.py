@@ -1,11 +1,12 @@
 #!/usr/bin/env python
 """Public-API lint (wired into ``scripts/verify.sh``).
 
-Every name in ``repro.core.__all__`` must (a) import — a stale ``__all__``
-entry is a broken promise — and (b) carry a non-empty docstring when it is a
-class or function (constants are exempt: their meaning is documented where
-they are defined).  Classes are additionally checked for docstrings on their
-public methods, so the Engine surface cannot grow undocumented entry points.
+Every name in ``repro.core.__all__`` and ``repro.analysis.__all__`` must
+(a) import — a stale ``__all__`` entry is a broken promise — and (b) carry a
+non-empty docstring when it is a class or function (constants are exempt:
+their meaning is documented where they are defined).  Classes are
+additionally checked for docstrings on their public methods, so the Engine
+and analysis surfaces cannot grow undocumented entry points.
 
 Exit code 0 = clean, 1 = violations (listed on stderr).
 
@@ -17,24 +18,25 @@ import inspect
 import sys
 
 
-def main() -> int:
-    import repro.core as core
-
-    problems: list[str] = []
-    exported = getattr(core, "__all__", None)
+def _lint_module(mod, problems: list) -> int:
+    """Lint one module's ``__all__``; returns the number of exported names."""
+    label = mod.__name__
+    exported = getattr(mod, "__all__", None)
     if not exported:
-        print("api-lint: repro.core has no __all__", file=sys.stderr)
-        return 1
+        problems.append(f"{label}: has no __all__")
+        return 0
     for name in exported:
         try:
-            obj = getattr(core, name)
+            obj = getattr(mod, name)
         except AttributeError:
-            problems.append(f"{name}: listed in __all__ but not importable")
+            problems.append(
+                f"{label}.{name}: listed in __all__ but not importable"
+            )
             continue
         if not (inspect.isclass(obj) or inspect.isfunction(obj)):
             continue  # constants / instances: documented at definition site
         if not (getattr(obj, "__doc__", None) or "").strip():
-            problems.append(f"{name}: missing docstring")
+            problems.append(f"{label}.{name}: missing docstring")
             continue
         if inspect.isclass(obj):
             for mname, member in vars(obj).items():
@@ -50,13 +52,22 @@ def main() -> int:
                 if fn.__name__ == "<lambda>":
                     continue  # dataclass field default, not an entry point
                 if not (getattr(fn, "__doc__", None) or "").strip():
-                    problems.append(f"{name}.{mname}: missing docstring")
+                    problems.append(f"{label}.{name}.{mname}: missing docstring")
+    return len(exported)
+
+
+def main() -> int:
+    import repro.analysis as analysis
+    import repro.core as core
+
+    problems: list[str] = []
+    total = _lint_module(core, problems) + _lint_module(analysis, problems)
     if problems:
         print(f"api-lint: {len(problems)} violation(s)", file=sys.stderr)
         for p in problems:
             print(f"  {p}", file=sys.stderr)
         return 1
-    print(f"api-lint: OK ({len(exported)} exported names)")
+    print(f"api-lint: OK ({total} exported names)")
     return 0
 
 

@@ -1,5 +1,6 @@
 #!/usr/bin/env python
-"""Tier-1 test run with a line-coverage floor over ``src/repro/core/``.
+"""Tier-1 test run with a line-coverage floor over ``src/repro/core/`` and
+``src/repro/analysis/`` (each package must clear the floor on its own).
 
 The container has neither ``coverage`` nor ``pytest-cov``, so this gate
 implements just enough with the stdlib: a ``sys.settrace`` line tracer
@@ -29,6 +30,10 @@ import uuid
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 CORE_DIR = os.path.join(REPO, "src", "repro", "core")
+ANALYSIS_DIR = os.path.join(REPO, "src", "repro", "analysis")
+# Each gated package must independently clear the floor: a well-covered core
+# cannot paper over an untested analysis pass (or vice versa).
+GATED_DIRS = [CORE_DIR, ANALYSIS_DIR]
 DEFAULT_FLOOR = 80.0
 # Stricter per-file floors: the public Engine surface (core/api.py) must stay
 # well-exercised even if the aggregate floor would tolerate a gap there.
@@ -117,8 +122,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     global _core_files, _dump_dir
-    core_paths = sorted(glob.glob(os.path.join(CORE_DIR, "*.py")))
-    _core_files = frozenset(core_paths)
+    gated_paths = {
+        d: sorted(glob.glob(os.path.join(d, "*.py"))) for d in GATED_DIRS
+    }
+    _core_files = frozenset(p for paths in gated_paths.values() for p in paths)
     _dump_dir = tempfile.mkdtemp(prefix="repro_cov_")
     # Watchdog headroom: line tracing slows the hot core paths, so the
     # conftest scales per-test limits by this factor under the gate.
@@ -147,32 +154,37 @@ def main(argv=None) -> int:
     except OSError:
         pass
 
-    print(f"\ncoverage gate: src/repro/core/ (floor {args.floor:.0f}%)")
-    total_exec = total_hit = 0
     file_failures = []
-    for path in core_paths:
-        execable = _executable_lines(path)
-        hit = {ln for (fn, ln) in _hits if fn == path} & execable
-        total_exec += len(execable)
-        total_hit += len(hit)
-        pct = 100.0 * len(hit) / len(execable) if execable else 100.0
-        file_floor = PER_FILE_FLOORS.get(os.path.basename(path))
-        mark = ""
-        if file_floor is not None:
-            mark = f"  (file floor {file_floor:.0f}%)"
-            if pct < file_floor:
-                file_failures.append((path, pct, file_floor))
-        print(f"  {os.path.relpath(path, REPO):<38} "
-              f"{len(hit):>5}/{len(execable):<5} {pct:6.1f}%{mark}")
-    agg = 100.0 * total_hit / total_exec if total_exec else 100.0
-    print(f"  {'TOTAL':<38} {total_hit:>5}/{total_exec:<5} {agg:6.1f}%")
-    failed = agg < args.floor
-    if failed:
-        print(f"coverage gate: FAIL — {agg:.1f}% < floor {args.floor:.0f}%")
+    pkg_failures = []
+    for pkg_dir, paths in gated_paths.items():
+        rel_pkg = os.path.relpath(pkg_dir, REPO)
+        print(f"\ncoverage gate: {rel_pkg}/ (floor {args.floor:.0f}%)")
+        total_exec = total_hit = 0
+        for path in paths:
+            execable = _executable_lines(path)
+            hit = {ln for (fn, ln) in _hits if fn == path} & execable
+            total_exec += len(execable)
+            total_hit += len(hit)
+            pct = 100.0 * len(hit) / len(execable) if execable else 100.0
+            file_floor = PER_FILE_FLOORS.get(os.path.basename(path))
+            mark = ""
+            if file_floor is not None:
+                mark = f"  (file floor {file_floor:.0f}%)"
+                if pct < file_floor:
+                    file_failures.append((path, pct, file_floor))
+            print(f"  {os.path.relpath(path, REPO):<38} "
+                  f"{len(hit):>5}/{len(execable):<5} {pct:6.1f}%{mark}")
+        agg = 100.0 * total_hit / total_exec if total_exec else 100.0
+        print(f"  {'TOTAL':<38} {total_hit:>5}/{total_exec:<5} {agg:6.1f}%")
+        if agg < args.floor:
+            pkg_failures.append((rel_pkg, agg))
+    for rel_pkg, agg in pkg_failures:
+        print(f"coverage gate: FAIL — {rel_pkg}/ {agg:.1f}% < floor "
+              f"{args.floor:.0f}%")
     for path, pct, file_floor in file_failures:
         print(f"coverage gate: FAIL — {os.path.relpath(path, REPO)} "
               f"{pct:.1f}% < file floor {file_floor:.0f}%")
-    if failed or file_failures:
+    if pkg_failures or file_failures:
         return 2
     print("coverage gate: OK")
     return 0

@@ -5,9 +5,14 @@
 #   ./scripts/verify.sh --fast   # gated tier-1 pytest only
 #
 # scripts/api_lint.py gates the public surface first: every name in
-# repro.core.__all__ must import and every exported class/function (and
-# public method) must carry a docstring — the Engine API cannot grow
-# undocumented entry points.
+# repro.core.__all__ and repro.analysis.__all__ must import and every
+# exported class/function (and public method) must carry a docstring — the
+# Engine and analysis APIs cannot grow undocumented entry points.
+#
+# The static-analysis gate (python -m repro.analysis --check) runs the
+# guarded-by / lock-order / fork-safety passes over src/repro/core and fails
+# on any finding outside the committed ANALYSIS_BASELINE.json (see
+# docs/static-analysis.md).
 #
 # The tier-1 suite runs under scripts/coverage_gate.py: pytest -x -q with
 # --durations=10 (slow-test regressions surface in every run) plus a
@@ -24,6 +29,7 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python scripts/api_lint.py
+python -m repro.analysis --check
 python scripts/coverage_gate.py
 
 if [[ "${1:-}" != "--fast" ]]; then

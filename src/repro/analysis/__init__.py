@@ -1,0 +1,41 @@
+"""Concurrency invariant checker for the ``repro`` tree.
+
+Three AST pass families over :mod:`repro.core` (see docs/static-analysis.md
+for the annotation grammar and the full rule catalog):
+
+- :mod:`.guards` — ``# guarded-by:`` lock-discipline lint (GB1xx),
+- :mod:`.lockgraph` — interprocedural lock-order + blocking-call analysis
+  (LK2xx),
+- :mod:`.forksafety` — fork/shared-memory hygiene for the process backend
+  (FS3xx),
+
+plus :mod:`.plancheck` (PV4xx), the plan-time ordering-safety catalog behind
+:meth:`repro.core.api.PhysicalPlan.verify`.
+
+Run it: ``python -m repro.analysis [--check] [--json] [paths...]`` (or
+``make analyze``).  ``--check`` gates on the committed baseline
+(``ANALYSIS_BASELINE.json``): new findings fail, grandfathered ones pass.
+"""
+from .common import (
+    RULES,
+    Finding,
+    SourceModule,
+    analyze_paths,
+    diff_baseline,
+    load_baseline,
+    write_baseline,
+)
+from .plancheck import CATALOG_VERSION, PlanViolation, verify_plan
+
+__all__ = [
+    "RULES",
+    "Finding",
+    "SourceModule",
+    "analyze_paths",
+    "diff_baseline",
+    "load_baseline",
+    "write_baseline",
+    "CATALOG_VERSION",
+    "PlanViolation",
+    "verify_plan",
+]

@@ -1,0 +1,149 @@
+"""Plan-time ordering-safety rule catalog (rules PV401–PV406).
+
+:meth:`repro.core.api.PhysicalPlan.verify` delegates here.  The rules assert
+the structural invariants that make a plan's parallel execution externally
+indistinguishable from the single-threaded reference (the paper's ordering
+contract) — they hold by construction for every plan :meth:`Engine.plan`
+builds, but a hand-built or deserialized-and-edited plan can violate them:
+
+- **PV401** — a stateful stage must have width 1 (a single state box cannot
+  be shared by two workers; :class:`~repro.core.procrun.StagePlan` pins it).
+- **PV402** — a keyed stage's width must not exceed the smallest partition
+  count among its operators (extra workers would split a partition's state).
+- **PV403** — ring capacity must cover the publish span: ``reorder_size >=
+  io_batch`` (a span publish must fit the entry window or it can never be
+  admitted) and ``max_inflight <= reorder_size`` (procrun's clamp: serials
+  in flight must fit the reorder window or the dispatcher livelocks).
+- **PV404** — elastic headroom: ``max_workers >= workers`` per stage (the
+  exchange is built with ``max_workers`` ingress rings; a width above it has
+  no ring to read from).
+- **PV405** — every stage with width > 1 must drain through a reorder ring
+  (the plan must carry ring geometry with ``reorder_size >= 1``).
+- **PV406** — per-operator caps must match kinds on any backend: a stateful
+  operator's ``max_dop`` is exactly 1, a partitioned operator's is >= 1.
+
+The module deliberately imports nothing from :mod:`repro.core` — it reads
+the plan duck-typed — so ``core.api`` can import it lazily with no cycle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+CATALOG_VERSION = 1
+
+
+@dataclass(frozen=True)
+class PlanViolation:
+    """One ordering-safety violation found in a :class:`PhysicalPlan`."""
+
+    rule: str
+    message: str
+    stage: Optional[int] = None  # stage index, if stage-scoped
+    op: Optional[str] = None  # operator name, if op-scoped
+
+    def render(self) -> str:
+        """One-line human-readable form (used by the raised error)."""
+        where = ""
+        if self.stage is not None:
+            where = f" [stage {self.stage}]"
+        elif self.op is not None:
+            where = f" [op {self.op}]"
+        return f"{self.rule}{where}: {self.message}"
+
+
+def verify_plan(plan) -> List[PlanViolation]:
+    """Check ``plan`` (a :class:`~repro.core.api.PhysicalPlan`) against the
+    ordering-safety catalog; returns violations (empty = safe)."""
+    v: List[PlanViolation] = []
+    op_caps = {}
+    for op in plan.ops:
+        op_caps[op.name] = op.max_dop
+        if op.kind == "stateful" and op.max_dop != 1:
+            v.append(
+                PlanViolation(
+                    rule="PV406",
+                    op=op.name,
+                    message=f"stateful operator has max_dop={op.max_dop!r}; "
+                    "a single state box requires exactly 1",
+                )
+            )
+        elif op.kind == "partitioned" and (op.max_dop is None or op.max_dop < 1):
+            v.append(
+                PlanViolation(
+                    rule="PV406",
+                    op=op.name,
+                    message=f"partitioned operator has max_dop={op.max_dop!r}; "
+                    "needs its partition count (>= 1)",
+                )
+            )
+
+    ring = getattr(plan, "ring", None) or {}
+    if plan.backend == "process":
+        widest = max((s.workers for s in plan.stages), default=1)
+        if widest > 1 and not ring.get("reorder_size"):
+            v.append(
+                PlanViolation(
+                    rule="PV405",
+                    message=f"a stage runs {widest} workers but the plan "
+                    "carries no reorder-ring geometry to drain through",
+                )
+            )
+        if ring:
+            io_batch = ring.get("io_batch") or 1
+            reorder = ring.get("reorder_size") or 0
+            inflight = ring.get("max_inflight") or 0
+            if reorder < io_batch:
+                v.append(
+                    PlanViolation(
+                        rule="PV403",
+                        message=f"reorder_size={reorder} < io_batch={io_batch}: "
+                        "a full span can never enter the ring window",
+                    )
+                )
+            if inflight > reorder:
+                v.append(
+                    PlanViolation(
+                        rule="PV403",
+                        message=f"max_inflight={inflight} > reorder_size="
+                        f"{reorder}: in-flight serials overrun the window",
+                    )
+                )
+
+    for s in getattr(plan, "stages", ()):
+        if s.kind == "stateful" and s.workers > 1:
+            v.append(
+                PlanViolation(
+                    rule="PV401",
+                    stage=s.index,
+                    message=f"stateful stage planned at width {s.workers}; "
+                    "stateful stages are pinned at 1",
+                )
+            )
+        if s.kind == "keyed":
+            caps = [
+                op_caps[name]
+                for name in s.ops
+                if op_caps.get(name) is not None
+            ]
+            cap = min(caps) if caps else None
+            if cap is not None and s.workers > cap:
+                v.append(
+                    PlanViolation(
+                        rule="PV402",
+                        stage=s.index,
+                        message=f"keyed stage width {s.workers} exceeds its "
+                        f"partition count {cap}",
+                    )
+                )
+        if s.workers > s.max_workers:
+            v.append(
+                PlanViolation(
+                    rule="PV404",
+                    stage=s.index,
+                    message=f"width {s.workers} exceeds elastic headroom "
+                    f"max_workers={s.max_workers}; the exchange has no "
+                    "ingress ring for the extra workers",
+                )
+            )
+    return v

@@ -48,6 +48,7 @@ from .api import (
     PhysicalPlan,
     PlannedOp,
     PlannedStage,
+    PlanVerificationError,
     ProcessOptions,
     Session,
     ThreadOptions,
@@ -55,6 +56,7 @@ from .api import (
 
 __all__ = [
     "ConfigError",
+    "PlanVerificationError",
     "Engine",
     "EngineConfig",
     "JobHandle",

@@ -78,6 +78,21 @@ class ConfigError(ValueError):
         super().__init__(message)
 
 
+class PlanVerificationError(ConfigError):
+    """A :class:`PhysicalPlan` failed the plan-time ordering-safety catalog
+    (:mod:`repro.analysis.plancheck`).  Carries the structured ``violations``
+    (:class:`~repro.analysis.plancheck.PlanViolation` rows, each with a
+    ``PV4xx`` rule id) so callers can branch on specific rules instead of
+    parsing the message."""
+
+    def __init__(self, violations):
+        self.violations = list(violations)
+        lines = "; ".join(v.render() for v in self.violations)
+        super().__init__(
+            f"plan fails ordering-safety verification: {lines}"
+        )
+
+
 def _check(cond: bool, message: str, key: Optional[str] = None) -> None:
     if not cond:
         raise ConfigError(message, key=key)
@@ -508,6 +523,19 @@ class PhysicalPlan:
                 )
             else:
                 lines.append("  tail: none (fully staged)")
+        from repro.analysis.plancheck import CATALOG_VERSION  # lazy: no cycle
+
+        violations = self.verify(raise_on_violation=False)
+        if violations:
+            rules = ", ".join(sorted({v.rule for v in violations}))
+            lines.append(
+                f"  ordering-safety: {len(violations)} violation(s) "
+                f"[{rules}] (catalog v{CATALOG_VERSION})"
+            )
+        else:
+            lines.append(
+                f"  ordering-safety: verified OK (catalog v{CATALOG_VERSION})"
+            )
         return "\n".join(lines)
 
     # ---------------------------------------------------------- round-trip
@@ -541,6 +569,26 @@ class PhysicalPlan:
             ring=d.get("ring"),
             worker_budget=d.get("worker_budget"),
         )
+
+    # -------------------------------------------------------- verification
+    def verify(self, *, raise_on_violation: bool = True):
+        """Check the plan against the ordering-safety rule catalog
+        (:mod:`repro.analysis.plancheck`, rules PV401–PV406): stage widths
+        vs. operator kinds, reorder-ring geometry vs. publish span, elastic
+        headroom.  Every plan :meth:`Engine.plan` builds passes by
+        construction; a hand-built or deserialized-and-edited plan may not.
+
+        Returns the violation list (empty = safe).  With
+        ``raise_on_violation`` (the default) a non-empty list raises
+        :class:`PlanVerificationError` instead, carrying the structured
+        violations.
+        """
+        from repro.analysis.plancheck import verify_plan  # lazy: no cycle
+
+        violations = verify_plan(self)
+        if violations and raise_on_violation:
+            raise PlanVerificationError(violations)
+        return violations
 
     def stage_widths(self) -> List[int]:
         """Planned per-stage worker-group widths (process backend)."""
@@ -1012,12 +1060,17 @@ class Engine:
         op_rows, routing = graph_flows(nodes, edge_list, cfg.cost_priors)
         ops = _planned_ops(op_rows)
         if cfg.backend == "thread":
-            return PhysicalPlan(
+            plan = PhysicalPlan(
                 backend="thread", config=cfg, ops=ops, routing=routing,
                 graph=(nodes, edge_list),
             )
-        rt = self._make_process_runtime(nodes, edge_list)
-        return self._describe_process(rt, ops, routing, (nodes, edge_list))
+        else:
+            rt = self._make_process_runtime(nodes, edge_list)
+            plan = self._describe_process(rt, ops, routing, (nodes, edge_list))
+        # Engine-built plans hold by construction; verifying here keeps the
+        # catalog honest (a planner bug surfaces at plan time, not run time).
+        plan.verify()
+        return plan
 
     # ------------------------------------------------------------------ run
     def run(self, plan_or_graph, source: Iterable, *, edges=None,
@@ -1099,6 +1152,7 @@ class Engine:
                     f"plan was made for backend={plan.backend!r} but this "
                     f"engine runs backend={self.config.backend!r}"
                 )
+            plan.verify()  # a hand-edited plan must not reach execution
             nodes, edge_list = plan.graph
             return plan, nodes, edge_list, None, (
                 plan.stage_widths() if plan.stages else None

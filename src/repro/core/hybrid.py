@@ -52,11 +52,12 @@ class SharedQueueWorklist(Worklist):
     ensured by a global lock; workers block if the key is busy."""
 
     def __init__(self, num_partitions: int, partitioner: Callable[[Hashable], int]):
+        # lock-free: deque.append/popleft are atomic under the GIL; §4.1 serializes only the dequeue+key-lock pair (under _global), not the enqueue
         self._queue: collections.deque = collections.deque()
         self._global = threading.Lock()
         self._key_locks = [threading.Lock() for _ in range(num_partitions)]
         self._partitioner = partitioner
-        self.blocked_time = 0.0
+        self.blocked_time = 0.0  # guarded-by: self._global
 
     def add(self, serial, key, item):
         """Enqueue on the single shared queue."""
@@ -74,8 +75,9 @@ class SharedQueueWorklist(Worklist):
                     self.blocked_time += time.perf_counter() - t0
                     return done
                 lock = self._key_locks[self._partitioner(key)]
+                # analysis: ignore[LK202]: §4.1's deliberate flaw — the scheme's defining property is that dequeue and key-lock acquisition are one atomic step, so the key wait happens under _global (fig. 5)
                 lock.acquire()  # may block while holding _global: the flaw §4.1
-            self.blocked_time += time.perf_counter() - t0
+                self.blocked_time += time.perf_counter() - t0
             try:
                 operate(serial, key, item)
             finally:

@@ -115,9 +115,9 @@ class _Frame:
     def __init__(self, ticket: int, merge: "_MergeRouter"):
         self.ticket = ticket
         self.merge = merge
-        self.values: list = []
-        self.markers: list = []
-        self._count = 1
+        self.values: list = []  # guarded-by: self._lock
+        self.markers: list = []  # guarded-by: self._lock
+        self._count = 1  # guarded-by(rw): self._lock
         self._lock = threading.Lock()
 
     def add(self, delta: int) -> None:
@@ -302,14 +302,15 @@ class GraphPipeline:
         self.edges = [tuple(e) for e in edges]
         self.marker_interval = marker_interval
         self.collect_outputs = collect_outputs
-        self.outputs: list = []
-        self.markers: list[_Marker] = []
+        self.outputs: list = []  # guarded-by: self._egress_lock
+        self.markers: list[_Marker] = []  # guarded-by: self._markers_lock
         self._markers_lock = threading.Lock()
-        self._egress_count = 0
+        self._egress_count = 0  # guarded-by: self._egress_lock
         self._egress_lock = threading.Lock()
         self._ingress = AtomicLong(0)
+        # lock-free: written once by the producer whose fetch_add claimed n==1
         self._first_push_ts: Optional[float] = None
-        self._last_egress_ts: Optional[float] = None
+        self._last_egress_ts: Optional[float] = None  # guarded-by: self._egress_lock
         # Micro-batching applies to plain operator chains; routing nodes keep
         # per-tuple granularity (ticket/frame accounting is per tuple), so a
         # graph with Split/Merge clamps the batch size back to 1.
@@ -317,8 +318,8 @@ class GraphPipeline:
             isinstance(s, (Split, Merge)) for s in self.node_specs.values()
         )
         self.batch_size = 1 if has_routing else max(1, batch_size)
-        self._accum_vals: list = []
-        self._accum_marks: list[_Marker] = []
+        self._accum_vals: list = []  # guarded-by: self._accum_lock
+        self._accum_marks: list[_Marker] = []  # guarded-by: self._accum_lock
         self._accum_lock = threading.Lock()
 
         order = self._topo_order()
@@ -512,7 +513,9 @@ class GraphPipeline:
         injected here every ``marker_interval`` pushes)."""
         marker = None
         n = self._ingress.fetch_add(1) + 1
-        if self._first_push_ts is None:
+        if n == 1:
+            # fetch_add makes push #1 unique, so exactly one producer ever
+            # stores the window-start timestamp (no check-then-set race).
             self._first_push_ts = time.perf_counter()
         if self.marker_interval and n % self.marker_interval == 0:
             marker = _Marker(time.perf_counter())

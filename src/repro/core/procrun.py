@@ -861,6 +861,7 @@ class ProcessRuntime:
             )
 
         # result surface (used directly when the tail is empty)
+        # lock-free: only the single-threaded parent supervisor touches these
         self.outputs: list = []
         self.markers: list[_Marker] = []
         self._egress_count = 0

@@ -83,11 +83,11 @@ class LockBasedReorderBuffer(ReorderBuffer):
 
     def __init__(self, send_downstream: Callable[[Any], None], start: int = 1):
         self._send_downstream = send_downstream
-        self._next = start
-        self._waiting: dict[int, _Slot] = {}
+        self._next = start  # guarded-by: self._lock
+        self._waiting: dict[int, _Slot] = {}  # guarded-by: self._lock
         self._lock = threading.Lock()
         # Instrumentation: total time workers spent blocked on the lock.
-        self.blocked_time = 0.0
+        self.blocked_time = 0.0  # guarded-by: self._lock
 
     def send(self, t: int, output: Any) -> bool:
         """Admit serial ``t`` under the global lock; always succeeds."""
@@ -95,9 +95,11 @@ class LockBasedReorderBuffer(ReorderBuffer):
         with self._lock:
             self.blocked_time += time.perf_counter() - t0
             if t == self._next:
+                # analysis: ignore[LK202]: fig. 2's deliberate blocking design — each node's buffer emits downstream under its own lock; instance locks nest strictly along the acyclic dataflow, so the order is a DAG
                 self._send_downstream(output)
                 self._next += 1
                 while self._next in self._waiting:
+                    # analysis: ignore[LK202]: same fig. 2 strawman as above — the drain loop emits under the instance lock by construction
                     self._send_downstream(self._waiting.pop(self._next).value)
                     self._next += 1
             else:
@@ -119,10 +121,17 @@ class NonBlockingReorderBuffer(ReorderBuffer):
         self._send_downstream = send_downstream
         self._size = size
         self._next = AtomicLong(start)
+        # lock-free: fig. 4 — slot ownership via the entry condition (next <= t < next+size) and publish-before-advance; exactly one drainer via the try-lock flag
         self._buffer: list[Optional[_Slot]] = [_EMPTY] * size
         self._flag = AtomicFlag()
         self.blocked_time = 0.0  # always ~0; kept for symmetric instrumentation
-        self.rejected_adds = 0  # entry-condition failures (ring full for t)
+        self._rejected = AtomicLong(0)  # entry-condition failures (ring full)
+
+    @property
+    def rejected_adds(self) -> int:
+        """Entry-condition failures (ring full for the offered serial).
+        Atomic: concurrent rejecting senders each count exactly once."""
+        return self._rejected.load()
 
     def accepts(self, t: int) -> bool:
         """Entry condition ``next <= t < next + size`` (no side effects)."""
@@ -142,7 +151,7 @@ class NonBlockingReorderBuffer(ReorderBuffer):
         if n <= t < n + self._size:
             self._buffer[t % self._size] = _Slot(output)
             return True
-        self.rejected_adds += 1
+        self._rejected.fetch_add(1)
         return False
 
     def _send_pending_outputs(self) -> None:
@@ -187,8 +196,9 @@ class ParkingReorderBuffer:
 
     def __init__(self, inner: ReorderBuffer):
         self._inner = inner
-        self._parked: dict[int, Any] = {}
-        self._heap: list[int] = []  # min-heap of parked serials (lazy deletes)
+        self._parked: dict[int, Any] = {}  # guarded-by(rw): self._lock
+        # min-heap of parked serials (lazy deletes)
+        self._heap: list[int] = []  # guarded-by(rw): self._lock
         self._lock = threading.Lock()
 
     def send(self, t: int, output: Any) -> None:

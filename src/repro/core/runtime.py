@@ -69,11 +69,13 @@ class StreamRuntime:
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
         self._controller: Optional[threading.Thread] = None
+        # lock-free: per-worker slot; only worker w writes _busy[w]
         self._busy = [0.0] * num_workers
         # First operator-fn exception seen by any worker.  A raising op kills
         # its worker thread and strands the in-flight tuple, so the pipeline
         # can never drain; recording it lets run()/Session raise a clear
         # error instead of hanging until the drain deadline.
+        # lock-free: single racing store per worker; last-exception-wins is acceptable (any recorded error aborts the run)
         self.worker_error: Optional[BaseException] = None
 
     # ------------------------------------------------------------------ workers

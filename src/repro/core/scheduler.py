@@ -68,7 +68,7 @@ class Scheduler:
         self.cost_priors = dict(cost_priors) if cost_priors else None
         self.adaptations = 0  # controller invocations (instrumentation)
         self._lock = threading.Lock()
-        self._window_start = time.perf_counter()
+        self._window_start = time.perf_counter()  # guarded-by: self._lock
         # Weighted op->op edges; default: linear chain with unit weights.
         if edges is None:
             edges = [(i, i + 1, 1.0) for i in range(len(nodes) - 1)]
@@ -186,7 +186,7 @@ class Scheduler:
         self.adaptations += 1
 
     # ----------------------------------------------------------------- picks
-    def _pick(self) -> Optional[int]:
+    def _pick(self) -> Optional[int]:  # holds: self._lock
         cand = self._schedulable()
         if not cand:
             return None
@@ -198,7 +198,7 @@ class Scheduler:
             return self._pick_et(cand)
         return self._pick_ct(cand)  # ct + adaptive
 
-    def _pick_qst(self, cand: list[int]) -> Optional[int]:
+    def _pick_qst(self, cand: list[int]) -> Optional[int]:  # holds: self._lock
         _, out_rate = self._flows()
         total = sum(out_rate)
         for i in cand:
@@ -210,7 +210,7 @@ class Scheduler:
                 return i
         return cand[0]  # all throttled: fall back to earliest (keeps progress)
 
-    def _pick_et(self, cand: list[int]) -> int:
+    def _pick_et(self, cand: list[int]) -> int:  # holds: self._lock
         best, best_p = cand[0], -1.0
         for i in cand:
             n = self.nodes[i]
@@ -219,7 +219,7 @@ class Scheduler:
                 best, best_p = i, p
         return best
 
-    def _pick_ct(self, cand: list[int]) -> int:
+    def _pick_ct(self, cand: list[int]) -> int:  # holds: self._lock
         now = time.perf_counter()
         if now - self._window_start > self.window:
             for n in self.nodes:

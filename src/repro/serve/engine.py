@@ -13,6 +13,7 @@ saturation" finding shows up as interleave > drain-all-prefills-first.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -25,6 +26,24 @@ from repro.core.reorder import NonBlockingReorderBuffer, ParkingReorderBuffer
 from repro.core.serial import SerialAssigner
 from repro.models import transformer
 from repro.models.common import ModelConfig
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_fns(cfg: ModelConfig, max_len: int):
+    """Shared jitted (prefill, decode) pair, keyed by the only inputs the
+    traces close over.  Engines are cheap to construct (tests build one per
+    case); without this cache every instance re-traces and re-compiles both
+    functions, which dominates wall time and trips suite watchdogs on
+    loaded hosts."""
+    prefill1 = jax.jit(
+        lambda p, t: transformer.prefill(cfg, p, t, max_len=max_len)
+    )
+
+    def _decode_fn(p, tok, cache, pos):
+        logits, cache = transformer.decode_step(cfg, p, tok, cache, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return prefill1, jax.jit(_decode_fn)
 
 
 @dataclass
@@ -86,15 +105,7 @@ class OrderedServingEngine:
         self.tokens = jnp.zeros((max_slots,), jnp.int32)
         self.active = np.zeros((max_slots,), bool)
 
-        self._prefill1 = jax.jit(
-            lambda p, t: transformer.prefill(cfg, p, t, max_len=max_len)
-        )
-
-        def _decode_fn(p, tok, cache, pos):
-            logits, cache = transformer.decode_step(cfg, p, tok, cache, pos)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
-
-        self._decode = jax.jit(_decode_fn)
+        self._prefill1, self._decode = _compiled_fns(cfg, max_len)
         self.stats = {"prefills": 0, "decode_steps": 0, "emitted": 0}
 
     # ------------------------------------------------------------------ api

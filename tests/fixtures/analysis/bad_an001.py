@@ -1,0 +1,17 @@
+"""Fixture: suppression without a justification -> AN001 (and only AN001 —
+the underlying GB101 is suppressed, but the bare ignore is itself flagged)."""
+import threading
+
+
+class Unjustified:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0  # guarded-by: self._lock
+
+    def bump(self):
+        # analysis: ignore[GB101]
+        self.n += 1
+
+    def locked_bump(self):
+        with self._lock:
+            self.n += 1

@@ -1,0 +1,12 @@
+"""Fixture: justified suppression that matches no finding -> AN002."""
+import threading
+
+
+class StaleIgnore:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def tidy(self):
+        with self._lock:
+            # analysis: ignore[LK202]: nothing here blocks any more; stale
+            return 1

@@ -1,0 +1,11 @@
+"""Fixture: threading primitive created in a forking module -> FS301."""
+import multiprocessing as mp
+import threading
+
+_state_lock = threading.Lock()
+
+
+def spawn(fn):
+    p = mp.Process(target=fn)
+    p.start()
+    return p

@@ -1,0 +1,10 @@
+"""Fixture: shared-memory creation with no unlink discipline -> FS302."""
+from repro.core.shm import ShmSpscRing
+
+
+class RingLeaker:
+    def __init__(self, nbytes):
+        self.ring = ShmSpscRing(nbytes)
+
+    def close(self):
+        self.ring.close()  # closes the mapping but never unlinks the segment

@@ -1,0 +1,15 @@
+"""Fixture: write to a guarded-by attribute outside its lock -> GB101."""
+import threading
+
+
+class LeakyCounter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0  # guarded-by: self._lock
+
+    def safe_bump(self):
+        with self._lock:
+            self.count += 1
+
+    def racy_bump(self):
+        self.count += 1  # outside the lock: the violation

@@ -1,0 +1,15 @@
+"""Fixture: read of a guarded-by(rw) attribute outside its lock -> GB102."""
+import threading
+
+
+class TornReader:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.total = 0  # guarded-by(rw): self._lock
+
+    def add(self, n):
+        with self._lock:
+            self.total += n
+
+    def peek(self):
+        return self.total  # unlocked read of an rw-guarded attribute

@@ -1,0 +1,12 @@
+"""Fixture: guarded-by names a lock never acquired in the class -> GB103."""
+import threading
+
+
+class TypoGuard:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.items: list = []  # guarded-by: self._locck
+
+    def noop(self):
+        with self._lock:  # the real lock; the annotation's typo never matches
+            pass

@@ -1,0 +1,3 @@
+"""Fixture: guarded-by comment not attached to a self.attr line -> GB104."""
+
+THRESHOLD = 16  # guarded-by: self._lock

@@ -1,0 +1,18 @@
+"""Fixture: two code paths acquire the same locks in opposite orders -> LK201."""
+import threading
+
+
+class DeadlockProne:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    def forward(self):
+        with self._a:
+            with self._b:
+                pass
+
+    def backward(self):
+        with self._b:
+            with self._a:
+                pass

@@ -1,0 +1,12 @@
+"""Fixture: blocking operation while holding a lock -> LK202."""
+import threading
+import time
+
+
+class SleepyCritical:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def throttle(self):
+        with self._lock:
+            time.sleep(0.01)

@@ -1,0 +1,13 @@
+"""Fixture: call to a '# holds:' function without holding its lock -> LK203."""
+import threading
+
+
+class ContractBreaker:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def _advance(self):  # holds: self._lock
+        pass
+
+    def run(self):
+        self._advance()  # caller never took the lock

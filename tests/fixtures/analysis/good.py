@@ -1,0 +1,29 @@
+"""Fixture: a class that follows every checked discipline — zero findings."""
+import threading
+import time
+
+
+class WellBehaved:
+    """Guarded writes under the lock, an honored holds contract, a justified
+    lock-free declaration, and no blocking calls under the lock."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.pending: list = []  # guarded-by: self._lock
+        self.total = 0  # guarded-by(rw): self._lock
+        # lock-free: single-writer instrumentation; torn reads are acceptable
+        self.last_seen = 0.0
+
+    def push(self, item):
+        with self._lock:
+            self.pending.append(item)
+            self._bump(1)
+        self.last_seen = time.perf_counter()
+
+    def _bump(self, n):  # holds: self._lock
+        self.total += n
+
+    def drain(self):
+        with self._lock:
+            out, self.pending = list(self.pending), []
+            return out, self.total

@@ -1,0 +1,241 @@
+"""Static-analysis subsystem tests: one fixture per rule (each bad fixture
+trips exactly its rule), a regression gate that the live core tree stays
+clean against the committed baseline, the plan-time ordering-safety
+verifier (``PhysicalPlan.verify`` / rules PV4xx), and the CLI surface
+(``python -m repro.analysis``) including the baseline check workflow."""
+import json
+import os
+
+import pytest
+
+from repro.analysis import (
+    RULES,
+    analyze_paths,
+    diff_baseline,
+    load_baseline,
+    verify_plan,
+    write_baseline,
+)
+from repro.analysis.__main__ import main as analysis_main
+from repro.core import (
+    Engine,
+    EngineConfig,
+    OpSpec,
+    PhysicalPlan,
+    PlanVerificationError,
+    ProcessOptions,
+)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures", "analysis")
+
+_FIXTURE_RULES = [
+    "GB101", "GB102", "GB103", "GB104",
+    "LK201", "LK202", "LK203",
+    "FS301", "FS302",
+    "AN001", "AN002",
+]
+
+
+def _analyze_fixture(name):
+    return analyze_paths([os.path.join(FIXTURES, name)], root=REPO_ROOT)
+
+
+# ------------------------------------------------------------- rule fixtures
+@pytest.mark.parametrize("rule", _FIXTURE_RULES)
+def test_bad_fixture_triggers_exactly_its_rule(rule):
+    findings = _analyze_fixture(f"bad_{rule.lower()}.py")
+    assert findings, f"fixture for {rule} produced no findings"
+    assert {f.rule for f in findings} == {rule}
+
+
+def test_good_fixture_is_clean():
+    assert _analyze_fixture("good.py") == []
+
+
+def test_every_finding_rule_is_cataloged():
+    for rule in _FIXTURE_RULES:
+        assert rule in RULES
+    for f in _analyze_fixture("bad_gb101.py"):
+        assert f.rule in RULES
+        assert str(f.line) not in f.key()  # baseline keys survive line churn
+        assert f.path in f.render()
+
+
+# ------------------------------------------------- live-tree regression gate
+def test_live_core_tree_is_clean_against_baseline():
+    """The committed core tree must produce no findings beyond the committed
+    baseline — the same gate ``python -m repro.analysis --check`` enforces."""
+    findings = analyze_paths(None, root=REPO_ROOT)
+    baseline = load_baseline(os.path.join(REPO_ROOT, "ANALYSIS_BASELINE.json"))
+    new, _stale = diff_baseline(findings, baseline)
+    assert new == [], "new findings outside baseline:\n" + "\n".join(
+        f.render() for f in new
+    )
+
+
+def test_baseline_round_trip(tmp_path):
+    findings = _analyze_fixture("bad_gb101.py")
+    path = str(tmp_path / "base.json")
+    write_baseline(path, findings)
+    keys = load_baseline(path)
+    assert keys == {f.key() for f in findings}
+    new, stale = diff_baseline(findings, keys)
+    assert new == [] and stale == set()
+    new, stale = diff_baseline([], keys)
+    assert new == [] and stale == keys
+
+
+def test_baseline_rejects_unknown_version(tmp_path):
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps({"version": 99, "findings": []}))
+    with pytest.raises(ValueError, match="version"):
+        load_baseline(str(path))
+
+
+# -------------------------------------------------- plan-time verify (PV4xx)
+def _ident(v):
+    return [v]
+
+
+def _zero():
+    return 0
+
+
+def _sf_sum(s, v):
+    s += v
+    return s, [s]
+
+
+def _kcount(s, k, v):
+    return (s or 0) + 1, [v]
+
+
+def _mod8(v):
+    return v % 8
+
+
+def _stateful_plan_dict():
+    eng = Engine(EngineConfig(
+        backend="process", num_workers=2,
+        process=ProcessOptions(worker_budget=2),
+    ))
+    plan = eng.plan([
+        OpSpec("pre", "stateless", _ident, cost_us=2),
+        OpSpec("sf", "stateful", _sf_sum, init_state=_zero, cost_us=4),
+    ])
+    return plan.to_dict()
+
+
+def test_verify_rejects_hand_built_width2_stateful_stage():
+    d = _stateful_plan_dict()
+    idx = next(i for i, s in enumerate(d["stages"]) if s["kind"] == "stateful")
+    d["stages"][idx]["workers"] = 2
+    d["stages"][idx]["max_workers"] = 2  # keep PV404 out of the way
+    bad = PhysicalPlan.from_dict(d)
+    with pytest.raises(PlanVerificationError) as ei:
+        bad.verify()
+    err = ei.value
+    assert [v.rule for v in err.violations] == ["PV401"]
+    assert err.violations[0].stage == d["stages"][idx]["index"]
+    assert "PV401" in str(err)
+    # non-raising mode returns the same structured rows
+    assert bad.verify(raise_on_violation=False) == err.violations
+
+
+def test_verify_flags_ring_and_op_cap_violations():
+    d = _stateful_plan_dict()
+    d["ring"]["reorder_size"] = d["ring"]["io_batch"] - 1
+    for op in d["ops"]:
+        if op["kind"] == "stateful":
+            op["max_dop"] = 4
+    rules = {v.rule for v in PhysicalPlan.from_dict(d).verify(
+        raise_on_violation=False
+    )}
+    assert "PV403" in rules
+    assert "PV406" in rules
+
+
+def test_verify_plan_duck_typed_entry_point():
+    d = _stateful_plan_dict()
+    assert verify_plan(PhysicalPlan.from_dict(d)) == []
+
+
+def test_engine_plan_verifies_by_default(monkeypatch):
+    calls = []
+    orig = PhysicalPlan.verify
+
+    def spy(self, **kw):
+        calls.append(self)
+        return orig(self, **kw)
+
+    monkeypatch.setattr(PhysicalPlan, "verify", spy)
+    eng = Engine(EngineConfig(backend="thread", num_workers=2))
+    plan = eng.plan([OpSpec("pre", "stateless", _ident, cost_us=2)])
+    assert calls == [plan]
+
+
+def test_explain_reports_ordering_safety():
+    eng = Engine(EngineConfig(backend="thread", num_workers=2))
+    plan = eng.plan([OpSpec("pre", "stateless", _ident, cost_us=2)])
+    assert "ordering-safety: verified OK" in plan.explain()
+    d = plan.to_dict()
+    d["ops"][0]["kind"] = "stateful"
+    d["ops"][0]["max_dop"] = 8
+    bad = PhysicalPlan.from_dict(d)
+    assert "PV406" in bad.explain()
+
+
+def test_keyed_width_above_partitions_is_rejected():
+    eng = Engine(EngineConfig(
+        backend="process", num_workers=2,
+        process=ProcessOptions(worker_budget=2),
+    ))
+    plan = eng.plan([
+        OpSpec("hot", "partitioned", _kcount, key_fn=_mod8, num_partitions=4,
+               init_state=_zero, cost_us=8),
+    ])
+    d = plan.to_dict()
+    idx = next(i for i, s in enumerate(d["stages"]) if s["kind"] == "keyed")
+    d["stages"][idx]["workers"] = 8
+    d["stages"][idx]["max_workers"] = 8
+    rules = {v.rule for v in PhysicalPlan.from_dict(d).verify(
+        raise_on_violation=False
+    )}
+    assert "PV402" in rules
+
+
+# ---------------------------------------------------------------------- CLI
+def test_cli_rules_lists_catalog(capsys):
+    assert analysis_main(["--rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in RULES:
+        assert rule in out
+
+
+def test_cli_check_fails_on_new_finding(tmp_path, capsys):
+    bad = os.path.join(FIXTURES, "bad_gb101.py")
+    rc = analysis_main([bad, "--check", "--baseline",
+                        str(tmp_path / "missing.json")])
+    assert rc == 2
+    assert "GB101" in capsys.readouterr().out
+
+
+def test_cli_write_baseline_then_check_passes(tmp_path, capsys):
+    bad = os.path.join(FIXTURES, "bad_gb101.py")
+    base = str(tmp_path / "base.json")
+    assert analysis_main([bad, "--write-baseline", "--baseline", base]) == 0
+    assert analysis_main([bad, "--check", "--baseline", base]) == 0
+    # fixed finding -> stale baseline entry is warned about, not fatal
+    good = os.path.join(FIXTURES, "good.py")
+    assert analysis_main([good, "--check", "--baseline", base]) == 0
+    assert "stale" in capsys.readouterr().out
+
+
+def test_cli_json_report(capsys):
+    bad = os.path.join(FIXTURES, "bad_lk202.py")
+    assert analysis_main([bad, "--json"]) == 0
+    data = json.loads(capsys.readouterr().out)
+    assert data["summary"]["total"] == 1
+    assert data["findings"][0]["rule"] == "LK202"
