@@ -1,5 +1,5 @@
 # Convenience targets; the source of truth is scripts/verify.sh (ROADMAP.md).
-.PHONY: verify test bench analyze docs-check
+.PHONY: verify test bench analyze chaos docs-check
 
 verify:
 	./scripts/verify.sh
@@ -12,6 +12,9 @@ bench:
 
 analyze:
 	PYTHONPATH=src python -m repro.analysis --check
+
+chaos:
+	PYTHONPATH=src python -m pytest tests/test_faults.py -q
 
 docs-check:
 	python scripts/check_links.py

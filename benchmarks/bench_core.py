@@ -14,6 +14,12 @@ CPU-bound synthetic queries (pure-Python compute stages, GIL-bound) through:
                                       serial parent tail)
       backend=process, stages=auto   (staged plan: the keyed stage gets its
                                       own process worker group)
+  - recovery (the keyed_hotspot shape under a seeded 1-kill schedule):
+      backend=process, checkpointed   (the keyed stage's worker 0 is
+                                      SIGKILLed mid-run and restored from
+                                      the last epoch checkpoint; the row
+                                      tracks goodput under the fault and the
+                                      supervisor-measured recovery latency)
   - skewed_stages (SL(hot) → PS(cold) — a pipeline whose load is
     concentrated in one stage):
       workers=1        (flat: the even split of the default worker budget
@@ -155,6 +161,64 @@ def _run_config(cfg: dict, seconds: float, workers: int):
     }
 
 
+RECOVERY_SPIN = 300  # keyed hot op: enough work that recovery cost is visible
+RECOVERY_CKPT = 512  # epoch length (serials) for the recovery row
+
+
+def _run_recovery(seconds: float, workers: int):
+    """Goodput + recovery latency under a seeded 1-kill schedule.
+
+    A clean pass sizes the run and provides the no-fault baseline; the
+    measured pass SIGKILLs the keyed stage's worker 0 at the stream midpoint.
+    The supervisor restores the group from the last epoch checkpoint and
+    replays, so every tuple still egresses exactly once — ``goodput`` is the
+    end-to-end throughput *including* the recovery stall, and
+    ``recovery_latency_ms`` is the supervisor-measured halt-to-replay time.
+    """
+    from repro.core import FaultOptions, FaultPlan, FaultSpec
+
+    def chain():
+        return keyed_hotspot_chain(spin_edge=30, spin_hot=RECOVERY_SPIN)
+
+    kw = dict(backend="process", num_workers=2, batch_size=32,
+              checkpoint_interval=RECOVERY_CKPT)
+    probe_n = 2000
+    _, probe = engine_run(chain(), range(probe_n), **kw)
+    n = max(int(probe.throughput * seconds), probe_n)
+    _, clean = engine_run(chain(), range(n), **kw)
+    plan = FaultPlan(
+        specs=[FaultSpec(kind="kill", stage=1, worker=0,
+                         serial=max(n // 2, 1))],
+        seed=7,
+    )
+    handle, report = engine_run(
+        chain(), range(n), faults=FaultOptions(plan=plan), **kw
+    )
+    result = handle.result
+    assert result.egress_count == n, (
+        f"recovery lost tuples: {result.egress_count}/{n}"
+    )
+    return {
+        "workload": "recovery",
+        "backend": "process",
+        "batch_size": 32,
+        "stages": getattr(handle, "num_stages", None),
+        "workers": 2,
+        "checkpoint_interval": RECOVERY_CKPT,
+        "tuples": n,
+        "wall_s": round(report.wall_time, 3),
+        "throughput_per_s": round(report.throughput, 1),
+        "egress_throughput_per_s": round(report.egress_throughput, 1),
+        "p99_latency_ms": round(report.p99_latency * 1e3, 3),
+        "mean_latency_ms": round(report.mean_latency * 1e3, 3),
+        "busy_frac": round(report.worker_busy_frac, 3),
+        "clean_throughput_per_s": round(clean.throughput, 1),
+        "restarts": result.restarts,
+        "recoveries": result.recoveries,
+        "recovery_latency_ms": round(handle.recovery_time_s * 1e3, 3),
+    }
+
+
 def _run_ab_configs(seconds: float, workers: int):
     """Measure the skewed-stages pair interleaved: flat/auto alternate over
     ``AB_ROUNDS`` rounds and each config's throughput is aggregated across
@@ -211,6 +275,16 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
             f"p99={row['p99_latency_ms']:.3f}ms busy={row['busy_frac']:.2f} "
             f"({row['tuples']} tuples / {row['wall_s']}s)"
         )
+    row = _run_recovery(seconds, workers)
+    rows.append(row)
+    print_fn(
+        f"{row['workload']:>14} {row['backend']:>7} "
+        f"batch={row['batch_size']:<3} "
+        f"goodput={row['throughput_per_s']:>10,.0f}/s "
+        f"clean={row['clean_throughput_per_s']:>10,.0f}/s "
+        f"recovery={row['recovery_latency_ms']:.1f}ms "
+        f"restarts={row['restarts']}"
+    )
     for row in _run_ab_configs(seconds, workers):
         rows.append(row)
         print_fn(
@@ -265,6 +339,15 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
             thru_workers("skewed_stages", auto=True) /
             max(thru_workers("skewed_stages", auto=False), 1e-9), 3,
         ),
+        # The PR-7 robustness ratio: goodput under a mid-run keyed-worker
+        # kill (checkpoint restore + replay included) vs the clean run.
+        "recovery_goodput_vs_clean": round(
+            thru("recovery", "process", 32) /
+            max(next(
+                (r["clean_throughput_per_s"] for r in rows
+                 if r["workload"] == "recovery"), 0.0,
+            ), 1e-9), 3,
+        ),
     }
     doc = {
         "meta": {
@@ -273,6 +356,10 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
                              f"spin={SPIN})",
                 "keyed_hotspot": f"SL(spin=30) -> PS(spin={HOT_SPIN}, keyed) "
                                  f"-> SL(spin=30) interior hot spot",
+                "recovery": f"keyed_hotspot(spin_hot={RECOVERY_SPIN}) under "
+                            "a seeded mid-run SIGKILL of the keyed stage's "
+                            f"worker 0 (checkpoint_interval={RECOVERY_CKPT}; "
+                            "goodput includes the restore+replay stall)",
                 "skewed_stages": f"SL(spin={SKEW_HOT}, hot) -> "
                                  f"PS(spin={SKEW_COLD}, keyed cold): flat "
                                  "width 1 = even split of the default "
@@ -295,7 +382,8 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
         f"ratios: process/thread={ratios['process_vs_thread']}x  "
         f"batch32/batch1={ratios['thread_batch32_vs_batch1']}x  "
         f"staged/ingress={ratios['staged_vs_ingress_process']}x  "
-        f"auto/flat={ratios['auto_vs_flat_process']}x  -> {out}"
+        f"auto/flat={ratios['auto_vs_flat_process']}x  "
+        f"recovery/clean={ratios['recovery_goodput_vs_clean']}x  -> {out}"
     )
     return doc
 

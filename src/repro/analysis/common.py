@@ -37,6 +37,7 @@ RULES: Dict[str, str] = {
     "LK203": "call to a '# holds:' function without holding its lock",
     "FS301": "threading primitive in a module that forks workers",
     "FS302": "shared-memory creation without an unlink discipline",
+    "FS303": "lock acquisition inside a signal handler",
     "AN001": "suppression without a justification",
     "AN002": "suppression that matches no finding",
     "PV401": "stateful stage planned with width > 1",
@@ -45,6 +46,7 @@ RULES: Dict[str, str] = {
     "PV404": "elastic headroom below the active stage width",
     "PV405": "parallel stage without a reorder ring to drain through",
     "PV406": "operator parallelism cap inconsistent with its kind",
+    "PV407": "checkpoint geometry inconsistent with the stage layout",
 }
 
 

@@ -1,4 +1,4 @@
-"""Fork-safety lint (rules FS301–FS302).
+"""Fork-safety lint (rules FS301–FS303).
 
 The staged process backend (:mod:`repro.core.procrun`) forks workers with
 the ``fork`` start method: the child inherits a snapshot of the parent's
@@ -16,11 +16,20 @@ memory.  Two classes of bug follow:
   leaks into ``/dev/shm`` past process exit.  (Exactly one ``unlink`` per
   created name is the runtime rule; the lint checks the weaker static
   property that an unlink path exists at all.)
+- **FS303** — a function registered as a signal handler
+  (``signal.signal(SIG, handler)``) must not acquire locks: the handler can
+  fire while the *same thread* already holds the lock mid-critical-section,
+  and a non-reentrant acquire then deadlocks the process from the inside.
+  Flagged inside handler bodies: ``.acquire()`` calls and ``with``-blocks
+  over lock-ish objects (names matching ``lock``/``mutex``).  Handlers must
+  stay lock-free — set a flag or raise, like
+  :func:`repro.core.procrun._sig_raise`.
 """
 from __future__ import annotations
 
 import ast
-from typing import List, Optional, Set
+import re
+from typing import List, Optional, Set, Tuple
 
 from .common import Finding, SourceModule
 
@@ -68,6 +77,64 @@ def _creates_shm(call: ast.Call) -> Optional[str]:
     return None
 
 
+_LOCKISH_RE = re.compile(r"lock|mutex", re.IGNORECASE)
+
+
+def _signal_handlers(tree: ast.Module) -> Tuple[Set[str], List[ast.Lambda]]:
+    """Handler names (and inline lambdas) registered via ``signal.signal``."""
+    names: Set[str] = set()
+    lambdas: List[ast.Lambda] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or len(node.args) < 2:
+            continue
+        fn = node.func
+        is_register = (
+            (isinstance(fn, ast.Attribute) and fn.attr == "signal")
+            or (isinstance(fn, ast.Name) and fn.id == "signal")
+        )
+        if not is_register:
+            continue
+        handler = node.args[1]
+        if isinstance(handler, ast.Name):
+            names.add(handler.id)
+        elif isinstance(handler, ast.Lambda):
+            lambdas.append(handler)
+    return names, lambdas
+
+
+def _lockish_name(expr: ast.AST) -> Optional[str]:
+    """The lock-ish identifier a ``with`` context expression names, if any."""
+    if isinstance(expr, ast.Call):
+        expr = expr.func  # with self._lock(): / with threading.Lock():
+    if isinstance(expr, ast.Attribute):
+        name = expr.attr
+    elif isinstance(expr, ast.Name):
+        name = expr.id
+    else:
+        return None
+    return name if _LOCKISH_RE.search(name) else None
+
+
+def _lock_acquisitions(fn_node: ast.AST) -> List[Tuple[int, str]]:
+    """(line, description) of every lock acquisition inside a handler."""
+    hits: List[Tuple[int, str]] = []
+    for node in ast.walk(fn_node):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "acquire"
+        ):
+            hits.append((node.lineno, ".acquire() call"))
+        elif isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                name = _lockish_name(item.context_expr)
+                if name:
+                    hits.append(
+                        (item.context_expr.lineno, f"'with {name}:' block")
+                    )
+    return hits
+
+
 def _scope_of(tree: ast.Module, lineno: int) -> str:
     """Qualified ``Class.method`` scope containing a line (best effort)."""
     best = "<module>"
@@ -112,6 +179,30 @@ def check_module(mod: SourceModule) -> List[Finding]:
                         "locked in the child",
                     )
                 )
+
+    # FS303: signal handlers must stay lock-free.
+    handler_names, handler_lambdas = _signal_handlers(tree)
+    handlers: List[ast.AST] = list(handler_lambdas)
+    if handler_names:
+        handlers.extend(
+            n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and n.name in handler_names
+        )
+    for fn_node in handlers:
+        label = getattr(fn_node, "name", "<lambda>")
+        for line, what in _lock_acquisitions(fn_node):
+            findings.append(
+                Finding(
+                    rule="FS303",
+                    path=mod.path,
+                    line=line,
+                    scope=_scope_of(tree, line),
+                    message=f"{what} inside signal handler {label}: the "
+                    "handler can interrupt the holder mid-critical-section "
+                    "and deadlock; handlers must stay lock-free",
+                )
+            )
 
     # FS302: shm creation scopes must contain an unlink path.
     scopes: List[ast.AST] = [

@@ -1,4 +1,4 @@
-"""Plan-time ordering-safety rule catalog (rules PV401–PV406).
+"""Plan-time ordering-safety rule catalog (rules PV401–PV407).
 
 :meth:`repro.core.api.PhysicalPlan.verify` delegates here.  The rules assert
 the structural invariants that make a plan's parallel execution externally
@@ -21,6 +21,12 @@ builds, but a hand-built or deserialized-and-edited plan can violate them:
   (the plan must carry ring geometry with ``reorder_size >= 1``).
 - **PV406** — per-operator caps must match kinds on any backend: a stateful
   operator's ``max_dop`` is exactly 1, a partitioned operator's is >= 1.
+- **PV407** — checkpoint geometry: only keyed/stateful stages may be marked
+  ``checkpointed`` (stateless workers carry no state to snapshot — they
+  recover by re-fork + replay alone), and when any stage checkpoints the
+  plan's epoch interval must cover a full dispatch unit
+  (``checkpoint_interval >= io_batch``: barriers ride unit boundaries, a
+  shorter interval cannot be honored).
 
 The module deliberately imports nothing from :mod:`repro.core` — it reads
 the plan duck-typed — so ``core.api`` can import it lazily with no cycle.
@@ -30,7 +36,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
-CATALOG_VERSION = 1
+CATALOG_VERSION = 2
 
 
 @dataclass(frozen=True)
@@ -107,6 +113,40 @@ def verify_plan(plan) -> List[PlanViolation]:
                         rule="PV403",
                         message=f"max_inflight={inflight} > reorder_size="
                         f"{reorder}: in-flight serials overrun the window",
+                    )
+                )
+        ckpt_stages = [
+            s for s in getattr(plan, "stages", ())
+            if getattr(s, "checkpointed", False)
+        ]
+        for s in ckpt_stages:
+            if s.kind not in ("keyed", "stateful"):
+                v.append(
+                    PlanViolation(
+                        rule="PV407",
+                        stage=s.index,
+                        message=f"{s.kind} stage marked checkpointed; only "
+                        "keyed/stateful stages carry state to snapshot",
+                    )
+                )
+        if ckpt_stages:
+            interval = ring.get("checkpoint_interval") or 0
+            io_batch = ring.get("io_batch") or 1
+            if interval < 1:
+                v.append(
+                    PlanViolation(
+                        rule="PV407",
+                        message="stages are marked checkpointed but the plan "
+                        "carries no checkpoint_interval in its ring geometry",
+                    )
+                )
+            elif interval < io_batch:
+                v.append(
+                    PlanViolation(
+                        rule="PV407",
+                        message=f"checkpoint_interval={interval} < io_batch="
+                        f"{io_batch}: epoch barriers ride dispatch-unit "
+                        "boundaries, a shorter interval cannot be honored",
                     )
                 )
 

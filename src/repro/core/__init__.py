@@ -39,6 +39,13 @@ from .scheduler import HEURISTICS, Scheduler
 from .runtime import RunReport, StreamRuntime, run_graph, run_pipeline
 from .procrun import ProcessRuntime, UnstagedGraphWarning
 from .shm import ShmReorderRing, ShmSpscRing
+from .faults import (
+    DeadLetter,
+    FaultOptions,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+)
 from .api import (
     ConfigError,
     Engine,
@@ -51,6 +58,7 @@ from .api import (
     PlanVerificationError,
     ProcessOptions,
     Session,
+    SessionStarvation,
     ThreadOptions,
 )
 
@@ -66,7 +74,13 @@ __all__ = [
     "PlannedStage",
     "ProcessOptions",
     "Session",
+    "SessionStarvation",
     "ThreadOptions",
+    "DeadLetter",
+    "FaultOptions",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
     "AtomicFlag",
     "AtomicLong",
     "SerialAssigner",

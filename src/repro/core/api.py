@@ -49,6 +49,7 @@ from dataclasses import asdict, dataclass, field, fields
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
 
 from .costmodel import graph_flows, resolve_workers
+from .faults import FaultOptions
 from .operators import OpSpec, PARTITIONED, STATEFUL
 from .pipeline import CompiledPipeline, GraphPipeline
 from .procrun import ProcessRuntime, _chain_nodes
@@ -91,6 +92,19 @@ class PlanVerificationError(ConfigError):
         super().__init__(
             f"plan fails ordering-safety verification: {lines}"
         )
+
+
+class SessionStarvation(TimeoutError):
+    """``Session.results(timeout=...)`` starved past its deadline: no output
+    materialized for ``timeout`` continuous seconds while the session was
+    still open.  Carries a live ``snapshot`` dict (per-stage widths, backlog
+    slots, heartbeat counters, restart/replan counts — whatever the backend's
+    ``stats()`` exposes) captured at expiry, so a hang is diagnosable from
+    the exception alone; the snapshot is also rendered into the message."""
+
+    def __init__(self, message: str, snapshot: Optional[dict] = None):
+        self.snapshot = dict(snapshot or {})
+        super().__init__(message)
 
 
 def _check(cond: bool, message: str, key: Optional[str] = None) -> None:
@@ -141,6 +155,15 @@ class ProcessOptions:
     cores + 1); ``elastic`` forces replanning on/off (``None`` = on exactly
     when ``num_workers="auto"``); the ``replan_*`` trio tunes the occupancy
     monitor; ``parent_idle_cap`` caps the supervisor's idle nap.
+
+    Fault-tolerance dials (see ``docs/fault-tolerance.md``):
+    ``checkpoint_interval`` is the epoch length in serials for keyed/stateful
+    state snapshots (0 disables — those stages then abort the job on a worker
+    crash, the pre-checkpoint behavior); ``stall_timeout`` arms the
+    hung-process detector (seconds a worker/router heartbeat may freeze
+    before it is SIGKILLed into the crash-recovery path; ``None`` = off;
+    must exceed the worst single-unit operator time); ``spill_timeout`` is
+    the oversized-bundle relay deadline.
     """
 
     stages: Optional[int] = None
@@ -157,6 +180,9 @@ class ProcessOptions:
     replan_threshold: float = 0.55
     replan_patience: int = 3
     parent_idle_cap: float = 5e-4
+    checkpoint_interval: int = 1024
+    stall_timeout: Optional[float] = None
+    spill_timeout: float = 10.0
 
     def validate(self) -> None:
         """Raise :class:`ConfigError` on any out-of-range field."""
@@ -183,6 +209,16 @@ class ProcessOptions:
                key="replan_patience")
         _check(self.parent_idle_cap > 0, "parent_idle_cap must be > 0",
                key="parent_idle_cap")
+        _check(
+            isinstance(self.checkpoint_interval, int)
+            and self.checkpoint_interval >= 0,
+            "checkpoint_interval must be an int >= 0 (0 disables epochs)",
+            key="checkpoint_interval",
+        )
+        _check(self.stall_timeout is None or self.stall_timeout > 0,
+               "stall_timeout must be None (off) or > 0", key="stall_timeout")
+        _check(self.spill_timeout > 0, "spill_timeout must be > 0",
+               key="spill_timeout")
 
 
 _COMMON_KEYS = (
@@ -221,6 +257,9 @@ class EngineConfig:
     cost_priors: Optional[Dict[str, float]] = None
     thread: ThreadOptions = field(default_factory=ThreadOptions)
     process: ProcessOptions = field(default_factory=ProcessOptions)
+    #: fault-injection schedule + per-op on_error policy (process backend;
+    #: see core/faults.py and docs/fault-tolerance.md)
+    faults: FaultOptions = field(default_factory=FaultOptions)
 
     # ------------------------------------------------------------- parsing
     @classmethod
@@ -241,7 +280,7 @@ class EngineConfig:
         process_kw: Dict[str, Any] = {}
         subs: Dict[str, Any] = {}
         for key, value in kw.items():
-            if key in ("thread", "process"):  # whole sub-config objects/dicts
+            if key in ("thread", "process", "faults"):  # whole sub-configs
                 subs[key] = value
             elif key in _COMMON_KEYS:
                 common[key] = value
@@ -272,11 +311,13 @@ class EngineConfig:
                 )
         thread = subs.get("thread", None)
         process = subs.get("process", None)
+        faults = subs.get("faults", None)
         cfg = cls(
             thread=thread if thread is not None else ThreadOptions(**thread_kw),
             process=(
                 process if process is not None else ProcessOptions(**process_kw)
             ),
+            faults=faults if faults is not None else FaultOptions(),
             **common,
         )
         cfg.validate()
@@ -290,6 +331,15 @@ class EngineConfig:
             self.thread = ThreadOptions(**self.thread)
         if isinstance(self.process, dict):
             self.process = ProcessOptions(**self.process)
+        if isinstance(self.faults, dict):
+            self.faults = FaultOptions.from_dict(self.faults)
+        _check(isinstance(self.faults, FaultOptions),
+               f"faults must be a FaultOptions, got "
+               f"{type(self.faults).__name__}", key="faults")
+        try:
+            self.faults.validate()
+        except ValueError as exc:
+            raise ConfigError(str(exc), key="faults") from None
         _check(isinstance(self.thread, ThreadOptions),
                f"thread must be a ThreadOptions, got "
                f"{type(self.thread).__name__}", key="thread")
@@ -343,7 +393,10 @@ class EngineConfig:
         d = dict(d)
         thread = ThreadOptions(**d.pop("thread", {}))
         process = ProcessOptions(**d.pop("process", {}))
-        return cls(thread=thread, process=process, **d).validate()
+        faults = FaultOptions.from_dict(d.pop("faults", None) or {})
+        return cls(
+            thread=thread, process=process, faults=faults, **d
+        ).validate()
 
 
 # ------------------------------------------------------------------- plans
@@ -369,8 +422,10 @@ class PlannedStage:
     """One process-backend stage cut inside a :class:`PhysicalPlan`: the
     operator run it executes, its allocated worker-group width (``workers``,
     from the cost model under ``num_workers="auto"``), the elastic headroom
-    (``max_workers``), and the predicted per-tuple ``cost_us`` / relative
-    ``flow`` / ``load_share`` driving the allocation."""
+    (``max_workers``), the predicted per-tuple ``cost_us`` / relative
+    ``flow`` / ``load_share`` driving the allocation, and whether the stage
+    participates in epoch checkpointing (``checkpointed`` — keyed/stateful
+    stages with a non-zero ``checkpoint_interval`` and crash restarts on)."""
 
     index: int
     kind: str
@@ -380,6 +435,7 @@ class PlannedStage:
     cost_us: float
     flow: float
     load_share: float
+    checkpointed: bool = False
 
 
 class PhysicalPlan:
@@ -512,6 +568,25 @@ class PhysicalPlan:
                 f"reorder_size={r.get('reorder_size')} "
                 f"reorder_payload={r.get('reorder_payload')}"
             )
+            p = c.process
+            ckpt = [
+                f"s{s.index}" for s in self.stages
+                if getattr(s, "checkpointed", False)
+            ]
+            if ckpt:
+                lines.append(
+                    f"  checkpoint: interval="
+                    f"{r.get('checkpoint_interval') or p.checkpoint_interval} "
+                    f"stages=[{', '.join(ckpt)}] "
+                    f"stall_timeout={p.stall_timeout}"
+                )
+            else:
+                why = (
+                    "disabled"
+                    if p.checkpoint_interval == 0 or not p.restart_on_crash
+                    else "no keyed/stateful stage"
+                )
+                lines.append(f"  checkpoint: off ({why})")
             if self.unstaged:
                 # execution warns only when routing nodes land in the tail
                 # (a stages=N cap can strand plain ops there silently)
@@ -643,7 +718,11 @@ class JobResult:
     ``collect_outputs``), the :class:`~.runtime.RunReport`, the
     :class:`PhysicalPlan` actually executed (post elastic replans), latency
     ``markers``, the ``egress_count``, and the elastic/crash instrumentation
-    counters.  ``handle()`` wraps it in the legacy-shaped proxy."""
+    counters (``recoveries`` counts completed crash recoveries — group
+    restores and router re-forks; ``dead_letters`` holds the
+    :class:`~.faults.DeadLetter` tuples quarantined under the
+    ``on_error="dead_letter"`` policy).  ``handle()`` wraps it in the
+    legacy-shaped proxy."""
 
     outputs: list
     report: RunReport
@@ -652,6 +731,8 @@ class JobResult:
     egress_count: int
     replans: int = 0
     restarts: int = 0
+    recoveries: int = 0
+    dead_letters: list = field(default_factory=list)
     target: Any = field(default=None, repr=False)  # executed pipeline/runtime
 
     def handle(self) -> "JobHandle":
@@ -758,8 +839,9 @@ class Session:
         egress (= serial) order.  The iterator ends when the session is
         closed and fully drained; before that it waits for more output —
         bounded by ``timeout`` seconds of *continuous* starvation when given
-        (the clock resets whenever an output arrives; on expiry the iterator
-        simply stops).  ``max_items`` bounds this call.  Consumed outputs
+        (the clock resets whenever an output arrives; on expiry it raises
+        :class:`SessionStarvation` carrying a live per-stage backlog/
+        heartbeat snapshot).  ``max_items`` bounds this call.  Consumed outputs
         are released from memory as the iterator advances, so an indefinite
         session stays bounded by its in-flight window, not its history.
         """
@@ -792,7 +874,13 @@ class Session:
             if self._drained_after_close():
                 return
             if deadline is not None and time.perf_counter() > deadline:
-                return
+                snap = self._starvation_snapshot()
+                raise SessionStarvation(
+                    f"session.results() starved: no output for {timeout}s "
+                    f"(pushed={self._pushed}, egressed so far="
+                    f"{self._cursor}); live snapshot: {snap}",
+                    snapshot=snap,
+                )
             starved += 1
             self._idle_service(starved)
 
@@ -824,6 +912,14 @@ class Session:
 
     def _idle_service(self, starved: int) -> None:
         raise NotImplementedError
+
+    def _starvation_snapshot(self) -> dict:
+        """Live state attached to :class:`SessionStarvation`; backends with
+        richer liveness signals (heartbeats, backlog) extend ``stats()``."""
+        try:
+            return self.stats()
+        except Exception:  # diagnostics must not mask the starvation raise
+            return {}
 
     def _abort(self) -> None:
         raise NotImplementedError
@@ -982,8 +1078,11 @@ class _ProcessSession(Session):
             "egressed": rt.egress_count,
             "stage_widths": rt.stage_widths(),
             "backlog_slots": [x.backlog_slots() for x in rt._exchanges],
+            "heartbeats": [x.heartbeats() for x in rt._exchanges],
             "replans": rt.replans,
             "restarts": rt.restarts,
+            "recoveries": rt.recoveries,
+            "dead_letters": len(rt.dead_letters),
         }
 
     def close(self, drain_timeout: float = 60.0) -> RunReport:
@@ -1114,7 +1213,9 @@ class Engine:
         return JobResult(
             outputs=rt.outputs, report=report, plan=executed,
             markers=list(rt.markers), egress_count=rt.egress_count,
-            replans=rt.replans, restarts=rt.restarts, target=rt,
+            replans=rt.replans, restarts=rt.restarts,
+            recoveries=rt.recoveries, dead_letters=list(rt.dead_letters),
+            target=rt,
         )
 
     # ----------------------------------------------------------------- open
@@ -1227,6 +1328,11 @@ class Engine:
             replan_threshold=p.replan_threshold,
             replan_patience=p.replan_patience,
             parent_idle_cap=p.parent_idle_cap,
+            checkpoint_interval=p.checkpoint_interval,
+            stall_timeout=p.stall_timeout,
+            spill_timeout=p.spill_timeout,
+            fault_plan=cfg.faults.plan,
+            on_error=cfg.faults.on_error,
             stage_widths=stage_widths,
         )
 
@@ -1244,6 +1350,7 @@ class Engine:
                 cost_us=round(prof.cost_us, 3),
                 flow=round(prof.flow, 4),
                 load_share=round(prof.load / total, 4),
+                checkpointed=rt._ckpt_enabled(plan.index),
             )
             for plan, prof in zip(rt.stage_plans, profiles)
         ]
@@ -1254,6 +1361,12 @@ class Engine:
             "slot_bytes": rt.slot_bytes,
             "reorder_size": rt.reorder_size,
             "reorder_payload": rt.reorder_payload,
+            # effective epoch length: barriers stamp at dispatch-unit
+            # boundaries, so the interval never undercuts io_batch (PV407)
+            "checkpoint_interval": (
+                max(rt.checkpoint_interval, rt.io_batch)
+                if any(s.checkpointed for s in stages) else 0
+            ),
         }
         return PhysicalPlan(
             backend="process", config=self.config, ops=ops, routing=routing,

@@ -49,11 +49,35 @@ publish → advance, so a killed worker strands at most one uncommitted unit
 in shared memory; the parent re-forks a replacement onto the same rings and
 the unit is transparently re-processed (duplicate publishes are idempotent —
 see :mod:`.shm` — which requires segment functions to be **deterministic**).
-Stateless stages recover this way; keyed/stateful stages lose worker-local
-state on a crash, so there a dead worker raises instead of restarting.
-Router processes run no operator ``fn`` bodies (only a keyed stage's
-``key_fn``/``partitioner``, for routing); a router death — including one
-caused by a raising ``key_fn`` — is unrecoverable and raises.
+Stateless stages recover this way per-worker.  Keyed/stateful stages
+recover via **epoch checkpointing** (:mod:`.checkpoint`): the stage's
+feeder stamps ``TAG_BARRIER`` records every ``checkpoint_interval`` serials
+and keeps a replay log of every unit it pumped since the last complete
+epoch; workers snapshot their state at each barrier and ack it to a
+supervisor-held :class:`~.checkpoint.CheckpointStore`.  On a keyed/stateful
+worker crash the supervisor halts the feeder, kills the rest of the group,
+resets the ingress rings, re-forks the group preloaded with the epoch
+snapshots, and re-pumps the log — per-serial publish idempotence makes the
+recovered egress exact.  (``checkpoint_interval=0`` or
+``restart_on_crash=False`` restores the old behaviour: such a crash
+raises.)  Routers keep a crash-atomic *commit record* in the upstream
+reorder header (:meth:`~.shm.ShmReorderRing.commit`) and are likewise
+re-forked on death, resuming at the committed (read position, downstream
+serial) pair; downstream duplicates are absorbed by per-serial publish
+idempotence (stateless stages) or a worker-side ``last_seen`` trim
+(keyed/stateful stages — state must not be double-applied).  A hung-not-
+dead process (e.g. SIGSTOP) is caught by the supervisor's stall detector:
+every worker/router bumps a monotone shm heartbeat, and a counter frozen
+longer than ``stall_timeout`` gets SIGKILLed into the ordinary crash path.
+Out of scope (documented): simultaneous death of a router and one of its
+downstream workers, and a keyed/stateful crash after its feeder exited.
+
+Deterministic fault injection (:mod:`.faults`) drives the chaos battery:
+supervisor-side kill/hang/router-kill faults fire off drained-serial
+counters; worker-side ``op_error``/``spill_delay`` faults ride fork
+arguments.  Operator exceptions pass a per-op ``on_error`` policy —
+``raise`` | ``skip`` | ``dead_letter`` — with quarantined tuples shipped to
+the parent's ``dead_letters``.
 
 Payloads ride fixed-width ring slots (units and result bundles pickled,
 single int/float results raw); result bundles too large for a reorder slot
@@ -67,13 +91,20 @@ import itertools
 import multiprocessing
 import os
 import pickle
+import signal
+import threading
 import time
 import uuid
 import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
+from .checkpoint import CheckpointStore, decode_barrier, encode_barrier
 from .costmodel import CostModel, OccupancyMonitor, default_budget
+from .faults import (
+    DeadLetter, FaultPlan, HANG, InjectedFault, KILL, OP_ERROR, ROUTER_KILL,
+    SPILL_DELAY, resolve_policies,
+)
 from .operators import OpSpec, PARTITIONED, STATEFUL, STATELESS, _Marker
 from .pipeline import GraphPipeline, Merge, NodeSpec, Split, percentile_latencies
 from .runtime import RunReport
@@ -95,6 +126,15 @@ _COV_HOOK: Optional[Callable[[], None]] = None
 _IDLE_MIN = 2e-5
 _IDLE_MAX = 2e-3
 _CONN_POLL_IVL = 0.005  # router-side parent-pipe poll period (spills/control)
+
+
+def _sig_raise(signum, frame):
+    """SIGTERM/SIGINT handler installed while a stream is live: convert the
+    signal into SystemExit so the supervisor's ``finally: stop()`` path reaps
+    children and unlinks every shm segment.  The handler body must stay
+    lock-free (analysis rule FS303): it can interrupt the supervisor at an
+    arbitrary bytecode, including inside pipe/lock internals."""
+    raise SystemExit(128 + signum)
 
 
 class UnstagedGraphWarning(UserWarning):
@@ -261,10 +301,58 @@ def _apply_segment(ops: Sequence[OpSpec], states: list, value: Any) -> list:
     return vals
 
 
-def _publish(reorder, conn, serial, tag, data, span) -> None:
+def _apply_segment_safe(ops, states, value, policies):
+    """Policy-guarded :func:`_apply_segment`: an operator exception checks
+    its op's ``on_error`` policy — ``raise`` propagates, ``skip``/
+    ``dead_letter`` drop the input tuple's whole remaining expansion at that
+    op and return ``(outs_so_far=[], (op_name, error, policy))``.  Ops
+    earlier in the run have already seen the tuple (their state mutations
+    stand); the quarantine covers the op that raised."""
+    vals = [value]
+    for oi, op in enumerate(ops):
+        try:
+            nxt: list = []
+            if op.kind == STATELESS:
+                fn = op.fn
+                for v in vals:
+                    nxt.extend(fn(v))
+            elif op.kind == STATEFUL:
+                box = states[oi]
+                for v in vals:
+                    box[0], outs = op.fn(box[0], v)
+                    nxt.extend(outs)
+            else:
+                st_map = states[oi]
+                for v in vals:
+                    k = op.key_fn(v)
+                    s = st_map.get(k)
+                    if s is None:
+                        s = op.init_state()
+                    s, outs = op.fn(s, k, v)
+                    st_map[k] = s
+                    nxt.extend(outs)
+        except BaseException as exc:  # noqa: BLE001 — policy decides
+            pol = policies[oi]
+            if pol == "raise":
+                raise
+            return [], (op.name, f"{type(exc).__name__}: {exc}", pol)
+        vals = nxt
+        if not vals:
+            break
+    return vals, None
+
+
+def _publish(reorder, conn, serial, tag, data, span, beat=None,
+             spill_delay=None) -> None:
     """Publish one result slot, spilling oversized bodies via the pipe; spins
-    (with teardown escape) while the reorder window is full."""
+    (with teardown escape) while the reorder window is full.  ``beat`` keeps
+    the worker's heartbeat live through a long FULL spin (backpressure is
+    not a stall); ``spill_delay`` is the fault-injection hook."""
     if len(data) > reorder.payload_bytes:
+        if spill_delay:
+            spec = spill_delay.pop(serial, None)
+            if spec is not None:
+                time.sleep(spec.delay)
         conn.send(("spill", serial, tag, data))  # body via pipe, before the tag
         tag, data = shm.TAG_SPILL, b""
     spin = _IDLE_MIN
@@ -274,51 +362,114 @@ def _publish(reorder, conn, serial, tag, data, span) -> None:
             return
         if reorder.stopped():
             return
+        if beat is not None:
+            beat()
         time.sleep(spin)
         spin = min(spin * 2, _IDLE_MAX)
 
 
-def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None):
+def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None,
+                 stage=0, dedup=False, policies=None, child_faults=None):
     """Stage worker body (entered via fork; exits with os._exit).
 
     Consumes peek → process → publish → advance so a crash strands at most
     one uncommitted unit (see module docstring).  ``preload`` carries
-    migrated per-key state after an elastic resize (the supervisor filters
-    the merged stage state down to this worker's key ownership)."""
+    migrated per-key state (elastic resize) or a restored epoch snapshot
+    (crash recovery).  ``dedup`` (keyed/stateful stages) arms the
+    ``last_seen`` serial trim so duplicate units re-dispatched by a
+    restarted router are never re-applied to state.  Every publish is
+    guarded by :meth:`~.shm.ShmReorderRing.published` — replayed or
+    duplicate serials whose result already landed are skipped, never
+    republished (a second publisher could race the slot's reuse).
+
+    ``policies`` is one ``on_error`` policy per op (positional);
+    ``child_faults`` carries this worker's injected ``op_error``/
+    ``spill_delay`` triggers keyed by serial."""
     ingress.sync_consumer()  # crash replacement: resume at the shared cursor
     states = preload if preload is not None else _init_states(seg_ops)
     busy = 0.0
     processed = 0
     code = 0
-    # Only the FIRST peeked unit can be a crash replay (a dead predecessor's
-    # uncommitted unit), and only stateless stages are ever re-forked —
-    # contiguous TAG_UNIT traffic.  A replayed serial whose result survived
-    # the predecessor must be skipped, not republished: a duplicate publisher
-    # could clobber the slot concurrently with its reuse by serial+size once
-    # the drain moves past it.
-    replay = True
+    beat = ingress.beat
+    last_seen = 0  # highest serial applied to state (dedup stages only)
+    guarded = policies is not None and any(p != "raise" for p in policies)
+    op_err = (child_faults or {}).get(OP_ERROR) or None
+    spill_delay = (child_faults or {}).get(SPILL_DELAY) or None
+    dead: list = []  # (serial, op, value, error) quarantined this unit
+
+    def apply_one(serial, v):
+        if op_err is not None and serial in op_err:
+            op_err.pop(serial)
+            msg = f"injected operator error at serial {serial}"
+            pol = policies[0] if policies else "raise"
+            if pol == "raise":
+                raise InjectedFault(msg)
+            err = (seg_ops[0].name if seg_ops else "<injected>",
+                   f"InjectedFault: {msg}", pol)
+            outs = []
+        elif guarded:
+            outs, err = _apply_segment_safe(seg_ops, states, v, policies)
+        else:
+            outs, err = _apply_segment(seg_ops, states, v), None
+        if err is not None and err[2] == "dead_letter":
+            dead.append((serial, err[0], v, err[1]))
+        return outs
+
     try:
         idle = _IDLE_MIN
         while True:
+            beat()
+            # Sample the close flags BEFORE peeking: the producer publishes
+            # its last records before setting closed, and stores are ordered,
+            # so a peek issued after an observed close cannot miss a queued
+            # record.  Peek-then-check races — an empty peek, then put+close
+            # by the router, then the closed() read exits the worker with a
+            # record abandoned in the ring, wedging the downstream reorder.
+            closing = ingress.closed() or reorder.stopped()
             rec = ingress.peek()
             if rec is None:
-                if ingress.closed() or reorder.stopped():
+                if closing:
                     break
                 time.sleep(idle)
                 idle = min(idle * 2, _IDLE_MAX)
                 continue
             idle = _IDLE_MIN
             serial, tag, data, nslots = rec
+            if tag == shm.TAG_BARRIER:
+                # epoch checkpoint: snapshot state-after-serials-< boundary
+                # and ack over the pipe; nothing reaches the reorder ring.
+                # Acking before advance keeps the snapshot ≤1 barrier stale
+                # on a crash, and replayed barriers re-ack idempotently.
+                epoch = decode_barrier(data)
+                conn.send(("ckpt", wid, epoch, serial,
+                           pickle.dumps(states, _PICKLE)))
+                ingress.advance(nslots)
+                continue
             t_begin = time.perf_counter()
             if tag == shm.TAG_KUNIT:
                 serials, values, marks = pickle.loads(data)
+                if dedup and serials and serials[0] <= last_seen:
+                    # duplicate prefix from a restarted feeder: already
+                    # applied AND published by this same worker (keyed
+                    # routing is deterministic) — trim, don't re-apply
+                    cut = 0
+                    while cut < len(serials) and serials[cut] <= last_seen:
+                        cut += 1
+                    serials = serials[cut:]
+                    values = values[cut:]
+                    marks = [(i - cut, m) for i, m in marks if i >= cut]
+                    if not serials:
+                        ingress.advance(nslots)
+                        continue
                 by_off = dict(marks) if marks else None
                 results = []
                 for i, v in enumerate(values):
                     m = by_off.get(i) if by_off else None
                     if m is not None and not m.begin:
                         m.begin = time.perf_counter()
-                    results.append((serials[i], _apply_segment(seg_ops, states, v), m))
+                    results.append((serials[i], apply_one(serials[i], v), m))
+                if dedup:
+                    last_seen = serials[-1]
                 processed += len(values)
                 busy += time.perf_counter() - t_begin
                 # Per-SERIAL results so the downstream drain restores the
@@ -326,7 +477,10 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None):
                 # TAG_KBUNDLES slot at the unit's first serial (the drainer
                 # scatter-stashes the rest), so reorder-ring traffic stays
                 # per-unit.  Oversized batches fall back to per-tuple slots
-                # (which may individually spill).
+                # (which may individually spill).  Both modes are publish-
+                # guarded: the batching decision is deterministic, so a
+                # crash-replayed unit re-derives exactly the slot shape its
+                # predecessor used and the head check is exact.
                 entries = []
                 for s, outs, m in results:
                     if m is None:
@@ -338,13 +492,24 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None):
                     entries.append((s, btag, bdata))
                 blob = pickle.dumps(entries, _PICKLE) if len(entries) > 1 else b""
                 if len(entries) > 1 and len(blob) <= reorder.payload_bytes:
-                    _publish(reorder, conn, entries[0][0],
-                             shm.TAG_KBUNDLES, blob, 1)
+                    if not reorder.published(entries[0][0]):
+                        _publish(reorder, conn, entries[0][0],
+                                 shm.TAG_KBUNDLES, blob, 1, beat, spill_delay)
                 else:
                     for s, btag, bdata in entries:
-                        _publish(reorder, conn, s, btag, bdata, 1)
+                        if not reorder.published(s):
+                            _publish(reorder, conn, s, btag, bdata, 1,
+                                     beat, spill_delay)
             else:  # TAG_UNIT: contiguous serial span [serial, serial+len)
                 values, marks = pickle.loads(data)
+                if dedup and serial <= last_seen:
+                    cut = min(last_seen + 1 - serial, len(values))
+                    values = values[cut:]
+                    marks = [(i - cut, m) for i, m in marks if i >= cut]
+                    serial += cut
+                    if not values:
+                        ingress.advance(nslots)
+                        continue
                 by_off = dict(marks) if marks else None
                 bundles: list = []
                 out_marks: list = []
@@ -353,7 +518,7 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None):
                     m = by_off.get(i) if by_off else None
                     if m is not None and not m.begin:
                         m.begin = time.perf_counter()
-                    outs = _apply_segment(seg_ops, states, v)
+                    outs = apply_one(serial + i, v)
                     bundles.append(outs)
                     if m is not None:
                         if outs:
@@ -361,16 +526,20 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None):
                         else:
                             m.exit = time.perf_counter()
                             dropped.append(m)
+                if dedup:
+                    last_seen = serial + len(values) - 1
                 processed += len(values)
                 busy += time.perf_counter() - t_begin
-                if not (replay and reorder.published(serial)):
+                if not reorder.published(serial):
                     bdata = pickle.dumps((bundles, out_marks, dropped), _PICKLE)
                     _publish(
                         reorder, conn, serial, shm.TAG_BUNDLES, bdata,
-                        len(values),
+                        len(values), beat, spill_delay,
                     )
+            if dead:
+                conn.send(("dead", wid, dead))
+                dead = []
             ingress.advance(nslots)  # commit only after the publish (replay)
-            replay = False
     except BaseException as exc:  # noqa: BLE001 — forwarded to the parent
         code = 70
         try:
@@ -399,7 +568,7 @@ class _Dispatcher:
     otherwise).  Used by the parent (stage 0) and by every router."""
 
     def __init__(self, exchange: shm.ExchangeRing, plan: StagePlan,
-                 io_batch: int, max_inflight: int):
+                 io_batch: int, max_inflight: int, ckpt_interval: int = 0):
         self.x = exchange
         self.plan = plan
         self.workers = plan.workers  # ACTIVE width (<= exchange.consumers)
@@ -407,6 +576,19 @@ class _Dispatcher:
         self.max_inflight = max_inflight
         self.paused = False  # elastic replan: gate intake + liveness flushes
         self.keyed = plan.kind == "keyed"
+        # Epoch checkpointing (keyed/stateful stages only): stamp a barrier
+        # every ckpt_interval serials and keep a per-ring replay log of
+        # every record pumped since the last COMPLETE epoch — the group-
+        # restore recovery source (see module docstring).
+        self.ckpt_interval = max(int(ckpt_interval or 0), 0)
+        self.epoch = 0
+        self._last_boundary = 0
+        self._next_boundary = (
+            1 + self.ckpt_interval if self.ckpt_interval else None
+        )
+        self._log: list[collections.deque] = [
+            collections.deque() for _ in range(exchange.consumers)
+        ]
         # accumulators/queues sized at the exchange's max width so an elastic
         # resize only moves the active-width cursor, never reallocates
         if self.keyed:
@@ -446,8 +628,69 @@ class _Dispatcher:
             and self.inflight() < self.max_inflight
         )
 
+    # -- epoch barriers / replay log ----------------------------------------
+    def stamp_barrier(self) -> None:
+        """Seal the partials and append one ``TAG_BARRIER`` record per
+        active ring: every serial < the boundary precedes it in its ring
+        (per-ring FIFO), so a worker's barrier snapshot is exactly the
+        state-at-boundary.  Barriers ride the out-queues and the replay log
+        like any unit (a restored group re-acks them idempotently)."""
+        self.flush()
+        b = self.next_serial
+        if b == self._last_boundary:  # no serials since the last barrier
+            return
+        self.epoch += 1
+        self._last_boundary = b
+        payload = encode_barrier(self.epoch)
+        for w in range(self.workers):
+            self._outq[w].append((b, shm.TAG_BARRIER, payload))
+            self._queued += 1
+        self._next_boundary = b + self.ckpt_interval
+
+    def force_barrier(self) -> None:
+        """Stamp an out-of-cadence barrier now (supervisor ``ckpt_now``,
+        e.g. right after a router restart emptied the replay log)."""
+        if self._next_boundary is not None and not self.paused:
+            self.stamp_barrier()
+
+    def truncate_log(self, boundary: int) -> None:
+        """Epoch complete at ``boundary``: drop replayable records below it
+        (units are entirely < or ≥ a boundary — barriers flush first) and
+        the completed epoch's own barrier."""
+        for q in self._log:
+            while q:
+                serial, tag, _data = q[0]
+                if tag == shm.TAG_BARRIER:
+                    if serial > boundary:
+                        break
+                elif serial >= boundary:
+                    break
+                q.popleft()
+
+    def requeue_log(self) -> None:
+        """Group restore: move the replay log back to the out-queue heads
+        (the rings were reset; everything re-logs as it re-pumps)."""
+        for w in range(len(self._outq)):
+            log = self._log[w]
+            if log:
+                self._outq[w].extendleft(reversed(log))
+                self._queued += len(log)
+                self._log[w] = collections.deque()
+
+    def restore_serial(self, serial: int) -> None:
+        """Restarted-feeder resume: continue serial assignment exactly
+        where the commit record left off."""
+        self.next_serial = serial
+        if not self.keyed:
+            self._head_serial = serial
+
     # -- sealing ------------------------------------------------------------
     def add(self, value: Any, marker: Optional[_Marker]) -> None:
+        if (
+            self._next_boundary is not None
+            and self.next_serial >= self._next_boundary
+        ):
+            self.stamp_barrier()
         serial = self.next_serial
         self.next_serial += 1
         if self.keyed:
@@ -496,8 +739,12 @@ class _Dispatcher:
 
     # -- dispatch -----------------------------------------------------------
     def pump(self) -> bool:
-        """Move sealed units into ingress rings; True if anything moved."""
+        """Move sealed units into ingress rings; True if anything moved.
+        With checkpointing armed, every record that enters a ring is also
+        appended to that ring's replay log — the log is exactly what was
+        pumped since the last complete epoch, in per-ring order."""
         progress = False
+        log = self.ckpt_interval > 0
         for w, q in enumerate(self._outq):
             ring = self.x.rings[w]
             while q:
@@ -505,6 +752,8 @@ class _Dispatcher:
                 if not ring.put(serial, tag, data):
                     break  # ring full: backpressure, try again later
                 q.popleft()
+                if log:
+                    self._log[w].append((serial, tag, data))
                 self._queued -= 1
                 progress = True
         return progress
@@ -550,40 +799,113 @@ def _pump_router_conn(conn, spills, ctrl=None) -> None:
         pass
 
 
-def _await_spill(spills, serial, pump):
-    """Wait (≤ 10 s) for a spill body to land in ``spills`` via ``pump`` — a
-    callable draining pending pipe messages.  Shared by the parent (conns
-    sweep) and the routers (parent-relay pipe)."""
-    deadline = time.perf_counter() + 10.0
+def _await_spill(spills, serial, pump, timeout: float = 10.0, describe=None):
+    """Wait (≤ ``timeout`` s) for a spill body to land in ``spills`` via
+    ``pump`` — a callable draining pending pipe messages.  Shared by the
+    parent (conns sweep) and the routers (parent-relay pipe).  ``describe``
+    supplies stage/backlog context for the raise so a lost spill is
+    diagnosable from the exception alone."""
+    deadline = time.perf_counter() + timeout
     while time.perf_counter() < deadline:
         if serial in spills:
             return spills.pop(serial)
         pump()
         time.sleep(0.001)
-    raise TimeoutError(f"spilled bundle for serial {serial} never arrived")
+    ctx = f" ({describe()})" if describe is not None else ""
+    raise TimeoutError(
+        f"spilled bundle for serial {serial} never arrived within "
+        f"{timeout:.1f}s{ctx}; raise spill_timeout in ProcessOptions if the "
+        "pipe relay is just slow"
+    )
 
 
-def _router_main(ridx, upstream, exchange, conn, plan, io_batch, max_inflight):
+def _router_main(ridx, upstream, exchange, conn, plan, io_batch, max_inflight,
+                 ckpt_interval=0, spill_timeout=10.0):
     """Exchange-router body: drain the upstream stage's reorder ring (stream
     order), re-stamp serials, seal/route units into the downstream stage, and
     cascade EOF.  Never runs operator ``fn`` bodies — though keyed routing
     does evaluate the downstream head's ``key_fn``/``partitioner`` here.
 
-    Elastic replanning control rides the parent pipe: ``("pause",)`` makes
-    the router flush its partial units, stop feeding the stage, and ack with
-    ``("paused", ridx, next_serial)`` — the serial boundary the supervisor
-    quiesces to; ``("resume", new_width)`` re-points routing at the re-forked
-    group and continues the stream."""
-    disp = _Dispatcher(exchange, plan, io_batch, max_inflight)
+    The upstream drain is read-ahead/commit split (restartability): reads
+    move a router-local cursor, and the shared window — whose slots double
+    as the replay source for a router replacement — advances only at
+    :meth:`~.shm.ShmReorderRing.commit` points, taken when everything read
+    has durably left router memory (accumulators, out-queues, and scatter
+    stash all empty; forced via a flush once read-ahead spans half the
+    ring).  A freshly forked replacement resumes from the committed
+    (read position, downstream serial) pair via ``sync_drainer``.
+
+    Parent-pipe control verbs: ``("pause",)`` → flush, stop feeding, ack
+    ``("paused", ridx, next_serial)`` once drained (elastic quiesce);
+    ``("resume", new_width[, boundary])`` → re-point routing (and truncate
+    the replay log at the resize's synthetic checkpoint);
+    ``("ckpt_done", epoch, boundary)`` → truncate the replay log;
+    ``("ckpt_now",)`` → stamp an immediate barrier; ``("halt",)`` → ack
+    ``("halted", ridx)`` and block (touching nothing) until
+    ``("restore",)`` re-queues the replay log — the downstream group-restore
+    window."""
+    exchange.sync_feeder()  # restart: reload the ingress producer cursors
+    resume_serial = upstream.sync_drainer()  # restart: committed pair
+    disp = _Dispatcher(exchange, plan, io_batch, max_inflight, ckpt_interval)
+    if resume_serial > 1:
+        disp.restore_serial(resume_serial)
+    committed = upstream.read_pos()
+    commit_span = max(upstream.size // 2, 1)
+    want_commit = False
     spills: dict[int, tuple[int, bytes]] = {}
     ctrl: collections.deque = collections.deque()
-    pump_conn = lambda: _pump_router_conn(conn, spills, ctrl)  # noqa: E731
+
+    def pump_conn():
+        upstream.beat_drainer()
+        _pump_router_conn(conn, spills, ctrl)
+
+    def service_ctrl():
+        """Apply queued control verbs; blocks inside a halt window."""
+        while ctrl:
+            msg = ctrl.popleft()
+            if msg[0] == "pause":
+                disp.flush()  # seal partials: drain to a serial boundary
+                disp.paused = True
+                state["acked"] = False
+            elif msg[0] == "resume":
+                disp.set_workers(msg[1])
+                if len(msg) > 2:  # resize = synthetic checkpoint
+                    disp.truncate_log(msg[2])
+                disp.paused = False
+            elif msg[0] == "ckpt_done":
+                disp.truncate_log(msg[2])
+            elif msg[0] == "ckpt_now":
+                disp.force_barrier()
+            elif msg[0] == "halt":
+                # downstream group restore: ack immediately and freeze —
+                # the supervisor is about to reset our ingress rings, so
+                # nothing may be pumped until ("restore",) re-queues the log
+                conn.send(("halted", ridx))
+                while True:
+                    upstream.beat_drainer()
+                    if ctrl:
+                        m2 = ctrl.popleft()
+                        if m2[0] == "restore":
+                            disp.requeue_log()
+                            break
+                        continue  # drop stale verbs queued behind the halt
+                    if conn.poll(0.01):
+                        m2 = conn.recv()
+                        if m2[0] == "spill":
+                            spills[m2[1]] = (m2[2], m2[3])
+                        else:
+                            ctrl.append(m2)
+
+    state = {"acked": False}
+    describe = lambda: (  # noqa: E731
+        f"stage {ridx} router, ingress backlog "
+        f"{exchange.backlog_slots()} slots"
+    )
     busy = 0.0
     code = 0
     try:
         idle = _IDLE_MIN
         eof = False
-        acked = False
         conn_at = 0.0
         while not eof:
             if upstream.stopped():
@@ -595,27 +917,20 @@ def _router_main(ridx, upstream, exchange, conn, plan, io_batch, max_inflight):
                 # Connection.poll() is a ~20 µs syscall on this kernel
                 conn_at = now + _CONN_POLL_IVL
                 pump_conn()
-            while ctrl:
-                msg = ctrl.popleft()
-                if msg[0] == "pause":
-                    disp.flush()  # seal partials: drain to a serial boundary
-                    disp.paused, acked = True, False
-                elif msg[0] == "resume":
-                    disp.set_workers(msg[1])
-                    disp.paused = False
+            service_ctrl()
             if disp.paused:
                 if disp.pump():
                     continue  # keep moving sealed units into the rings
-                if not acked and not disp.pending():
+                if not state["acked"] and not disp.pending():
                     conn.send(("paused", ridx, disp.next_serial))
-                    acked = True
+                    state["acked"] = True
                 time.sleep(1e-3)
                 continue
             drained = 0
             if disp.ready():
                 t0 = time.perf_counter()
                 for _ in range(64):  # batch the drain: one pump per sweep
-                    got = upstream.poll()
+                    got = upstream.read_ahead()
                     if got is None:
                         break
                     t, tag, data, _span = got
@@ -623,11 +938,28 @@ def _router_main(ridx, upstream, exchange, conn, plan, io_batch, max_inflight):
                         eof = True
                         break
                     if tag == shm.TAG_SPILL:
-                        tag, data = _await_spill(spills, t, pump_conn)
+                        tag, data = _await_spill(
+                            spills, t, pump_conn, spill_timeout, describe
+                        )
                     _route_result(disp, conn, tag, data)
                     drained += 1
                 if drained:
                     busy += time.perf_counter() - t0
+            # commit policy: once read-ahead spans half the upstream window
+            # (publishers would soon stall on FULL), flush the partials and
+            # take the next safe commit point — everything read durably in
+            # the downstream rings, no scatter entries awaiting their serial
+            if upstream.read_pos() - committed >= commit_span:
+                want_commit = True
+                disp.flush()
+            if (
+                want_commit
+                and not disp.pending()
+                and not upstream.has_stashed()
+            ):
+                upstream.commit(disp.next_serial)
+                committed = upstream.read_pos()
+                want_commit = False
             if drained or eof:
                 idle = _IDLE_MIN
                 disp.pump()
@@ -635,6 +967,16 @@ def _router_main(ridx, upstream, exchange, conn, plan, io_batch, max_inflight):
             moved = disp.pump()
             if not moved and idle >= 1e-4:
                 moved = disp.stall_flush()  # liveness: see _Dispatcher
+                if (
+                    not moved
+                    and not disp.pending()
+                    and not upstream.has_stashed()
+                    and upstream.read_pos() > committed
+                ):
+                    # quiescent: bank the progress as a commit point
+                    upstream.commit(disp.next_serial)
+                    committed = upstream.read_pos()
+                    want_commit = False
             if moved:
                 idle = _IDLE_MIN
             else:
@@ -643,19 +985,28 @@ def _router_main(ridx, upstream, exchange, conn, plan, io_batch, max_inflight):
         if eof:
             disp.flush()
             spin = _IDLE_MIN
-            while disp.pending():  # drain our queue into the rings
-                if not disp.pump():
-                    if exchange.reorder.stopped():
-                        break
+            done = False
+            # Control stays serviced through the drain: a downstream group
+            # restore can halt us here and refill the queue from the replay
+            # log, which re-opens the close_ingress → publish_eof sequence.
+            while not done and not exchange.reorder.stopped():
+                pump_conn()
+                service_ctrl()
+                if disp.pending():  # drain our queue into the rings
+                    if disp.pump():
+                        spin = _IDLE_MIN
+                    else:
+                        time.sleep(spin)
+                        spin = min(spin * 2, _IDLE_MAX)
+                    continue
+                exchange.close_ingress()  # workers drain the rest, then exit
+                if disp.publish_eof():  # cascade EOF downstream
+                    done = True
+                else:
                     time.sleep(spin)
                     spin = min(spin * 2, _IDLE_MAX)
-            exchange.close_ingress()  # workers drain what is left, then exit
-            spin = _IDLE_MIN
-            while not disp.publish_eof():  # cascade EOF downstream
-                if exchange.reorder.stopped():
-                    break
-                time.sleep(spin)
-                spin = min(spin * 2, _IDLE_MAX)
+            if done and not upstream.has_stashed():
+                upstream.commit(disp.next_serial)  # final window release
     except BaseException as exc:  # noqa: BLE001
         code = 71
         try:
@@ -751,6 +1102,11 @@ class ProcessRuntime:
         replan_threshold: float = 0.55,
         replan_patience: int = 3,
         stage_widths: Optional[Sequence[int]] = None,  # pin a PhysicalPlan's widths
+        checkpoint_interval: int = 1024,  # serials per epoch; 0 disables
+        stall_timeout: Optional[float] = None,  # hung-process detector; None off
+        spill_timeout: float = 10.0,  # spill-body relay deadline (seconds)
+        fault_plan: Optional[FaultPlan] = None,  # chaos-harness schedule
+        on_error="raise",  # str | {op_name: str} of raise/skip/dead_letter
         **_ignored,  # thread-backend knobs (heuristic, ...) have no meaning here
     ):
         self.auto_workers = num_workers == "auto"
@@ -780,6 +1136,18 @@ class ProcessRuntime:
             io_batch = batch_size if batch_size and batch_size > 1 else 32
         self.io_batch = max(1, io_batch)
         self.restart_on_crash = restart_on_crash
+        if not isinstance(checkpoint_interval, int) or checkpoint_interval < 0:
+            raise ValueError(
+                "checkpoint_interval must be an int >= 0 (0 disables), got "
+                f"{checkpoint_interval!r}"
+            )
+        self.checkpoint_interval = checkpoint_interval
+        self.stall_timeout = stall_timeout
+        self.spill_timeout = float(spill_timeout)
+        self.fault_plan = fault_plan
+        if fault_plan is not None:
+            fault_plan.validate()
+        self.on_error = on_error
         # Parent nap ceiling while the stages grind.  On small boxes the
         # supervisor's wake rate competes with the worker groups for cores;
         # raising the cap trades a little drain latency for worker headroom.
@@ -881,6 +1249,19 @@ class ProcessRuntime:
         self._worker_processed = 0
         self.restarts = 0  # crash-recovery instrumentation
 
+        # fault-tolerance state (armed per start_stream in _setup)
+        self.dead_letters: List[DeadLetter] = []
+        self.recoveries = 0  # completed recovery events (group or router)
+        self.recovery_time_s = 0.0  # supervisor time inside group restores
+        self._ckpt: Optional[CheckpointStore] = None
+        self._log_floor: dict[int, int] = {}  # stage -> lowest replayable serial
+        self._beats: dict[int, tuple] = {}  # proc idx -> (pid, beat, ts)
+        self._halted: set[int] = set()  # stages whose feeder acked a halt
+        self._spill_cache: dict[int, dict[int, tuple]] = {}  # stage -> serial -> msg
+        self._dead_seen: set[tuple] = set()  # (stage, serial, op) dedup
+        self._fault_queue: list = []  # [FaultSpec, fired] pairs
+        self._prev_sig: list = []  # (signum, prior handler) to restore
+
         # elastic replanning state
         self._monitor: Optional[OccupancyMonitor] = None
         self._resizes: collections.deque = collections.deque()
@@ -926,14 +1307,36 @@ class ProcessRuntime:
         return groups
 
     # -------------------------------------------------------------- lifecycle
+    def _ckpt_enabled(self, stage: int) -> bool:
+        """Whether this stage recovers by epoch checkpoint + replay (only
+        keyed/stateful stages need it; stateless re-forks per worker)."""
+        return (
+            self.checkpoint_interval > 0
+            and self.restart_on_crash
+            and self.stage_plans[stage].kind in ("keyed", "stateful")
+        )
+
+    def _stage_ckpt_interval(self, stage: int) -> int:
+        # barriers stamp at dispatch-unit boundaries, so an interval below
+        # io_batch would degenerate to one epoch per unit; clamp (PV407)
+        if not self._ckpt_enabled(stage):
+            return 0
+        return max(self.checkpoint_interval, self.io_batch)
+
     def _fork_worker(self, stage: int, widx: int, slot: Optional[int] = None,
                      preload=None):
         x = self._exchanges[stage]
+        plan = self.stage_plans[stage]
         parent_conn, child_conn = self._ctx.Pipe(duplex=False)
+        child_faults = (
+            self.fault_plan.child_specs(stage, widx)
+            if self.fault_plan is not None else None
+        )
         proc = self._ctx.Process(
             target=_worker_main,
-            args=(widx, x.rings[widx], x.reorder, child_conn,
-                  self.stage_plans[stage].ops, preload),
+            args=(widx, x.rings[widx], x.reorder, child_conn, plan.ops,
+                  preload, stage, plan.kind != "stateless",
+                  resolve_policies(self.on_error, plan.ops), child_faults),
             daemon=True,
         )
         proc.start()
@@ -946,20 +1349,25 @@ class ProcessRuntime:
             self._procs[slot] = proc
             self._conns[slot] = parent_conn
 
-    def _fork_router(self, stage: int) -> None:
+    def _fork_router(self, stage: int, slot: Optional[int] = None) -> None:
         parent_conn, child_conn = self._ctx.Pipe(duplex=True)
         proc = self._ctx.Process(
             target=_router_main,
             args=(stage, self._exchanges[stage - 1].reorder,
                   self._exchanges[stage], child_conn,
-                  self.stage_plans[stage], self.io_batch, self.max_inflight),
+                  self.stage_plans[stage], self.io_batch, self.max_inflight,
+                  self._stage_ckpt_interval(stage), self.spill_timeout),
             daemon=True,
         )
         proc.start()
         child_conn.close()
-        self._procs.append(proc)
-        self._pinfo.append(("router", stage))
-        self._conns.append(parent_conn)
+        if slot is None:
+            self._procs.append(proc)
+            self._pinfo.append(("router", stage))
+            self._conns.append(parent_conn)
+        else:  # crash replacement: resumes from the reorder commit record
+            self._procs[slot] = proc
+            self._conns[slot] = parent_conn
         self._router_conns[stage] = parent_conn
 
     def _setup(self) -> None:
@@ -985,7 +1393,18 @@ class ProcessRuntime:
             self._fork_router(stage)
         self._disp = _Dispatcher(
             self._exchanges[0], self.stage_plans[0], self.io_batch,
-            self.max_inflight,
+            self.max_inflight, self._stage_ckpt_interval(0),
+        )
+        self._ckpt = CheckpointStore()
+        self._log_floor = {s: 1 for s in range(len(self.stage_plans))}
+        self._beats = {}
+        self._halted = set()
+        self._spill_cache = {}
+        self._dead_seen = set()
+        self.dead_letters = []
+        self._fault_queue = (
+            [[spec, False] for spec in self.fault_plan.supervisor_specs()]
+            if self.fault_plan is not None else []
         )
         self._eof_seen = False
         self._monitor = None
@@ -1003,6 +1422,12 @@ class ProcessRuntime:
 
     def stop(self) -> None:
         """Tear everything down; idempotent, always unlinks shared memory."""
+        for signum, prev in self._prev_sig:  # restore caller's handlers first
+            try:
+                signal.signal(signum, prev)
+            except (ValueError, OSError):
+                pass
+        self._prev_sig = []
         for x in self._exchanges:
             try:
                 x.request_stop()  # unstick FULL-spinning publishers/routers
@@ -1014,6 +1439,9 @@ class ProcessRuntime:
                 p.join(timeout=5.0)
                 if p.is_alive():
                     p.terminate()
+                    p.join(timeout=1.0)
+                if p.is_alive():  # SIGSTOPped children ignore SIGTERM
+                    p.kill()
                     p.join(timeout=1.0)
         self._drain_conns(final=True)
         for conn in self._conns:
@@ -1032,6 +1460,10 @@ class ProcessRuntime:
         self._active_replan = None
         self._resizes.clear()
         self._handoff = {}
+        self._ckpt = None
+        self._beats = {}
+        self._halted = set()
+        self._spill_cache = {}
 
     # ---------------------------------------------------------------- plumbing
     def _drain_conns(self, final: bool = False) -> None:
@@ -1054,12 +1486,51 @@ class ProcessRuntime:
         if kind == "spill":
             # Route the body to whoever drains that stage's reorder ring:
             # the next stage's router, or the parent for the final stage.
+            # Router-bound bodies are also cached until the drain commits
+            # past them — a restarted router re-reads the spill tag and the
+            # body in the dead router's memory is gone.
             stage = self._pinfo[idx][1]
             target = self._router_conns.get(stage + 1)
             if target is None:
                 self._spills[msg[1]] = (msg[2], msg[3])
             else:
-                target.send(msg)
+                self._spill_cache.setdefault(stage + 1, {})[msg[1]] = msg
+                try:
+                    target.send(msg)
+                except (BrokenPipeError, OSError):
+                    pass  # router died: the cache replays after its restart
+        elif kind == "ckpt":  # worker's epoch-barrier state snapshot
+            info = self._pinfo[idx]
+            stage = info[1]
+            done = self._ckpt.ack(
+                stage, msg[1], msg[2], msg[3], msg[4],
+                self.stage_plans[stage].workers,
+            )
+            if done is not None:  # epoch complete: truncate the replay log
+                self._log_floor[stage] = max(
+                    self._log_floor.get(stage, 1), done.boundary
+                )
+                if stage == 0:
+                    self._disp.truncate_log(done.boundary)
+                else:
+                    conn = self._router_conns.get(stage)
+                    if conn is not None:
+                        try:
+                            conn.send(("ckpt_done", done.epoch, done.boundary))
+                        except (BrokenPipeError, OSError):
+                            pass  # dead router keeps a longer log: harmless
+        elif kind == "dead":  # quarantined tuples (on_error="dead_letter")
+            info = self._pinfo[idx]
+            for serial, op, value, error in msg[2]:
+                key = (info[1], serial, op)
+                if key in self._dead_seen:
+                    continue  # duplicate unit re-processed after a restart
+                self._dead_seen.add(key)
+                self.dead_letters.append(
+                    DeadLetter(info[1], msg[1], serial, op, value, error)
+                )
+        elif kind == "halted":  # router acked a group-restore halt
+            self._halted.add(msg[1])
         elif kind == "stats":
             self._worker_busy += msg[2]
             self._worker_processed += msg[3]
@@ -1091,7 +1562,21 @@ class ProcessRuntime:
             self.markers.append(m)
 
     def _take_spill(self, serial: int) -> tuple[int, bytes]:
-        return _await_spill(self._spills, serial, self._drain_conns)
+        return _await_spill(
+            self._spills, serial, self._drain_conns, self.spill_timeout,
+            lambda: (
+                "final-stage drain, ingress backlog "
+                f"{self._exchanges[-1].backlog_slots()} slots"
+            ),
+        )
+
+    def _evict_spills(self) -> None:
+        """Drop cached spill bodies once their stage's drain has committed
+        past them (a restarted router can never re-request those serials)."""
+        for tstage, cache in self._spill_cache.items():
+            nxt = self._exchanges[tstage - 1].reorder.shared_next()
+            for s in [s for s in cache if s < nxt]:
+                del cache[s]
 
     # --------------------------------------------------------------- monitor
     def _check_procs(self) -> None:
@@ -1113,13 +1598,22 @@ class ProcessRuntime:
     def _on_crash(self, idx: int, proc) -> None:
         info = self._pinfo[idx]
         if info[0] == "router":
-            raise RuntimeError(
-                f"exchange router for stage {info[1]} died "
-                f"(exitcode {proc.exitcode})"
-            )
+            if not self.restart_on_crash:
+                raise RuntimeError(
+                    f"exchange router for stage {info[1]} died "
+                    f"(exitcode {proc.exitcode})"
+                )
+            self._recover_router(idx, info[1])
+            return
         _, stage, widx = info
         plan = self.stage_plans[stage]
         if not plan.recoverable:
+            # keyed/stateful: recover from the epoch checkpoint unless the
+            # operator explicitly opted out (checkpoint_interval=0 /
+            # restart_on_crash=False), which keeps the historical raise
+            if self._ckpt_enabled(stage):
+                self._restore_group(stage)
+                return
             raise RuntimeError(
                 f"worker process died in {plan.describe()}; worker-local "
                 "state is lost and cannot be replayed (only stateless stages "
@@ -1138,6 +1632,150 @@ class ProcessRuntime:
         # and duplicate publishes are idempotent (deterministic segments).
         self._fork_worker(stage, widx, slot=idx)
         self.restarts += 1
+
+    def _recover_router(self, idx: int, stage: int) -> None:
+        """Re-fork a dead exchange router onto the same exchanges.  The
+        replacement resumes from the upstream reorder's commit record (read
+        position + downstream serial); the window between the record and the
+        dead router's actual progress is re-dispatched, and downstream
+        absorbs the duplicates (worker ``last_seen`` trim on keyed/stateful
+        stages, per-serial publish idempotence on stateless ones)."""
+        rep = self._active_replan
+        if rep is not None and rep["stage"] == stage:
+            if rep["phase"] == "collect":
+                raise RuntimeError(
+                    f"exchange router for stage {stage} died while its "
+                    "elastic replan was collecting worker state; the "
+                    "quiesce boundary is unrecoverable"
+                )
+            self._abort_replan()  # pre-quiesce: nothing irreversible yet
+        try:
+            self._conns[idx].close()
+        except Exception:
+            pass
+        rec = self._exchanges[stage - 1].reorder.commit_record()
+        resume = rec[1] if rec is not None else 1
+        if self._ckpt_enabled(stage):
+            # the dead router's replay log died with it: the new log only
+            # covers serials >= resume, so checkpoints older than that can
+            # no longer restore this stage — and a fresh barrier is forced
+            # below to close the exposure window fast
+            self._log_floor[stage] = max(self._log_floor.get(stage, 1), resume)
+        self._fork_router(stage, slot=idx)
+        conn = self._router_conns[stage]
+        for _serial, msg in sorted(self._spill_cache.get(stage, {}).items()):
+            try:
+                conn.send(msg)  # bodies the dead router held in memory
+            except (BrokenPipeError, OSError):
+                break
+        if self._ckpt_enabled(stage):
+            try:
+                conn.send(("ckpt_now",))
+            except (BrokenPipeError, OSError):
+                pass
+        self.restarts += 1
+        self.recoveries += 1
+
+    def _restore_group(self, stage: int) -> None:
+        """Keyed/stateful crash recovery: halt the stage's feeder, kill the
+        remaining group members (their state is mid-epoch and must not
+        advance), reset the ingress rings, re-fork the group preloaded with
+        the latest complete epoch snapshot, and re-pump the feeder's replay
+        log from the epoch boundary.  Runs synchronously in the supervisor —
+        the stream stalls for the duration (measured in
+        ``recovery_time_s``)."""
+        t0 = time.perf_counter()
+        plan = self.stage_plans[stage]
+        x = self._exchanges[stage]
+        rep = self._active_replan
+        if rep is not None and rep["stage"] == stage:
+            if rep["phase"] == "collect":
+                raise RuntimeError(
+                    f"worker group of stage {stage} lost a member while "
+                    "handing off elastic-resize state; the handoff snapshot "
+                    "is incomplete and cannot be restored"
+                )
+            self._abort_replan()  # pre-quiesce: nothing irreversible yet
+        ckpt = self._ckpt.latest(stage)
+        boundary = ckpt.boundary if ckpt is not None else 1
+        floor = self._log_floor.get(stage, 1)
+        if boundary < floor:
+            raise RuntimeError(
+                f"cannot restore stage {stage}: the replay log covers serials"
+                f" >= {floor} but the latest checkpoint boundary is "
+                f"{boundary} (its feeder restarted before a fresh epoch "
+                "completed)"
+            )
+        # -- halt the feeder: nothing may enter the rings while they reset
+        if stage > 0:
+            ridx = self._router_slot(stage)
+            conn = self._router_conns.get(stage)
+            alive = (
+                ridx is not None and self._procs[ridx] is not None
+                and self._procs[ridx].is_alive()
+            )
+            if not alive or conn is None:
+                raise RuntimeError(
+                    f"worker died in {plan.describe()} but its feeder router "
+                    "is gone too; simultaneous feeder+worker failures are "
+                    "unrecoverable (the replay window died with the router)"
+                )
+            self._halted.discard(stage)
+            conn.send(("halt",))
+            deadline = time.perf_counter() + 10.0
+            while stage not in self._halted:
+                self._drain_conns()
+                if not self._procs[ridx].is_alive():
+                    raise RuntimeError(
+                        f"stage {stage} feeder router died during the group "
+                        "restore; simultaneous failures are unrecoverable"
+                    )
+                if time.perf_counter() > deadline:
+                    raise RuntimeError(
+                        f"stage {stage} feeder failed to halt for group "
+                        "restore within 10s"
+                    )
+                time.sleep(1e-3)
+        # -- kill and reap the rest of the group (later-wins slot map: a
+        # resized stage leaves dead pinfo entries behind at the old width)
+        slots: dict[int, int] = {}
+        for i, info in enumerate(self._pinfo):
+            if info[0] != "worker" or info[1] != stage:
+                continue
+            slots[info[2]] = i
+            p = self._procs[i]
+            if p is not None:
+                if p.is_alive():
+                    try:
+                        os.kill(p.pid, signal.SIGKILL)
+                    except (ProcessLookupError, OSError):
+                        pass
+                p.join(timeout=5.0)
+                self._procs[i] = None
+            try:
+                if self._conns[i] is not None:
+                    self._conns[i].close()
+            except Exception:
+                pass
+        # -- reset the rings and re-fork at the same width with the snapshot
+        x.reopen_ingress()  # EOF may already have closed them
+        x.reset_ingress()
+        self._ckpt.clear_pending(stage)
+        blobs = ckpt.blobs if ckpt is not None else {}
+        for widx in range(plan.workers):
+            blob = blobs.get(widx)
+            preload = pickle.loads(blob) if blob is not None else None
+            self._fork_worker(stage, widx, slot=slots.get(widx),
+                              preload=preload)
+        # -- re-pump everything since the boundary
+        if stage == 0:
+            self._disp.requeue_log()
+        else:
+            self._router_conns[stage].send(("restore",))
+            self._halted.discard(stage)
+        self.restarts += plan.workers
+        self.recoveries += 1
+        self.recovery_time_s += time.perf_counter() - t0
 
     # ------------------------------------------------------ elastic replanning
     # Protocol (see docs/architecture.md): pause the stage's feeder → let the
@@ -1249,13 +1887,32 @@ class ProcessRuntime:
             self._fork_worker(stage, j, preload=preloads[j])
         plan.workers = new_w
         x.set_active_width(new_w)
+        ckpt_boundary = None
+        if self._ckpt_enabled(stage):
+            # the quiesced handoff IS a complete snapshot at the new width:
+            # bank it as a synthetic checkpoint so a later crash restores at
+            # the resized sharding, and truncate the replay log below it
+            boundary = rep["boundary"]
+            self._ckpt.clear_pending(stage)
+            self._ckpt.force(stage, boundary, {
+                j: pickle.dumps(preloads[j], _PICKLE) for j in range(new_w)
+            })
+            self._log_floor[stage] = max(
+                self._log_floor.get(stage, 1), boundary
+            )
+            ckpt_boundary = boundary
         if stage == 0:
+            if ckpt_boundary is not None:
+                self._disp.truncate_log(ckpt_boundary)
             self._disp.set_workers(new_w)
             self._disp.paused = False
         else:
             conn = self._router_conns.get(stage)
             if conn is not None:
-                conn.send(("resume", new_w))
+                if ckpt_boundary is not None:
+                    conn.send(("resume", new_w, ckpt_boundary))
+                else:
+                    conn.send(("resume", new_w))
         self.replans += 1
         self._active_replan = None
 
@@ -1307,6 +1964,70 @@ class ProcessRuntime:
             preloads.append(states_j)
         return preloads
 
+    # ------------------------------------------------------- stall supervision
+    def _check_stalls(self, now: float) -> None:
+        """Hung-process detector: every worker bumps a heartbeat in its
+        ingress ring header (also while spinning on a FULL reorder window)
+        and every router one in the upstream reorder header.  A live process
+        whose counter is frozen longer than ``stall_timeout`` is presumed
+        hung (SIGSTOP, deadlocked fn, ...) and SIGKILLed — which converts it
+        into an ordinary crash the next :meth:`_check_procs` pass recovers.
+        ``stall_timeout`` must exceed the worst single-unit operator time,
+        or a slow-but-healthy worker gets shot mid-unit."""
+        for idx, p in enumerate(self._procs):
+            if p is None or not p.is_alive():
+                self._beats.pop(idx, None)
+                continue
+            info = self._pinfo[idx]
+            if info[0] == "worker":
+                hb = self._exchanges[info[1]].rings[info[2]].heartbeat()
+            else:  # router: drains the upstream stage's reorder ring
+                hb = self._exchanges[info[1] - 1].reorder.drainer_heartbeat()
+            prev = self._beats.get(idx)
+            if prev is None or prev[0] != p.pid or prev[1] != hb:
+                self._beats[idx] = (p.pid, hb, now)
+                continue
+            if now - prev[2] > self.stall_timeout:
+                try:
+                    os.kill(p.pid, signal.SIGKILL)  # works on stopped procs
+                except (ProcessLookupError, OSError):
+                    pass
+                self._beats.pop(idx, None)
+
+    def _drive_faults(self, now: float) -> None:
+        """Fire due supervisor-side injected faults (see :mod:`.faults`):
+        each spec triggers once, when its stage's drained-serial counter
+        crosses the spec's serial — stream-position-deterministic, not
+        wall-clock-deterministic."""
+        for item in self._fault_queue:
+            spec, fired = item
+            if fired:
+                continue
+            stage = min(spec.stage, len(self.stage_plans) - 1)
+            if self._exchanges[stage].reorder.shared_next() <= spec.serial:
+                continue
+            item[1] = True
+            target = None
+            if spec.kind == ROUTER_KILL:
+                ridx = self._router_slot(max(stage, 1))
+                if ridx is not None:
+                    target = self._procs[ridx]
+            else:
+                for i, info in enumerate(self._pinfo):
+                    if (
+                        info[0] == "worker" and info[1] == stage
+                        and info[2] == spec.worker
+                        and self._procs[i] is not None
+                    ):
+                        target = self._procs[i]
+            if target is None or not target.is_alive():
+                continue  # already gone: the fault is moot
+            sig = signal.SIGSTOP if spec.kind == HANG else signal.SIGKILL
+            try:
+                os.kill(target.pid, sig)
+            except (ProcessLookupError, OSError):
+                pass
+
     # ------------------------------------------------------------------ drive
     # The parent-side drive surface is split into a push-driven *stream
     # protocol* — start_stream() → stream_push()* → end_stream() →
@@ -1325,6 +2046,19 @@ class ProcessRuntime:
         explicit ``cost_priors`` — elastic replanning, when enabled, refines
         them live from observed occupancy."""
         self._setup()
+        # Graceful Ctrl-C / SIGTERM: convert to SystemExit so the callers'
+        # ``finally: stop()`` reaps children and unlinks every shm segment.
+        # Only legal (and only installed) on the main thread; prior handlers
+        # are restored in stop().
+        # analysis: ignore[FS301]: read-only main-thread identity query; no primitive is created, nothing crosses the fork
+        if threading.current_thread() is threading.main_thread():
+            for signum in (signal.SIGTERM, signal.SIGINT):
+                try:
+                    self._prev_sig.append(
+                        (signum, signal.signal(signum, _sig_raise))
+                    )
+                except (ValueError, OSError):
+                    pass
         self._stream_t0 = time.perf_counter()
         self._n_in = 0
         self._src_done = False
@@ -1390,7 +2124,13 @@ class ProcessRuntime:
         if now >= self._monitor_at:
             self._monitor_at = now + 0.02
             self._drain_conns()
+            if self._fault_queue:
+                self._drive_faults(now)
             self._check_procs()
+            if self.stall_timeout is not None:
+                self._check_stalls(now)
+            if self._spill_cache:
+                self._evict_spills()
             if self._monitor is not None or self._active_replan:
                 self._drive_elastic(now, self._src_done)
         if progress:

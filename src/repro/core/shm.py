@@ -95,6 +95,10 @@ TAG_KBUNDLES = 12  # batched keyed results: pickle([(serial, tag, data), ...])
 # published as ONE slot at the unit's first serial; the drainer scatters the
 # non-head serials into a local stash (see ShmReorderRing.poll), which is
 # what keeps a keyed stage's reorder traffic per-unit instead of per-tuple
+TAG_BARRIER = 13  # epoch checkpoint barrier riding an ingress ring: the
+# serial field is the epoch's boundary serial B (state after every serial
+# < B), the payload is the 8-byte epoch number.  Workers snapshot and ack
+# over their pipe; nothing is published to the reorder ring for a barrier.
 
 _I8 = struct.Struct("<q")
 _F8 = struct.Struct("<d")
@@ -145,7 +149,8 @@ class ShmSpscRing:
     """
 
     _HDR = 64  # tail:8 @0 (producer-owned), head:8 @8 (consumer-owned),
-    # closed:8 @16 (producer-owned), handoff:8 @24 (supervisor-owned)
+    # closed:8 @16 (producer-owned), handoff:8 @24 (supervisor-owned),
+    # heartbeat:8 @32 (consumer-owned monotone liveness counter)
     _REC = struct.Struct("<IBq")  # total_len, tag, serial
 
     def __init__(self, name_prefix: str, slots: int = 4096, slot_bytes: int = 512):
@@ -161,6 +166,7 @@ class ShmSpscRing:
         self._buf[: self._HDR] = bytes(self._HDR)
         self._tail = 0  # producer-side mirror
         self._head = 0  # consumer-side mirror
+        self._beat = 0  # consumer-side heartbeat mirror
         self.name = self._shm.name
 
     @property
@@ -176,6 +182,16 @@ class ShmSpscRing:
         _I8.pack_into(self._buf, off, v)
 
     # -- producer -----------------------------------------------------------
+    def sync_producer(self) -> None:
+        """Reload the producer cursor from shared memory.
+
+        A replacement producer process (router crash re-fork) inherits the
+        supervisor's stale tail mirror — usually 0, since the parent never
+        puts into interior rings; writing with it would rewind the shared
+        tail and orphan every queued record.  Re-read the authoritative
+        value before the first :meth:`put`."""
+        self._tail = self._load(0)
+
     def put(self, serial: int, tag: int, data: bytes) -> bool:
         """Append one record; returns False if the ring lacks space."""
         total = self._REC.size + len(data)
@@ -226,6 +242,15 @@ class ShmSpscRing:
         self._store(16, 0)
         self._store(24, 0)
 
+    def reset_to_tail(self) -> None:
+        """Supervisor-side group-restore reset: discard every queued record
+        by moving the consumer cursor to the producer cursor.  Only legal
+        once the consumer process is dead (the supervisor briefly becomes the
+        sole writer of the head); the feeder then re-pumps the discarded
+        window from its replay log and a freshly forked consumer resumes via
+        :meth:`sync_consumer`."""
+        self._store(8, self._load(0))
+
     # -- progress counters (any process) ------------------------------------
     def consumed_slots(self) -> int:
         """Slots the consumer has committed — a monotone per-worker progress
@@ -236,6 +261,19 @@ class ShmSpscRing:
         """Slots currently queued (produced − consumed): the stage-occupancy
         signal behind elastic replanning."""
         return max(self._load(0) - self._load(8), 0)
+
+    # -- liveness heartbeat (consumer writes, supervisor reads) -------------
+    def beat(self) -> None:
+        """Consumer-side liveness tick.  Monotone and written on every main
+        loop pass (including idle naps and FULL publish spins), so a frozen
+        counter means the consumer is hung or dead — the supervisor's stall
+        detector SIGKILLs it and lets the crash path recover."""
+        self._beat += 1
+        self._store(32, self._beat)
+
+    def heartbeat(self) -> int:
+        """Current consumer heartbeat value (supervisor-side sample)."""
+        return self._load(32)
 
     # -- consumer -----------------------------------------------------------
     def sync_consumer(self) -> None:
@@ -320,10 +358,24 @@ class ShmReorderRing:
     contiguous prefix and is the sole writer of ``next``.  Header offset 8 is
     a supervisor-owned ``stop`` flag: publishers spinning on a FULL window
     and idle drainers check it so teardown never strands a process.
+
+    Drains come in two flavours.  :meth:`poll` is read-and-commit in one
+    step (the parent's final-ring drain).  A *restartable* drainer (an
+    exchange router) instead uses :meth:`read_ahead` — which moves only a
+    local cursor, leaving the shared ``next`` (and therefore the publish
+    window, whose slots double as the replay source) behind — and
+    :meth:`commit`, which widens the window only after everything read has
+    been durably handed downstream.  ``commit`` also double-buffers a
+    *commit record* ``(read_pos, downstream_next_serial)`` in the header:
+    two slots plus an index written last, so a drainer SIGKILLed mid-commit
+    always leaves one complete pair for its replacement
+    (:meth:`sync_drainer` / :meth:`commit_record`).
     """
 
-    _HDR = 64  # next:8 @0 (drainer-owned), stop:8 @8 (supervisor-owned),
-    # active group width:8 @16 (supervisor-owned metadata)
+    _HDR = 128  # next:8 @0 (drainer-owned), stop:8 @8 (supervisor-owned),
+    # active group width:8 @16 (supervisor-owned metadata),
+    # drainer heartbeat:8 @24, commit record slots A/B:16 @32/@48
+    # (read_pos, downstream serial), active record index:8 @64 (0 = none)
     _SLOT_HDR = struct.Struct("<qIIB")  # seq, len, span, tag
 
     PUBLISHED = 0
@@ -345,7 +397,8 @@ class ShmReorderRing:
         for j in range(size):
             _I8.pack_into(self._buf, self._HDR + j * self.slot_bytes, 0)
         _I8.pack_into(self._buf, 0, 1)  # next = 1
-        self._next = 1  # drainer-side mirror
+        self._next = 1  # drainer-side mirror (read cursor; see read_ahead)
+        self._beat = 0  # drainer-side heartbeat mirror
         # drainer-local scatter stash for TAG_KBUNDLES slots: a keyed worker
         # publishes a whole unit's results (interleaved serials) as one slot
         # at the unit's first serial; the remaining (serial -> (tag, data))
@@ -382,9 +435,10 @@ class ShmReorderRing:
         return self.PUBLISHED
 
     # -- drainer side -------------------------------------------------------
-    def poll(self) -> Optional[Tuple[int, int, bytes, int]]:
-        """Consume the next in-order slot -> (serial, tag, payload, span);
-        ``next`` advances past the slot's whole serial span.  A
+    def read_ahead(self) -> Optional[Tuple[int, int, bytes, int]]:
+        """Consume the next in-order slot -> (serial, tag, payload, span)
+        advancing only the drainer-LOCAL cursor — the shared ``next`` (and
+        with it the publish window) moves at :meth:`commit` time.  A
         ``TAG_KBUNDLES`` slot is unpacked transparently: the head serial's
         entry is returned now, the rest scatter into the drainer-local stash
         and are returned when the sweep reaches their serials."""
@@ -410,8 +464,81 @@ class ShmReorderRing:
             tag, data = hit
             span = 1
         self._next += max(span, 1)
-        _I8.pack_into(self._buf, 0, self._next)  # widen the window
         return t, tag, data, span
+
+    def poll(self) -> Optional[Tuple[int, int, bytes, int]]:
+        """Read-and-commit drain (the parent's final ring): every
+        :meth:`read_ahead` is immediately committed, so the publish window
+        tracks the read cursor exactly — the pre-recovery semantics."""
+        got = self.read_ahead()
+        if got is not None:
+            _I8.pack_into(self._buf, 0, self._next)  # widen the window
+        return got
+
+    def commit(self, downstream_serial: int) -> None:
+        """Publish drain progress: widen the shared window to the local read
+        cursor and record ``(read_pos, downstream_serial)`` — the pair a
+        replacement drainer resumes from.  The caller guarantees everything
+        read so far is durably pumped downstream (its out-queues, partial
+        accumulators, and scatter stash are all empty), so slots below the
+        cursor may be recycled.  The record is double-buffered with the
+        index stored last: a SIGKILL mid-commit leaves the previous complete
+        pair active."""
+        idx = _I8.unpack_from(self._buf, 64)[0]
+        new = 2 if idx == 1 else 1
+        base = 32 if new == 1 else 48
+        _I8.pack_into(self._buf, base, self._next)
+        _I8.pack_into(self._buf, base + 8, downstream_serial)
+        _I8.pack_into(self._buf, 64, new)
+        _I8.pack_into(self._buf, 0, self._next)  # widen the window last
+
+    def commit_record(self) -> Optional[Tuple[int, int]]:
+        """The active ``(read_pos, downstream_serial)`` commit pair, or None
+        if this ring's drainer has never committed."""
+        idx = _I8.unpack_from(self._buf, 64)[0]
+        if idx == 0:
+            return None
+        base = 32 if idx == 1 else 48
+        return (
+            _I8.unpack_from(self._buf, base)[0],
+            _I8.unpack_from(self._buf, base + 8)[0],
+        )
+
+    def sync_drainer(self) -> int:
+        """Restarted-drainer resume: reload the read cursor from the commit
+        record (falling back to the shared ``next``), clear the local stash,
+        and return the downstream serial to resume dispatch at.  Also
+        re-publishes the window at the committed position — a predecessor
+        killed between writing the record and widening the window left the
+        two an index apart, and the record is the later, authoritative one."""
+        rec = self.commit_record()
+        if rec is None:
+            self._next = _I8.unpack_from(self._buf, 0)[0]
+            serial = 1
+        else:
+            self._next, serial = rec
+            _I8.pack_into(self._buf, 0, self._next)
+        self._stash = {}
+        return serial
+
+    def has_stashed(self) -> bool:
+        """Whether KBUNDLES scatter entries are still awaiting their serials
+        (a commit while stashed would let their source slot be recycled)."""
+        return bool(self._stash)
+
+    def read_pos(self) -> int:
+        """Drainer-local read cursor (may run ahead of the shared window)."""
+        return self._next
+
+    # -- drainer heartbeat (drainer writes, supervisor reads) ---------------
+    def beat_drainer(self) -> None:
+        """Drainer-side liveness tick (see :meth:`ShmSpscRing.beat`)."""
+        self._beat += 1
+        _I8.pack_into(self._buf, 24, self._beat)
+
+    def drainer_heartbeat(self) -> int:
+        """Current drainer heartbeat value (supervisor-side sample)."""
+        return _I8.unpack_from(self._buf, 24)[0]
 
     @property
     def next_serial(self) -> int:
@@ -542,6 +669,23 @@ class ExchangeRing:
         :meth:`ShmSpscRing.reopen_ring`)."""
         for r in self.rings:
             r.reopen_ring()
+
+    def reset_ingress(self) -> None:
+        """Group-restore: discard every queued ingress record (the feeder
+        re-pumps them from its replay log).  Only legal with the consumer
+        group dead — see :meth:`ShmSpscRing.reset_to_tail`."""
+        for r in self.rings:
+            r.reset_to_tail()
+
+    def sync_feeder(self) -> None:
+        """Restarted-feeder resume: reload every ingress ring's producer
+        cursor (see :meth:`ShmSpscRing.sync_producer`)."""
+        for r in self.rings:
+            r.sync_producer()
+
+    def heartbeats(self) -> list:
+        """Per-worker consumer heartbeat samples (stall detection)."""
+        return [r.heartbeat() for r in self.rings]
 
     def request_stop(self) -> None:
         self.reorder.request_stop()

@@ -55,6 +55,23 @@ def lists(elements: _Strategy, min_size=0, max_size=None) -> _Strategy:
     return _Strategy(draw, lambda: [elements.minimal() for _ in range(min_size)])
 
 
+def sets(elements: _Strategy, min_size=0, max_size=None) -> _Strategy:
+    hi = min_size + 20 if max_size is None else max_size
+
+    def fill(rng, size):
+        out = set()
+        for _ in range(1000):  # bounded: small element domains may saturate
+            if len(out) >= size:
+                break
+            out.add(elements.draw(rng))
+        return out
+
+    def draw(rng):
+        return fill(rng, rng.randint(min_size, hi))
+
+    return _Strategy(draw, lambda: fill(random.Random(0), min_size))
+
+
 def permutations(values) -> _Strategy:
     values = list(values)
 
@@ -70,6 +87,7 @@ strategies = SimpleNamespace(
     integers=integers,
     lists=lists,
     sampled_from=sampled_from,
+    sets=sets,
     permutations=permutations,
 )
 

@@ -1,0 +1,24 @@
+"""Fixture: lock acquisition inside a signal handler -> FS303."""
+import signal
+from threading import Lock
+
+_state_lock = Lock()
+_shutdown = False
+
+
+def _on_term(signum, frame):
+    global _shutdown
+    with _state_lock:  # the interrupted thread may already hold this
+        _shutdown = True
+
+
+def _on_int(signum, frame):
+    _state_lock.acquire()  # same deadlock, spelled explicitly
+    try:
+        pass
+    finally:
+        _state_lock.release()
+
+
+signal.signal(signal.SIGTERM, _on_term)
+signal.signal(signal.SIGINT, _on_int)

@@ -33,7 +33,7 @@ FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 _FIXTURE_RULES = [
     "GB101", "GB102", "GB103", "GB104",
     "LK201", "LK202", "LK203",
-    "FS301", "FS302",
+    "FS301", "FS302", "FS303",
     "AN001", "AN002",
 ]
 
@@ -204,6 +204,32 @@ def test_keyed_width_above_partitions_is_rejected():
         raise_on_violation=False
     )}
     assert "PV402" in rules
+
+
+def test_checkpoint_geometry_is_verified():
+    d = _stateful_plan_dict()
+    # engine-built: the stateful stage checkpoints, the interval covers a
+    # full dispatch unit, and the plan verifies clean
+    assert any(s["checkpointed"] for s in d["stages"])
+    assert d["ring"]["checkpoint_interval"] >= d["ring"]["io_batch"]
+    assert PhysicalPlan.from_dict(d).verify(raise_on_violation=False) == []
+    # a stateless stage cannot checkpoint (no state to snapshot)
+    bad = _stateful_plan_dict()
+    idx = next(
+        i for i, s in enumerate(bad["stages"]) if s["kind"] == "stateless"
+    )
+    bad["stages"][idx]["checkpointed"] = True
+    rules = {v.rule for v in PhysicalPlan.from_dict(bad).verify(
+        raise_on_violation=False
+    )}
+    assert rules == {"PV407"}
+    # an epoch shorter than a dispatch unit cannot be honored
+    bad = _stateful_plan_dict()
+    bad["ring"]["checkpoint_interval"] = bad["ring"]["io_batch"] - 1
+    rules = {v.rule for v in PhysicalPlan.from_dict(bad).verify(
+        raise_on_violation=False
+    )}
+    assert rules == {"PV407"}
 
 
 # ---------------------------------------------------------------------- CLI

@@ -23,6 +23,7 @@ from repro.core import (
     PhysicalPlan,
     ProcessOptions,
     Session,
+    SessionStarvation,
     Split,
     ThreadOptions,
     UnstagedGraphWarning,
@@ -447,10 +448,15 @@ def _spin_op(v):
 
 
 @pytest.mark.timeout(60)
-def test_session_results_timeout_returns_instead_of_hanging():
+def test_session_results_timeout_raises_with_snapshot():
     engine = Engine(EngineConfig(num_workers=1))
     with engine.open(_session_chain()) as session:
-        assert list(session.results(timeout=0.05)) == []
+        with pytest.raises(SessionStarvation) as info:
+            list(session.results(timeout=0.05))
+        # diagnosable from the exception alone: live counters attached
+        assert info.value.snapshot.get("pushed") == 0
+        assert "snapshot" in str(info.value)
+        # starvation does not poison the session: it keeps serving
         session.push([1])
         assert list(session.results(max_items=1)) == _session_reference([1])
 

@@ -1,0 +1,427 @@
+"""Chaos battery for the fault-tolerance subsystem: deterministic fault
+injection (``repro.core.faults``) driving epoch-checkpoint recovery,
+heartbeat stall detection, router re-forks, dead-letter accounting, and
+graceful-signal teardown.  Every scenario asserts the recovered egress is
+*exactly* the sequential reference — recovery that loses, duplicates, or
+reorders tuples is a correctness bug, not a degraded mode — and that no
+shared-memory segment leaks."""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline env: degrade to seeded randomized sampling
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (
+    DeadLetter,
+    FaultOptions,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    OpSpec,
+    ProcessRuntime,
+)
+from repro.core.checkpoint import CheckpointStore, decode_barrier, encode_barrier
+from repro.core.faults import (
+    HANG,
+    KILL,
+    OP_ERROR,
+    ROUTER_KILL,
+    SPILL_DELAY,
+    resolve_policies,
+)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------- helpers
+def _shm_segments():
+    try:
+        return {f for f in os.listdir("/dev/shm") if f.startswith("repro_")}
+    except FileNotFoundError:  # non-Linux: nothing to check
+        return set()
+
+
+def _double(v):
+    return [v * 2]
+
+
+def _mod7(v):
+    return v % 7
+
+
+def _zero():
+    return 0
+
+
+def _ksum(s, k, v):
+    s = (s or 0) + v
+    return s, [(k, s)]
+
+
+def _chain():
+    """stateless double -> keyed running sum: the minimal shape that has
+    both a replayable stage and a stage whose recovery needs a snapshot."""
+    return [
+        OpSpec("double", "stateless", _double),
+        OpSpec(
+            "acc", "partitioned", _ksum, key_fn=_mod7, num_partitions=14,
+            init_state=_zero,
+        ),
+    ]
+
+
+def _reference(n):
+    states, out = {}, []
+    for v in range(1, n + 1):
+        d = v * 2
+        k = d % 7
+        states[k] = states.get(k, 0) + d
+        out.append((k, states[k]))
+    return out
+
+
+def _slow_source(n, every=400, nap=0.02):
+    """Feed with periodic naps so injected faults land mid-stream rather
+    than after the pipeline has already drained."""
+    for v in range(1, n + 1):
+        if v % every == 0:
+            time.sleep(nap)
+        yield v
+
+
+# -------------------------------------------------- fault-plan determinism
+def test_fault_plan_generate_is_deterministic():
+    kw = dict(n_faults=6, stage_widths=[2, 3], max_serial=5000,
+              kinds=(KILL, HANG, OP_ERROR))
+    a = FaultPlan.generate(7, **kw)
+    b = FaultPlan.generate(7, **kw)
+    assert a.specs == b.specs
+    assert FaultPlan.generate(8, **kw).specs != a.specs
+    # the delivery-path split partitions the schedule: signal faults fire
+    # from the supervisor, op_error/spill_delay ride the fork arguments
+    sup = {id(s) for s in a.supervisor_specs()}
+    child = {
+        id(s)
+        for st_ in range(2)
+        for w in range(3)
+        for by_serial in a.child_specs(st_, w).values()
+        for s in by_serial.values()
+    }
+    assert sup.isdisjoint(child)
+    assert all(s.kind in (KILL, HANG, ROUTER_KILL) for s in a.supervisor_specs())
+
+
+def test_fault_spec_and_options_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(kind="explode").validate()
+    with pytest.raises(ValueError, match="serial"):
+        FaultSpec(kind=KILL, serial=0).validate()
+    with pytest.raises(ValueError, match="on_error"):
+        FaultOptions(on_error="explode").validate()
+    opts = FaultOptions(
+        plan=FaultPlan(specs=[FaultSpec(kind=SPILL_DELAY, delay=0.01)]),
+        on_error={"acc": "dead_letter"},
+    )
+    opts.validate()
+    rebuilt = FaultOptions.from_dict(opts.to_dict())
+    assert rebuilt.plan.specs == opts.plan.specs
+    assert rebuilt.policy_for("acc") == "dead_letter"
+    assert rebuilt.policy_for("other") == "raise"
+    assert resolve_policies({"acc": "skip"}, _chain()) == ("raise", "skip")
+
+
+# ------------------------------------------------- checkpoint store (unit)
+def test_checkpoint_store_epoch_protocol():
+    store = CheckpointStore()
+    assert store.latest(1) is None
+    # acks complete only when every worker in the width has answered
+    store.ack(1, 0, epoch=1, boundary=64, blob=b"w0", width=2)
+    assert store.latest(1) is None
+    store.ack(1, 1, epoch=1, boundary=64, blob=b"w1", width=2)
+    snap = store.latest(1)
+    assert snap is not None
+    assert snap.boundary == 64 and snap.blobs == {0: b"w0", 1: b"w1"}
+    # stale acks at or below the committed boundary are ignored
+    store.ack(1, 0, epoch=1, boundary=64, blob=b"late", width=2)
+    assert store.latest(1).blobs[0] == b"w0"
+    # a forced (synthetic) checkpoint advances the epoch label
+    store.force(1, boundary=128, blobs={0: b"x", 1: b"y"})
+    assert store.latest(1).boundary == 128
+    assert store.latest(1).epoch > snap.epoch
+    store.clear_pending(1)
+    assert store.latest(1).boundary == 128  # committed state survives
+
+
+def test_barrier_codec_roundtrip():
+    for epoch in (0, 1, 2**40):
+        assert decode_barrier(encode_barrier(epoch)) == epoch
+
+
+# ------------------------------------------- keyed kill -> snapshot replay
+@pytest.mark.timeout(120)
+def test_keyed_worker_kill_restores_from_checkpoint_exact_egress():
+    """SIGKILL a keyed worker mid-stream: the supervisor must restore the
+    last committed epoch snapshot, replay the tail of the feeder log, and
+    produce byte-identical ordered egress."""
+    n = 4000
+    before = _shm_segments()
+    plan = FaultPlan(specs=[
+        FaultSpec(kind=KILL, stage=1, worker=1, serial=1500),
+    ], seed=11)
+    rt = ProcessRuntime.from_chain(
+        _chain(), num_workers=3, collect_outputs=True, io_batch=8,
+        checkpoint_interval=64, fault_plan=plan,
+    )
+    report = rt.run(_slow_source(n))
+    assert rt.outputs == _reference(n)
+    assert report.tuples_out == n
+    assert rt.restarts >= 1 and rt.recoveries >= 1
+    assert rt.dead_letters == []
+    assert _shm_segments() == before
+
+
+# --------------------------------------------------- router-kill recovery
+@pytest.mark.timeout(120)
+def test_router_kill_mid_stream_recovers_exact_egress():
+    n = 4000
+    before = _shm_segments()
+    plan = FaultPlan(specs=[
+        FaultSpec(kind=ROUTER_KILL, stage=1, serial=800),
+    ], seed=3)
+    rt = ProcessRuntime.from_chain(
+        _chain(), num_workers=3, collect_outputs=True, io_batch=8,
+        checkpoint_interval=64, fault_plan=plan,
+    )
+    rt.run(_slow_source(n))
+    assert rt.outputs == _reference(n)
+    assert rt.restarts >= 1 and rt.recoveries >= 1
+    assert _shm_segments() == before
+
+
+# ------------------------------------------------ SIGSTOP-hang stall soak
+@pytest.mark.timeout(120)
+def test_sigstop_hang_soak_stall_detector_recovers():
+    """Seeded hang soak: SIGSTOPped workers are hung-not-dead, so only the
+    heartbeat stall detector can find them; it must SIGKILL each into the
+    ordinary crash path and the run must still finish exactly."""
+    n = 4000
+    before = _shm_segments()
+    plan = FaultPlan(specs=[
+        FaultSpec(kind=HANG, stage=1, worker=1, serial=600),
+        FaultSpec(kind=HANG, stage=1, worker=0, serial=2400),
+    ], seed=5)
+    rt = ProcessRuntime.from_chain(
+        _chain(), num_workers=3, collect_outputs=True, io_batch=8,
+        checkpoint_interval=64, fault_plan=plan, stall_timeout=0.5,
+    )
+    rt.run(_slow_source(n))
+    assert rt.outputs == _reference(n)
+    assert rt.restarts >= 2, "both hung workers must be reaped"
+    assert rt.recoveries >= 1
+    assert _shm_segments() == before
+
+
+# ------------------------------------------- kill during an elastic replan
+def _spin(v):
+    x = float(v)
+    for _ in range(300):
+        x = (x * 1.0000001 + 1.31) % 97.0
+    return [int(x * 1000)]
+
+
+def _mod9(v):
+    return v % 9
+
+
+def _spin_ksum(s, k, v):
+    s = (s or 0) + v
+    return s, [(k, s % 99991)]
+
+
+@pytest.mark.timeout(120)
+def test_keyed_kill_while_elastic_replans_churn():
+    """Deliberately wrong priors force mid-run resizes of the stateless
+    stage while an injected SIGKILL lands in the keyed stage: checkpoint
+    restore and elastic replanning must compose without losing a tuple.
+    (A restore that collides with a same-stage replan in its collect phase
+    is unrecoverable by design; cross-stage it must abort the replan and
+    proceed.)"""
+    specs = [
+        OpSpec("hot", "stateless", _spin, cost_us=1),  # lie: ~25 µs
+        OpSpec(
+            "cold", "partitioned", _spin_ksum, key_fn=_mod9,
+            num_partitions=18, init_state=_zero, cost_us=60,  # lie: ~2
+        ),
+    ]
+    n = 20000
+    states, expected = {}, []
+    for v in range(1, n + 1):
+        out = _spin(v)[0]
+        k = out % 9
+        states[k] = states.get(k, 0) + out
+        expected.append((k, states[k] % 99991))
+
+    before = _shm_segments()
+    plan = FaultPlan(specs=[
+        FaultSpec(kind=KILL, stage=1, worker=0, serial=n // 2),
+    ], seed=23)
+    rt = ProcessRuntime.from_chain(
+        specs, num_workers="auto", worker_budget=3, collect_outputs=True,
+        cost_priors={"hot": 1.0, "cold": 60.0},
+        replan_interval=0.05, replan_patience=2, batch_size=32,
+        checkpoint_interval=128, fault_plan=plan,
+    )
+    report = rt.run(range(1, n + 1))
+    assert rt.replans >= 1, "priors lie hard enough that a replan must fire"
+    assert rt.restarts >= 1 and rt.recoveries >= 1
+    assert rt.outputs == expected
+    assert report.tuples_in == n
+    assert _shm_segments() == before
+
+
+# ------------------------------------------- dead-letter accounting (prop)
+@pytest.mark.timeout(120)
+@settings(max_examples=5, deadline=None)
+@given(
+    io_batch=st.sampled_from([1, 2, 8, 32]),
+    bad=st.sets(st.integers(min_value=1, max_value=240), min_size=1, max_size=5),
+)
+def test_dead_letter_accounting_across_batch_sizes(io_batch, bad):
+    """``on_error="dead_letter"`` quarantines exactly the faulted serials
+    — for every dispatch-unit size — and every surviving tuple egresses in
+    order.  Serial ownership is decided by dispatch, so a spec is planted
+    per worker; only the owner fires it."""
+    n = 240
+    specs = [OpSpec("double", "stateless", _double)]
+    plan = FaultPlan(specs=[
+        FaultSpec(kind=OP_ERROR, stage=0, worker=w, serial=s)
+        for s in sorted(bad) for w in range(2)
+    ], seed=1)
+    rt = ProcessRuntime.from_chain(
+        specs, num_workers=2, collect_outputs=True, io_batch=io_batch,
+        fault_plan=plan, on_error="dead_letter",
+    )
+    report = rt.run(range(1, n + 1))
+    assert report.tuples_out == n - len(bad)
+    assert sorted(d.serial for d in rt.dead_letters) == sorted(bad)
+    assert all(
+        isinstance(d, DeadLetter) and d.op == "double" and "InjectedFault" in d.error
+        for d in rt.dead_letters
+    )
+    assert rt.outputs == [v * 2 for v in range(1, n + 1) if v not in bad]
+
+
+@pytest.mark.timeout(60)
+def test_on_error_policies_raise_and_skip():
+    plan = FaultPlan(specs=[
+        FaultSpec(kind=OP_ERROR, stage=0, worker=w, serial=5) for w in range(2)
+    ])
+    rt = ProcessRuntime.from_chain(
+        [OpSpec("double", "stateless", _double)], num_workers=2,
+        collect_outputs=True, fault_plan=plan,
+    )
+    with pytest.raises(RuntimeError, match="InjectedFault"):
+        rt.run(range(1, 101))
+    rt = ProcessRuntime.from_chain(
+        [OpSpec("double", "stateless", _double)], num_workers=2,
+        collect_outputs=True, fault_plan=plan, on_error="skip",
+    )
+    report = rt.run(range(1, 101))
+    assert report.tuples_out == 99
+    assert rt.dead_letters == []  # skip drops silently, no quarantine
+    assert rt.outputs == [v * 2 for v in range(1, 101) if v != 5]
+
+
+# ------------------------------------------------- graceful SIGTERM teardown
+_SIGTERM_CHILD = """
+import sys, time
+sys.path.insert(0, {src!r})
+from repro.core import OpSpec, ProcessRuntime
+
+def spin(v):
+    x = float(v)
+    for _ in range(2000):
+        x = (x * 1.0000001 + 1.31) % 97.0
+    return [x]
+
+def src():
+    i = 0
+    while True:
+        yield i
+        i += 1
+
+rt = ProcessRuntime.from_chain(
+    [OpSpec("spin", "stateless", spin)], num_workers=2,
+)
+print("READY", flush=True)
+rt.run(src(), drain_timeout=300)
+"""
+
+
+@pytest.mark.timeout(120)
+def test_sigterm_mid_run_tears_down_without_shm_leak():
+    """SIGTERM during a live stream must convert to SystemExit(143), run
+    the normal teardown (reap children, unlink every segment), and exit
+    with the conventional 128+15 status — not die mid-critical-section."""
+    before = _shm_segments()
+    script = _SIGTERM_CHILD.format(src=os.path.join(REPO_ROOT, "src"))
+    proc = subprocess.Popen(
+        [sys.executable, "-c", script],
+        stdout=subprocess.PIPE, text=True, cwd=REPO_ROOT,
+    )
+    try:
+        assert proc.stdout.readline().strip() == "READY"
+        time.sleep(0.8)  # let the stream and its segments come up
+        proc.send_signal(signal.SIGTERM)
+        rc = proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=10)
+    assert rc == 143, f"expected graceful SystemExit(143), got {rc}"
+    assert _shm_segments() == before
+
+
+# --------------------------------------------------- spill-deadline context
+def test_spill_timeout_error_carries_stage_context():
+    from repro.core.procrun import _await_spill
+
+    with pytest.raises(TimeoutError) as ei:
+        _await_spill(
+            {}, 7, lambda: None, timeout=0.05,
+            describe=lambda: "stage 1 (acc) worker 0; backlog=[3, 9]",
+        )
+    msg = str(ei.value)
+    assert "serial 7" in msg
+    assert "stage 1 (acc) worker 0" in msg
+    assert "spill_timeout" in msg  # points at the ProcessOptions knob
+
+
+@pytest.mark.timeout(60)
+def test_spill_delay_fault_still_drains():
+    """An injected spill-relay delay must slow delivery, not break it:
+    oversized bundles still arrive and egress stays exact."""
+    n = 40
+    payload = bytes(200_000)
+
+    def fat(v):
+        return [(v, payload)]
+
+    plan = FaultPlan(specs=[
+        FaultSpec(kind=SPILL_DELAY, stage=0, worker=w, serial=10, delay=0.05)
+        for w in range(2)
+    ])
+    rt = ProcessRuntime.from_chain(
+        [OpSpec("fat", "stateless", fat)], num_workers=2,
+        collect_outputs=True, io_batch=2, fault_plan=plan,
+    )
+    report = rt.run(range(1, n + 1))
+    assert report.tuples_out == n
+    assert [v for v, _ in rt.outputs] == list(range(1, n + 1))

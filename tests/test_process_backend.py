@@ -342,32 +342,27 @@ def _slow_count(s, v):
     return s + 1, [(v, s + 1)]
 
 
-@pytest.mark.timeout(60)
-@pytest.mark.parametrize("kind", ["keyed", "stateful"])
-def test_kill_in_stateful_stage_raises_cleanly_no_leak(kind):
-    """A SIGKILL in a keyed/stateful stage is unrecoverable (worker-local
-    state is gone): the runtime must raise a clear error — not hang, not
-    silently drop tuples — and still unlink every shm segment."""
+def _stateful_stage_op(kind):
     if kind == "keyed":
-        stage_op = OpSpec(
+        return OpSpec(
             "ks", "partitioned", _slow_ksum, key_fn=lambda v: v % 7,
             num_partitions=14, init_state=lambda: 0,
         )
-    else:
-        stage_op = OpSpec("ct", "stateful", _slow_count, init_state=lambda: 0)
-    specs = [OpSpec("id", "stateless", lambda v: [v]), stage_op]
-    before = _shm_segments()
-    rt = ProcessRuntime.from_chain(specs, num_workers=2, collect_outputs=True)
+    return OpSpec("ct", "stateful", _slow_count, init_state=lambda: 0)
 
+
+def _chaos_kill_first_worker(rt, stage=1, after=0.05):
+    """Wrap ``rt._setup`` so the first worker of ``stage`` is SIGKILLed
+    shortly after the pipeline comes up."""
     orig_setup = rt._setup
 
     def chaos_setup():
         orig_setup()
-        victim = rt.worker_groups()[1][0].pid
+        victim = rt.worker_groups()[stage][0].pid
         import threading
 
         def killer():
-            time.sleep(0.05)
+            time.sleep(after)
             try:
                 os.kill(victim, signal.SIGKILL)
             except ProcessLookupError:
@@ -376,6 +371,51 @@ def test_kill_in_stateful_stage_raises_cleanly_no_leak(kind):
         threading.Thread(target=killer, daemon=True).start()
 
     rt._setup = chaos_setup
+
+
+def _stateful_reference(kind, n):
+    if kind == "keyed":
+        states, out = {}, []
+        for v in range(1, n):
+            k = v % 7
+            states[k] = states.get(k, 0) + v
+            out.append((k, states[k]))
+        return out
+    return [(v, v) for v in range(1, n)]
+
+
+@pytest.mark.timeout(60)
+@pytest.mark.parametrize("kind", ["keyed", "stateful"])
+def test_kill_in_stateful_stage_recovers_by_default(kind):
+    """A SIGKILL in a keyed/stateful stage is survivable by default now
+    that epoch checkpointing is on: the supervisor restores the last
+    committed snapshot, replays, and egress equals the reference exactly
+    — with every shm segment still unlinked at the end."""
+    n = 60000
+    specs = [OpSpec("id", "stateless", lambda v: [v]), _stateful_stage_op(kind)]
+    before = _shm_segments()
+    rt = ProcessRuntime.from_chain(specs, num_workers=2, collect_outputs=True)
+    _chaos_kill_first_worker(rt)
+    report = rt.run(range(1, n))
+    assert rt.outputs == _stateful_reference(kind, n)
+    assert report.tuples_out == n - 1
+    assert rt.restarts >= 1 and rt.recoveries >= 1
+    assert _shm_segments() == before
+
+
+@pytest.mark.timeout(60)
+@pytest.mark.parametrize("kind", ["keyed", "stateful"])
+def test_kill_in_stateful_stage_raises_cleanly_when_ckpt_off(kind):
+    """With checkpointing explicitly disabled, a SIGKILL in a keyed or
+    stateful stage is unrecoverable (worker-local state is gone): the
+    runtime must raise a clear error — not hang, not silently drop
+    tuples — and still unlink every shm segment."""
+    specs = [OpSpec("id", "stateless", lambda v: [v]), _stateful_stage_op(kind)]
+    before = _shm_segments()
+    rt = ProcessRuntime.from_chain(
+        specs, num_workers=2, collect_outputs=True, checkpoint_interval=0,
+    )
+    _chaos_kill_first_worker(rt)
     with pytest.raises(RuntimeError, match="worker-local state|died"):
         rt.run(range(1, 60000))
     assert _shm_segments() == before
