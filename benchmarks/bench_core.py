@@ -219,6 +219,67 @@ def _run_recovery(seconds: float, workers: int):
     }
 
 
+SERVING_SESSIONS = 8  # concurrent ordered sessions multiplexed per runtime
+SERVING_UTIL = 0.5  # offered load as a fraction of probed capacity
+
+
+def _run_serving(seconds: float, workers: int):
+    """Open-loop serving row: ``SERVING_SESSIONS`` concurrent sessions
+    multiplexed onto one planned runtime (``repro.serve.SessionMux``), fed
+    Poisson arrivals at ~``SERVING_UTIL`` of probed capacity.  Latency is
+    coordinated-omission-free (measured from each request's *scheduled*
+    arrival), so p99/p999 reflect queueing under sustained load — the
+    fig.10-style serving metric — not closed-loop drain time."""
+    from repro.core.api import Engine, EngineConfig
+    from repro.serve import ArrivalConfig, MuxConfig, SessionMux, run_open_loop
+
+    def make_mux():
+        eng = Engine(EngineConfig(
+            backend="thread", num_workers=workers, batch_size=8,
+        ))
+        return SessionMux(
+            eng, cpu_bound_chain(stages=STAGES, spin=SPIN),
+            config=MuxConfig(max_sessions=SERVING_SESSIONS),
+        )
+
+    # probe: saturating offered load -> achieved rate ~= mux capacity
+    with make_mux() as mux:
+        probe = run_open_loop(
+            mux, sessions=SERVING_SESSIONS, requests=250,
+            arrivals=ArrivalConfig(shape="poisson", rate=1e6, seed=3),
+        )
+    capacity = max(probe.achieved_rate, 1.0)
+    offered = capacity * SERVING_UTIL
+    per_session = max(int(offered * seconds / SERVING_SESSIONS), 50)
+    with make_mux() as mux:
+        rep = run_open_loop(
+            mux, sessions=SERVING_SESSIONS, requests=per_session,
+            arrivals=ArrivalConfig(
+                shape="poisson", rate=offered / SERVING_SESSIONS, seed=11,
+            ),
+        )
+    return {
+        "workload": "serving",
+        "backend": "thread",
+        "batch_size": 8,
+        "stages": None,
+        "workers": workers,
+        "sessions": SERVING_SESSIONS,
+        "arrivals": "poisson",
+        "open_loop": True,
+        "capacity_per_s": round(capacity, 1),
+        "offered_rate_per_s": round(rep.offered_rate, 1),
+        "achieved_rate_per_s": round(rep.achieved_rate, 1),
+        "tuples": rep.requests,
+        "wall_s": round(rep.duration_s, 3),
+        "throughput_per_s": round(rep.achieved_rate, 1),
+        "p50_latency_ms": round(rep.p50 * 1e3, 3),
+        "p99_latency_ms": round(rep.p99 * 1e3, 3),
+        "p999_latency_ms": round(rep.p999 * 1e3, 3),
+        "mean_latency_ms": round(rep.mean * 1e3, 3),
+    }
+
+
 def _run_ab_configs(seconds: float, workers: int):
     """Measure the skewed-stages pair interleaved: flat/auto alternate over
     ``AB_ROUNDS`` rounds and each config's throughput is aggregated across
@@ -294,6 +355,15 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
             f"thru={row['throughput_per_s']:>10,.0f}/s "
             f"({row['tuples']} tuples / {row['wall_s']}s interleaved)"
         )
+    row = _run_serving(seconds, workers)
+    rows.append(row)
+    print_fn(
+        f"{row['workload']:>14} {row['backend']:>7} "
+        f"sessions={row['sessions']} open-loop poisson "
+        f"offered={row['offered_rate_per_s']:>8,.0f}/s "
+        f"p50={row['p50_latency_ms']:.2f}ms p99={row['p99_latency_ms']:.2f}ms "
+        f"p999={row['p999_latency_ms']:.2f}ms"
+    )
 
     def thru(workload, backend, batch, staged=None):
         for r in rows:
@@ -366,6 +436,12 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
                                  "cores+1 budget over the 2 data-parallel "
                                  "stages; auto = cost-model division "
                                  f"(interleaved x{AB_ROUNDS})",
+                "serving": f"{SERVING_SESSIONS} concurrent ordered sessions "
+                           "multiplexed onto one runtime (SessionMux), "
+                           "open-loop Poisson arrivals at "
+                           f"{SERVING_UTIL:.0%} of probed capacity; "
+                           "latency is coordinated-omission-free "
+                           "(measured from scheduled arrival)",
             },
             "seconds_per_config": seconds,
             "cpu_count": os.cpu_count(),

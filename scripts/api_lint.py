@@ -1,7 +1,8 @@
 #!/usr/bin/env python
 """Public-API lint (wired into ``scripts/verify.sh``).
 
-Every name in ``repro.core.__all__`` and ``repro.analysis.__all__`` must
+Every name in ``repro.core.__all__``, ``repro.analysis.__all__``, and
+``repro.serve.__all__`` must
 (a) import — a stale ``__all__`` entry is a broken promise — and (b) carry a
 non-empty docstring when it is a class or function (constants are exempt:
 their meaning is documented where they are defined).  Classes are
@@ -59,9 +60,14 @@ def _lint_module(mod, problems: list) -> int:
 def main() -> int:
     import repro.analysis as analysis
     import repro.core as core
+    import repro.serve as serve
 
     problems: list[str] = []
-    total = _lint_module(core, problems) + _lint_module(analysis, problems)
+    total = (
+        _lint_module(core, problems)
+        + _lint_module(analysis, problems)
+        + _lint_module(serve, problems)
+    )
     if problems:
         print(f"api-lint: {len(problems)} violation(s)", file=sys.stderr)
         for p in problems:

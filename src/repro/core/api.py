@@ -831,6 +831,55 @@ class Session:
             # must not uncount tuples that already entered the pipeline
         return n
 
+    def try_push(self, value: Any) -> bool:
+        """Non-blocking single-tuple push: ``True`` if the tuple entered the
+        pipeline, ``False`` if the backend's in-flight window is full right
+        now (the caller may retry, service results, or shed load).  This is
+        the ingress primitive multiplexers build fairness on — a blocked
+        ``push()`` would hold *every* queued session hostage to global
+        backpressure, ``try_push`` lets the caller keep draining egress
+        while the window is full.  Raises like :meth:`push` once closed."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        if not self._try_push_one(value):
+            return False
+        self._pushed += 1
+        return True
+
+    def poll(self, max_items: Optional[int] = None) -> list:
+        """Non-blocking egress read: return (and consume) whatever ordered
+        outputs have already materialized — possibly ``[]`` — without ever
+        waiting.  Shares the exactly-once cursor with :meth:`results`; use
+        one or the other per drain phase, not both concurrently.  Unlike
+        ``results()`` this never services the backend, so a process-backend
+        caller interleaving only ``try_push``/``poll`` should expect to see
+        progress ride on its pushes."""
+        if self._aborted:
+            raise RuntimeError(
+                "session was aborted (error-path teardown); "
+                "results are unavailable"
+            )
+        consumed = self._cursor - self._trimmed
+        if consumed >= self._TRIM_THRESHOLD:
+            self._discard_consumed(consumed)
+            self._trimmed = self._cursor
+            consumed = 0
+        batch = self._outputs_since(consumed)
+        if max_items is not None:
+            batch = batch[:max_items]
+        self._cursor += len(batch)
+        return batch
+
+    def service(self) -> None:
+        """One liveness crank for non-blocking drivers.
+
+        Callers that interleave :meth:`try_push` / :meth:`poll` (instead of
+        the blocking ``results()`` loop, which services internally) must
+        call this when idle: it flushes partial ingress micro-batches and —
+        on the process backend — cranks the single-threaded parent
+        supervisor, without which nothing would ever egress."""
+        self._idle_service(64)
+
     def results(self, max_items: Optional[int] = None,
                 timeout: Optional[float] = None) -> Iterator[Any]:
         """Iterate ordered egress tuples as they materialize.
@@ -899,6 +948,9 @@ class Session:
     # RELATIVE to the already-trimmed prefix (the base class does the
     # absolute-cursor bookkeeping).
     def _push_one(self, value: Any) -> None:
+        raise NotImplementedError
+
+    def _try_push_one(self, value: Any) -> bool:
         raise NotImplementedError
 
     def _outputs_since(self, cursor: int) -> list:
@@ -972,6 +1024,22 @@ class _ThreadSession(Session):
                 time.sleep(1e-4)  # workers drain concurrently; no deadlock
         self._gate_left -= 1
         pipe.push(value)
+
+    def _try_push_one(self, value: Any) -> bool:
+        # same amortized gate as _push_one, but a closed gate reports False
+        # instead of spinning; the re-check happens on the next attempt
+        if self._gate_left <= 0:
+            if self._rt.worker_error is not None:
+                raise RuntimeError(
+                    f"worker failed: {self._rt.worker_error!r}"
+                ) from self._rt.worker_error
+            pipe = self._pipe
+            if sum(n.worklist_size() for n in pipe.nodes) >= self._inflight_cap:
+                return False
+            self._gate_left = self._GATE_EVERY
+        self._gate_left -= 1
+        self._pipe.push(value)
+        return True
 
     def _outputs_since(self, cursor: int) -> list:
         return self._pipe.outputs_since(cursor)
@@ -1049,6 +1117,9 @@ class _ProcessSession(Session):
 
     def _push_one(self, value: Any) -> None:
         self._rt.stream_push(value)
+
+    def _try_push_one(self, value: Any) -> bool:
+        return self._rt.stream_try_push(value)
 
     def _outputs_since(self, cursor: int) -> list:
         return self._rt.collected_outputs()[cursor:]

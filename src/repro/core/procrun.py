@@ -2096,6 +2096,21 @@ class ProcessRuntime:
                 spin = min(spin * 2, self.parent_idle_cap)
         self._stream_add(value)
 
+    def stream_try_push(self, value: Any) -> bool:
+        """Non-blocking :meth:`stream_push`: when the intake gate is closed,
+        run one supervisor crank (so a rejected push still moves the
+        pipeline) and report ``False`` instead of spinning.  The streaming
+        multiplexer uses this to keep scheduling *other* sessions while the
+        in-flight window is full."""
+        if self._src_done:
+            raise RuntimeError("stream input already closed (end_stream)")
+        if not self._disp.ready():
+            self._service_once()
+            if not self._disp.ready():
+                return False
+        self._stream_add(value)
+        return True
+
     def end_stream(self) -> None:
         """Close the stream's input side: flush partial dispatch units and
         let the in-band EOF cascade begin once the queues drain."""

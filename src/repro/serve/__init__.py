@@ -1,0 +1,48 @@
+"""Serving tier: multiplexed ordered sessions + open-loop load tooling.
+
+- :mod:`.mux` — :class:`SessionMux` / :class:`MuxSession`: many concurrent
+  ordered sessions admitted onto one planned Engine runtime (sid-tagged
+  ingress, demuxed ordered egress, DRR fairness, admission control,
+  graceful churn; see docs/serving.md);
+- :mod:`.loadgen` — open-loop load generator (Poisson / heavy-tailed /
+  bursty / diurnal arrivals) with coordinated-omission-free p50/p99/p999
+  latency accounting;
+- :mod:`.engine` — the jax continuous-batching :class:`OrderedServingEngine`
+  (model serving embodiment of the ordered-egress problem; imported lazily
+  so the stream-processing surface stays importable without pulling jax).
+"""
+from .loadgen import (
+    ArrivalConfig,
+    LatencyReport,
+    arrival_times,
+    percentile,
+    run_open_loop,
+)
+from .mux import AdmissionError, MuxConfig, MuxSession, SessionMux, tag_graph
+
+__all__ = [
+    "AdmissionError",
+    "ArrivalConfig",
+    "LatencyReport",
+    "MuxConfig",
+    "MuxSession",
+    "OrderedServingEngine",
+    "SessionMux",
+    "arrival_times",
+    "percentile",
+    "run_open_loop",
+    "tag_graph",
+]
+
+_LAZY = {"OrderedServingEngine": ".engine"}
+
+
+def __getattr__(name):  # PEP 562: defer the jax import until first use
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(_LAZY[name], __name__)
+        value = getattr(mod, name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -62,6 +62,13 @@ class Completion:
 
 
 class OrderedServingEngine:
+    """Continuous-batching jax model server with ordered completions.
+
+    Requests share ``max_slots`` decode slots (admitted in serial order);
+    completions egress through a serial-number reorder ring, so callers see
+    results in submission order regardless of per-request decode length —
+    the model-serving embodiment of the paper's ordered-egress problem."""
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -110,6 +117,7 @@ class OrderedServingEngine:
 
     # ------------------------------------------------------------------ api
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        """Enqueue a prompt; returns its serial (completion order)."""
         serial = self._serials.next()
         self.pending.append(
             Request(np.asarray(prompt, np.int32), max_new_tokens, serial, time.perf_counter())
@@ -147,8 +155,14 @@ class OrderedServingEngine:
         self.stats["prefills"] += 1
 
     def _do_decode(self) -> None:
+        # ``self.position`` is a host buffer mutated in place below (and by
+        # ``_do_prefill``).  ``jnp.asarray`` zero-copies 64-byte-aligned numpy
+        # arrays on CPU, so handing it over directly lets the in-place update
+        # race the asynchronously dispatched decode — the kernel can read a
+        # *later* position, silently corrupting the attention mask.  A fresh
+        # copy per call is never mutated and stays alive via the jax array.
         next_tok, self.cache = self._decode(
-            self.params, self.tokens, self.cache, jnp.asarray(self.position)
+            self.params, self.tokens, self.cache, jnp.asarray(self.position.copy())
         )
         self.tokens = next_tok
         self.position += self.active.astype(np.int32)
@@ -199,6 +213,8 @@ class OrderedServingEngine:
         return True
 
     def run_to_completion(self, max_steps: int = 100_000) -> list[Completion]:
+        """Step until every submitted request completed; returns the
+        completions drained so far, in serial order."""
         steps = 0
         while self.step():
             steps += 1

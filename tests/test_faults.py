@@ -425,3 +425,81 @@ def test_spill_delay_fault_still_drains():
     report = rt.run(range(1, n + 1))
     assert report.tuples_out == n
     assert [v for v, _ in rt.outputs] == list(range(1, n + 1))
+
+
+# ------------------------------------------- serving mux churn under crashes
+def _accsum(s, v):
+    s = (s or 0) + v
+    return s, [s]
+
+
+@pytest.mark.timeout(180)
+def test_mux_session_churn_survives_keyed_worker_kill():
+    """Session churn on a multiplexed process runtime while a keyed worker
+    is SIGKILLed mid-stream (docs/serving.md): checkpoint restore + replay
+    must keep every session's egress exact — state is per-session, so any
+    cross-session leakage or replay duplication corrupts the running sums —
+    retire closing sessions cleanly, admit a new session into the freed
+    slot, and leak no shared memory."""
+    from repro.core.api import Engine, EngineConfig, ProcessOptions
+    from repro.serve import MuxConfig, SessionMux
+
+    before = _shm_segments()
+    plan = FaultPlan(specs=[
+        FaultSpec(kind=KILL, stage=1, worker=1, serial=1200),
+    ], seed=11)
+    eng = Engine(EngineConfig(
+        backend="process", num_workers=3, batch_size=8,
+        process=ProcessOptions(checkpoint_interval=64, io_batch=8),
+        faults=FaultOptions(plan=plan),
+    ))
+    chain = [
+        OpSpec("double", "stateless", _double),
+        OpSpec("acc", "stateful", _accsum),  # mux makes this sid-partitioned
+    ]
+    inputs = {
+        name: [(ord(name) * 37 + j) % 501 + 1 for j in range(n)]
+        for name, n in (("a", 500), ("b", 700), ("c", 400), ("d", 300))
+    }
+
+    def oracle(vals):
+        out, s = [], 0
+        for v in vals:
+            s += 2 * v
+            out.append(s)
+        return out
+
+    mux = SessionMux(eng, chain, config=MuxConfig(max_sessions=3))
+    with mux:
+        handles = {k: mux.open() for k in "abc"}  # wave 1
+        # interleave wave-1 ingress with naps so the injected kill lands
+        # mid-stream (serial 1200 of the ~1600 wave-1 tuples)
+        cursors = dict.fromkeys("abc", 0)
+        while any(cursors[k] < len(inputs[k]) for k in "abc"):
+            for k in "abc":
+                lo = cursors[k]
+                if lo >= len(inputs[k]):
+                    continue
+                handles[k].push(inputs[k][lo:lo + 40])
+                cursors[k] = lo + 40
+            time.sleep(0.01)
+        # churn across the crash window: drain + retire a, admit d into
+        # the freed slot while b/c still have tuples in flight
+        want_a = oracle(inputs["a"])
+        got_a = list(handles["a"].results(max_items=len(want_a), timeout=90))
+        assert got_a == want_a
+        handles["a"].close()
+        assert handles["a"].poll() == []
+        handles["d"] = mux.open()
+        handles["d"].push(inputs["d"])
+        for k in "bcd":
+            want = oracle(inputs[k])
+            got = list(handles[k].results(max_items=len(want), timeout=90))
+            assert got == want, f"session {k}: egress diverged after recovery"
+            handles[k].close()
+            assert handles[k].poll() == []
+        rt = mux._inner._rt
+        assert rt.restarts >= 1 and rt.recoveries >= 1, (
+            "injected keyed-worker kill never fired"
+        )
+    assert _shm_segments() == before

@@ -1,0 +1,415 @@
+"""Serving-tier battery: multiplexed sessions on one planned runtime.
+
+Covers the SessionMux contract (docs/serving.md): per-session ordering
+under interleaving (property, both backends x batch sizes x session
+counts), deterministic deficit-round-robin fairness, slow-consumer
+isolation, admission control and shedding, graceful churn, and the
+starvation snapshot's per-session backlog stats.
+"""
+import collections
+import random
+import time
+
+import pytest
+
+from repro.core.api import Engine, EngineConfig, SessionStarvation
+from repro.core.operators import OpSpec
+from repro.serve import (
+    AdmissionError,
+    ArrivalConfig,
+    MuxConfig,
+    SessionMux,
+    arrival_times,
+    percentile,
+    run_open_loop,
+)
+
+
+# --------------------------------------------------------- op zoo (picklable)
+# Module-level functions (process-backend dispatch units pickle them), all
+# int -> list[int] so every random chain composition stays well-typed.
+def _double(v):
+    return [v * 2]
+
+
+def _drop_mod3(v):
+    return [] if v % 3 == 0 else [v]
+
+
+def _fan2(v):
+    return [v, v + 1]
+
+
+def _spin_double(v):
+    end = time.perf_counter() + 1e-3
+    while time.perf_counter() < end:
+        pass
+    return [v * 2]
+
+
+def _runsum(state, v):
+    s = (state or 0) + v
+    return s, [s]
+
+
+def _keyed_sum(state, key, v):
+    s = (state or 0) + v
+    return s, [s]
+
+
+def _mod4(v):
+    return v % 4
+
+
+_ZOO = {
+    "double": lambda: OpSpec("double", "stateless", _double),
+    "drop": lambda: OpSpec("drop", "stateless", _drop_mod3, selectivity=0.67),
+    "fan": lambda: OpSpec("fan", "stateless", _fan2, selectivity=2.0),
+    "runsum": lambda: OpSpec("runsum", "stateful", _runsum),
+    "ksum": lambda: OpSpec("ksum", "partitioned", _keyed_sum,
+                           key_fn=_mod4, num_partitions=4),
+}
+
+
+def _oracle(chain, values):
+    """Reference single-threaded evaluation of an OpSpec chain."""
+    stream = list(values)
+    for spec in chain:
+        out = []
+        if spec.kind == "stateless":
+            for v in stream:
+                out.extend(spec.fn(v))
+        elif spec.kind == "stateful":
+            state = spec.init_state()
+            for v in stream:
+                state, o = spec.fn(state, v)
+                out.extend(o)
+        else:
+            states = {}
+            for v in stream:
+                k = spec.key_fn(v)
+                state, o = spec.fn(states.get(k), k, v)
+                states[k] = state
+                out.extend(o)
+        stream = out
+    return stream
+
+
+def _mux(backend, batch, chain, *, workers=2, **mux_kw):
+    eng = Engine(EngineConfig(
+        backend=backend, num_workers=workers, batch_size=batch,
+    ))
+    return SessionMux(
+        eng, [_ZOO[name]() for name in chain], config=MuxConfig(**mux_kw)
+    )
+
+
+# ----------------------------------------------------------------- property
+# ISSUE 8 acceptance: N interleaved sessions through one Engine yield
+# exactly their own outputs in their own order, on both backends across
+# batch sizes and session counts.  Chains and inputs are seeded-random
+# (string seeds are deterministic across interpreter runs, unlike hash()).
+_MATRIX = [
+    (backend, batch, n)
+    for backend in ("thread", "process")
+    for batch in (1, 7, 32)
+    for n in (2, 8, 32)
+]
+
+
+@pytest.mark.timeout(300)
+@pytest.mark.parametrize("backend,batch,n_sessions", _MATRIX)
+def test_interleaved_sessions_exact_per_session_ordering(
+    backend, batch, n_sessions
+):
+    rng = random.Random(f"{backend}-{batch}-{n_sessions}")
+    chain_names = [rng.choice(list(_ZOO)) for _ in range(rng.randint(1, 3))]
+    per_n = 6 if backend == "process" else 20
+    inputs = {
+        i: [rng.randrange(1000) for _ in range(rng.randint(2, per_n))]
+        for i in range(n_sessions)
+    }
+    with _mux(backend, batch, chain_names, max_sessions=n_sessions) as mux:
+        handles = {i: mux.open() for i in range(n_sessions)}
+        # interleave: push a small random chunk per session, round-robin,
+        # until every session has fed its full input
+        cursors = {i: 0 for i in range(n_sessions)}
+        while any(cursors[i] < len(inputs[i]) for i in inputs):
+            for i in inputs:
+                lo = cursors[i]
+                if lo >= len(inputs[i]):
+                    continue
+                hi = min(lo + rng.randint(1, 4), len(inputs[i]))
+                handles[i].push(inputs[i][lo:hi])
+                cursors[i] = hi
+        chain = [_ZOO[nm]() for nm in chain_names]
+        for i, h in handles.items():
+            want = _oracle(chain, inputs[i])
+            got = list(h.results(max_items=len(want), timeout=60))
+            assert got == want, (
+                f"session {i} (chain={chain_names}): {got[:8]} != {want[:8]}"
+            )
+            h.close()
+            # drain token egressed behind everything: no stray extras
+            assert h.poll() == [], f"session {i} produced extra outputs"
+
+
+# ----------------------------------------------------------------- fairness
+class _FakeInner:
+    """Stand-in runtime for deterministic scheduler tests: rejects every
+    push until released, then accepts unboundedly, recording sids."""
+
+    def __init__(self):
+        self.accepted = []
+        self.released = False
+
+    def try_push(self, tagged):
+        if not self.released:
+            return False
+        self.accepted.append(tagged)
+        return True
+
+    def poll(self, max_items=None):
+        return []
+
+    def service(self):
+        time.sleep(1e-4)
+
+    def close(self, drain_timeout=60.0):
+        return None
+
+    def _abort(self):
+        pass
+
+
+class _FakeEngine:
+    def __init__(self, inner):
+        self._inner = inner
+
+    def plan(self, graph, edges=None):
+        return None
+
+    def open(self, plan, edges=None):
+        return self._inner
+
+
+@pytest.mark.timeout(60)
+def test_deficit_round_robin_respects_weights():
+    """Fill two sessions' ingress queues while the runtime is gated shut,
+    then release the gate: admissions must follow deficit round-robin —
+    a weight-3 session gets ~3x the tuples of a weight-1 session in any
+    steady window of the admission trace."""
+    inner = _FakeInner()
+    mux = SessionMux(
+        _FakeEngine(inner), [_ZOO["double"]()],
+        config=MuxConfig(max_sessions=2, quantum=4, ingress_depth=512),
+    )
+    try:
+        a = mux.open(weight=1.0)
+        b = mux.open(weight=3.0)
+        a.push(range(300))
+        b.push(range(1000, 1300))
+        inner.released = True
+        deadline = time.perf_counter() + 30
+        while len(inner.accepted) < 400:
+            assert time.perf_counter() < deadline, len(inner.accepted)
+            time.sleep(1e-3)
+        # skip the release transient, stop before either queue runs dry
+        # (b exhausts its 300 tuples around entry ~400 of the merged trace)
+        window = [sid for sid, _v in inner.accepted[20:320]]
+        counts = collections.Counter(window)
+        assert counts[a.sid] + counts[b.sid] == 300
+        ratio = counts[b.sid] / counts[a.sid]
+        assert 2.4 <= ratio <= 3.6, (ratio, counts)
+        # no starvation stretch longer than one heavy-session DRR round
+        a_at = [j for j, sid in enumerate(window) if sid == a.sid]
+        assert max(q - p for p, q in zip(a_at, a_at[1:])) <= 13
+    finally:
+        mux._closed = True  # fake runtime: skip the drain protocol
+        mux._pump.join(timeout=5)
+
+
+@pytest.mark.timeout(120)
+def test_slow_consumer_does_not_stall_other_sessions():
+    """A consumer that never reads must not delay another session's
+    results: its backlog hits result_budget, its ingress stops being
+    admitted, and the shared egress keeps flowing."""
+    with _mux(
+        "thread", 4, ["double"], max_sessions=2,
+        result_budget=32, ingress_depth=64, quantum=4, push_timeout=0.2,
+    ) as mux:
+        slow = mux.open()
+        fast = mux.open()
+        # feed the slow consumer until shedding proves its lane is full
+        with pytest.raises(AdmissionError) as exc_info:
+            slow.push(range(10_000), timeout=0.2)
+        assert exc_info.value.reason == "ingress_full"
+        assert exc_info.value.sid == slow.sid
+        assert slow.pushed < 10_000
+        # the fast session (which *does* consume) must still stream
+        # promptly end to end, staying under its own result budget
+        t0 = time.perf_counter()
+        got = []
+        for lo in range(0, 200, 16):
+            n = fast.push(range(lo, min(lo + 16, 200)))
+            got.extend(fast.results(max_items=n, timeout=20))
+        elapsed = time.perf_counter() - t0
+        assert got == [2 * v for v in range(200)]
+        assert elapsed < 10, f"fast session stalled {elapsed:.1f}s"
+        # slow lane: undelivered backlog bounded near result_budget (plus
+        # tuples already in flight when admission stopped), never the flood
+        snap = mux.stats()["sessions"][slow.sid]
+        assert snap["undelivered"] <= 32 + 512
+        drained = list(slow.results(max_items=slow.pushed, timeout=30))
+        assert drained == [2 * v for v in range(slow.pushed)]
+        slow.close()
+        fast.close()
+
+
+@pytest.mark.timeout(60)
+def test_starvation_snapshot_carries_per_session_backlog():
+    with _mux("thread", 1, ["double"], max_sessions=2) as mux:
+        quiet = mux.open()
+        busy = mux.open()
+        busy.push([1, 2, 3])
+        with pytest.raises(SessionStarvation) as exc_info:
+            list(quiet.results(timeout=0.3))
+        snap = exc_info.value.snapshot
+        assert set(snap["sessions"]) == {quiet.sid, busy.sid}
+        for stats in snap["sessions"].values():
+            for key in ("pushed", "admitted", "egressed", "undelivered",
+                        "ingress_queued", "weight"):
+                assert key in stats
+        assert snap["open_sessions"] == 2
+        assert list(busy.results(max_items=3, timeout=20)) == [2, 4, 6]
+        quiet.close()
+        busy.close()
+
+
+# ---------------------------------------------------------------- admission
+@pytest.mark.timeout(60)
+def test_admission_control_max_sessions_and_churn_frees_slots():
+    with _mux("thread", 1, ["double"], max_sessions=2) as mux:
+        a = mux.open()
+        b = mux.open()
+        with pytest.raises(AdmissionError) as exc_info:
+            mux.open()
+        assert exc_info.value.reason == "max_sessions"
+        assert exc_info.value.limit == 2
+        assert "sessions" in exc_info.value.snapshot
+        a.push([1, 2])
+        assert list(a.results(max_items=2, timeout=20)) == [2, 4]
+        a.close()  # graceful churn: retiring a session frees its slot
+        c = mux.open()
+        c.push([5])
+        assert list(c.results(max_items=1, timeout=20)) == [10]
+        b.close()
+        c.close()
+    stats = mux.stats()
+    assert stats["retired"][a.sid] == {"pushed": 2, "egressed": 2}
+    assert stats["undeliverable"] == 0
+
+
+@pytest.mark.timeout(60)
+def test_mux_closed_rejects_new_sessions_and_pushes():
+    mux = _mux("thread", 1, ["double"], max_sessions=4)
+    s = mux.open()
+    s.push([1])
+    assert list(s.results(max_items=1, timeout=20)) == [2]
+    mux.close()
+    with pytest.raises(AdmissionError) as exc_info:
+        mux.open()
+    assert exc_info.value.reason == "mux_closed"
+    with pytest.raises(RuntimeError):
+        s.try_push(9)
+    assert mux.close() is mux.report  # idempotent
+
+
+def test_mux_config_validation():
+    for bad in (
+        {"max_sessions": 0},
+        {"ingress_depth": 0},
+        {"result_budget": 0},
+        {"quantum": 0},
+        {"state_partitions": 0},
+    ):
+        with pytest.raises(ValueError):
+            MuxConfig(**bad).validate()
+    with _mux("thread", 1, ["double"]) as mux:
+        with pytest.raises(ValueError):
+            mux.open(weight=0.0)
+
+
+# ------------------------------------------------------------ load generator
+def test_arrival_shapes_hit_requested_mean_rate():
+    n = 4000
+    for shape in ("poisson", "lognormal", "pareto", "bursty", "diurnal"):
+        cfg = ArrivalConfig(shape=shape, rate=500.0, seed=13, period_s=0.5)
+        times = arrival_times(cfg, n)
+        assert len(times) == n
+        assert all(b >= a for a, b in zip(times, times[1:]))
+        achieved = n / times[-1]
+        assert 0.6 * cfg.rate < achieved < 1.7 * cfg.rate, (shape, achieved)
+    with pytest.raises(ValueError):
+        arrival_times(ArrivalConfig(shape="nope"), 1)
+    with pytest.raises(ValueError):
+        arrival_times(ArrivalConfig(shape="pareto", alpha=0.9), 1)
+    with pytest.raises(ValueError):
+        arrival_times(ArrivalConfig(shape="bursty", burst_duty=1.5), 1)
+
+
+def test_percentile_nearest_rank():
+    vals = [float(i) for i in range(1, 101)]
+    assert percentile(vals, 50) == 50.0
+    assert percentile(vals, 99) == 99.0
+    assert percentile(vals, 99.9) == 100.0
+    assert percentile([], 50) != percentile([], 50)  # NaN
+
+
+@pytest.mark.timeout(120)
+def test_open_loop_latency_charges_queueing_to_the_request():
+    """Coordinated-omission check with a ~1ms/tuple operator: a burst
+    offered far beyond capacity must report latencies dominated by queueing
+    (charged from the *scheduled* arrival), far above the lightly-loaded
+    run's service-time latencies."""
+    def build():
+        eng = Engine(EngineConfig(backend="thread", num_workers=2,
+                                  batch_size=1))
+        return SessionMux(eng, [OpSpec("spin", "stateless", _spin_double)],
+                          config=MuxConfig(max_sessions=4))
+
+    with build() as mux:
+        light = run_open_loop(
+            mux, sessions=4, requests=20,
+            arrivals=ArrivalConfig(rate=25.0, seed=5),
+        )
+    with build() as mux:
+        slam = run_open_loop(
+            mux, sessions=4, requests=20,
+            arrivals=ArrivalConfig(rate=1e6, seed=5),
+        )
+    assert light.completed == slam.completed == 80
+    # 80 requests x ~1ms arrive "instantly": the tail must carry the queue
+    assert slam.p99 > 0.02, slam.p99
+    assert slam.p99 > 2 * light.p50, (slam.p99, light.p50)
+    assert len(light.per_session) == 4
+    for summary in light.per_session.values():
+        assert summary["n"] == 20
+
+
+@pytest.mark.timeout(120)
+def test_open_loop_slow_consumer_injection_confined():
+    """Slow-consumer injection via the load generator: the victim's own
+    completions slow down, everyone else's p99 stays sane."""
+    with _mux(
+        "thread", 4, ["double"], max_sessions=4, result_budget=8
+    ) as mux:
+        rep = run_open_loop(
+            mux, sessions=4, requests=30,
+            arrivals=ArrivalConfig(rate=400.0, seed=9),
+            slow_consumers={0: 0.02},
+        )
+    assert rep.completed == 120
+    victim = rep.per_session[0]["p99"]
+    others = max(rep.per_session[i]["p99"] for i in (1, 2, 3))
+    assert victim > others, (victim, others)

@@ -155,6 +155,58 @@ def test_serving_matches_generate_reference():
 
 
 @pytest.mark.timeout(300)
+def test_serving_decode_position_buffer_never_aliased():
+    """Regression for the historical full-suite serving flake: when numpy
+    happens to hand ``OrderedServingEngine.position`` a 64-byte-aligned
+    buffer, ``jnp.asarray`` zero-copies it on CPU, and the engine's in-place
+    ``position += active`` / prefill writes race the asynchronously
+    dispatched decode — the kernel can read a *later* position and emit a
+    wrong token (~15% of runs when aligned).  Force the aligned worst case
+    deterministically and assert (a) every position handed to the jitted
+    decode keeps its call-time value for the whole run, and (b) the output
+    still matches the generate() oracle.
+    """
+    from repro.models.transformer import generate
+    from repro.serve.engine import OrderedServingEngine
+
+    cfg = smoke_config("olmo-1b")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    prompt = np.asarray([5, 9, 2, 77, 31], np.int32)
+    n_new = 6
+    ref = np.asarray(generate(cfg, params, jnp.asarray(prompt)[None, :],
+                              num_steps=n_new - 1)[0])
+
+    def aligned_i32(n, align=64):
+        base = np.zeros(n + align // 4, np.int32)
+        off = (-base.__array_interface__["data"][0] % align) // 4
+        view = base[off:off + n]
+        assert view.__array_interface__["data"][0] % align == 0
+        return base, view
+
+    keep_alive = []  # distinct allocations: stop numpy reusing one block
+    for _ in range(4):
+        eng = OrderedServingEngine(cfg, params, max_slots=2, max_len=32)
+        base, pos = aligned_i32(eng.max_slots)
+        keep_alive.append(base)
+        eng.position = pos
+        captured = []  # (call-time copy, live reference handed to decode)
+        inner = eng._decode
+
+        def spy(p, toks, cache, position, _inner=inner, _cap=captured):
+            _cap.append((np.asarray(position).copy(), position))
+            return _inner(p, toks, cache, position)
+
+        eng._decode = spy
+        eng.submit(prompt, max_new_tokens=n_new)
+        comps = eng.run_to_completion()
+        np.testing.assert_array_equal(comps[0].tokens, ref)
+        assert captured, "decode was never invoked"
+        for at_call, held in captured:
+            # an aliased buffer would now show the mutated (later) positions
+            np.testing.assert_array_equal(np.asarray(held), at_call)
+
+
+@pytest.mark.timeout(300)
 def test_serving_engine_small_reorder_ring_no_livelock():
     """Regression: with a slow head-of-line request and a reorder ring smaller
     than the number of later completions, the single-threaded engine used to
