@@ -32,6 +32,13 @@ CPU-bound synthetic queries (pure-Python compute stages, GIL-bound) through:
     rounds, throughput aggregated per config) so the ``auto_vs_flat_process``
     ratio cancels host-speed drift on small/noisy boxes.
 
+  - serving / elastic_serving (open-loop multiplexed sessions): the serving
+    row tracks coordinated-omission-free tail latency at 50% of probed
+    capacity; the elastic_serving row replays a bursty trace against static
+    vs traffic-reactive widths (SessionMux load signals driving the
+    TrafficMonitor's grow/shrink of the sid-partitioned stage) and records
+    the reactive side's resize counters next to both sides' percentiles.
+
 and writes ``BENCH_core.json`` (throughput, egress throughput, p99 latency,
 busy fraction, a ``stages`` column, plus the headline ratios) so the perf
 trajectory is tracked across PRs.  Each config's tuple count is
@@ -242,10 +249,17 @@ def _run_serving(seconds: float, workers: int):
             config=MuxConfig(max_sessions=SERVING_SESSIONS),
         )
 
-    # probe: saturating offered load -> achieved rate ~= mux capacity
+    # probe: saturating offered load -> achieved rate ~= mux capacity.
+    # The warmup prefix keeps the cold-start ramp (thread spin-up, first
+    # plan, estimator warm-up) out of the capacity window: without it the
+    # probe under-reads capacity and the measured run is offered less load
+    # than SERVING_UTIL claims.  The probe must be big enough that the
+    # steady window is 100s of ms — at ~25k/s a 250-request probe leaves a
+    # ~30 ms window where completion-timestamp clumping (the pump drains
+    # outputs in bursts) inflates the rate 2-20x.
     with make_mux() as mux:
         probe = run_open_loop(
-            mux, sessions=SERVING_SESSIONS, requests=250,
+            mux, sessions=SERVING_SESSIONS, requests=2000, warmup=400,
             arrivals=ArrivalConfig(shape="poisson", rate=1e6, seed=3),
         )
     capacity = max(probe.achieved_rate, 1.0)
@@ -277,6 +291,168 @@ def _run_serving(seconds: float, workers: int):
         "p99_latency_ms": round(rep.p99 * 1e3, 3),
         "p999_latency_ms": round(rep.p999 * 1e3, 3),
         "mean_latency_ms": round(rep.mean * 1e3, 3),
+    }
+
+
+ELASTIC_SESSIONS = 6  # concurrent sessions on the elastic serving row
+ELASTIC_PARTITIONS = 4  # sid partitions (= keyed-stage elastic ceiling)
+ELASTIC_SPIN = 20000  # stateful accumulator: ~1 ms/tuple, so the keyed
+#                       *worker* is the bottleneck (well under the parent
+#                       supervisor's shuttle capacity) and stage width
+#                       genuinely sets end-to-end capacity — the property
+#                       the grow/shrink A/B is about
+ELASTIC_BUDGET = 3  # worker budget: 1 spare over the 2 stages' floor
+ELASTIC_UTIL = 0.4  # mean offered load as a fraction of probed capacity
+#                     (low enough that the mean stays sustainable even if
+#                     the host runs ~1.5x slower than the probe sampled —
+#                     shared-vCPU speed regimes shift on ~10 s timescales)
+ELASTIC_BURST = 4.0  # burst peak = BURST x mean = 1.6 x capacity: deep
+#                      enough that width 1 falls behind even if the probe
+#                      *under*-sampled capacity by ~1.5x, while width 2
+#                      still has drain headroom at the nominal calibration
+ELASTIC_DUTY = 0.225  # fraction of each period spent at the burst rate
+#                       (duty x factor = 0.9 < 1, so the square wave's
+#                       analytic mean is exactly the nominal rate)
+ELASTIC_PERIOD = 4.0  # seconds per burst/trough cycle: a ~1 s burst
+#                       dwarfs both the policy's detection lag (~0.3 s:
+#                       signal interval + patience) and the ~50-150 ms
+#                       quiesce stall a grow costs, so the extra width
+#                       has most of the burst left to repay the stall —
+#                       shallow bursts end before the grow lands and
+#                       measure nothing but the stall
+
+
+def _elastic_chain():
+    """SL(edge) -> stateful(accsum): the mux converts the stateful op into
+    a sid-partitioned keyed stage (``ELASTIC_PARTITIONS`` partitions) —
+    exactly the stage the traffic policy grows and shrinks."""
+    from repro.core.operators import OpSpec
+    from repro.streams.parametric import cpu_bound_stateless
+
+    def acc(state, v):
+        x = float(v)
+        for _ in range(ELASTIC_SPIN):
+            x = (x * 1.0000001 + 1.31) % 97.0
+        return (state or 0) + 1, [x]
+
+    return [
+        cpu_bound_stateless("edge", spin=30),
+        OpSpec("accsum", "stateful", acc, init_state=lambda: 0,
+               cost_us=ELASTIC_SPIN * 0.08),
+    ]
+
+
+def _elastic_mux(reactive: bool):
+    from repro.core.api import Engine, EngineConfig, ProcessOptions
+    from repro.serve import MuxConfig, SessionMux
+
+    # replan_interval parks the occupancy (skew) monitor so the row
+    # isolates the *traffic* loop; the reactive side gets aggressive dials
+    # (short interval, patience 1, brief cooldown) because the bursty
+    # trace compresses a diurnal cycle into ~1 s periods.
+    # max_inflight bounds the quiesce stall a resize must drain (8 units
+    # x io_batch 8 x ~1 ms/tuple ~= 64 ms), keeping honest resizes well
+    # inside the 0.5 s p99-guard budget
+    popts = dict(worker_budget=ELASTIC_BUDGET, replan_interval=600.0,
+                 max_inflight=8)
+    if reactive:
+        popts.update(
+            traffic_elastic=True, traffic_interval=0.15,
+            traffic_grow_util=0.65, traffic_shrink_util=0.30,
+            traffic_patience=1, traffic_cooldown=0.6,
+            resize_latency_budget=0.5,
+        )
+    else:
+        popts.update(elastic=False)  # static widths: the control arm
+    eng = Engine(EngineConfig(
+        backend="process", num_workers=1, batch_size=2,
+        process=ProcessOptions(**popts),
+    ))
+    return SessionMux(
+        eng, _elastic_chain(),
+        config=MuxConfig(
+            max_sessions=ELASTIC_SESSIONS,
+            state_partitions=ELASTIC_PARTITIONS,
+            load_signal_interval=0.05,
+        ),
+    )
+
+
+def _run_elastic_serving(seconds: float, workers: int):
+    """Traffic-reactive elasticity A/B: the same bursty open-loop trace
+    (square-wave offered load: ``ELASTIC_DUTY`` of each second at
+    ``ELASTIC_BURST``x the mean, a deep trough in between) is replayed
+    against *static* widths and against the closed loop — SessionMux load
+    signals feeding the TrafficMonitor, which grows the sid-partitioned
+    stateful stage into the burst and shrinks it back in the trough
+    (hysteresis + cooldown + the resize-latency p99 guard).  The row
+    carries the reactive side's grow/shrink/abort/revert counters and both
+    sides' percentiles."""
+    from repro.serve import ArrivalConfig, run_open_loop
+
+    window = max(seconds, 2.25 * ELASTIC_PERIOD)  # >= 2 full cycles
+    # Median of three flood probes: the shared-vCPU host shifts speed
+    # regimes on ~10 s timescales (observed 1.5-2x capacity swings between
+    # back-to-back probes), and a single sample mis-calibrates the whole
+    # trace.  The bursty trace itself tolerates a further ~1.5x drift in
+    # either direction (see ELASTIC_UTIL / ELASTIC_BURST).
+    samples = []
+    for _ in range(3):
+        with _elastic_mux(reactive=False) as mux:
+            probe = run_open_loop(
+                mux, sessions=ELASTIC_SESSIONS, requests=90, warmup=24,
+                arrivals=ArrivalConfig(shape="poisson", rate=1e6, seed=5),
+            )
+        samples.append(probe.achieved_rate)
+    capacity = max(sorted(samples)[1], 1.0)
+    offered = capacity * ELASTIC_UTIL
+    per_session = max(int(offered * window / ELASTIC_SESSIONS), 40)
+    arrivals = ArrivalConfig(
+        shape="bursty", rate=offered / ELASTIC_SESSIONS,
+        burst_factor=ELASTIC_BURST, burst_duty=ELASTIC_DUTY,
+        period_s=ELASTIC_PERIOD, seed=17,
+    )
+    reports, counters = {}, {}
+    for mode, reactive in (("static", False), ("reactive", True)):
+        with _elastic_mux(reactive=reactive) as mux:
+            reports[mode] = run_open_loop(
+                mux, sessions=ELASTIC_SESSIONS, requests=per_session,
+                arrivals=arrivals,
+            )
+            counters[mode] = mux._inner.stats()
+    static, reactive_rep = reports["static"], reports["reactive"]
+    rs = counters["reactive"]
+    stalls = rs.get("resize_stalls") or []
+    return {
+        "workload": "elastic_serving",
+        "backend": "process",
+        "batch_size": 2,
+        "stages": len(rs.get("stage_widths") or []) or None,
+        "workers": 1,
+        "worker_budget": ELASTIC_BUDGET,
+        "sessions": ELASTIC_SESSIONS,
+        "arrivals": "bursty",
+        "open_loop": True,
+        "capacity_per_s": round(capacity, 1),
+        "offered_rate_per_s": round(reactive_rep.offered_rate, 1),
+        "achieved_rate_per_s": round(reactive_rep.achieved_rate, 1),
+        "tuples": reactive_rep.requests,
+        "wall_s": round(reactive_rep.duration_s, 3),
+        "throughput_per_s": round(reactive_rep.achieved_rate, 1),
+        "p50_latency_ms": round(reactive_rep.p50 * 1e3, 3),
+        "p99_latency_ms": round(reactive_rep.p99 * 1e3, 3),
+        "p999_latency_ms": round(reactive_rep.p999 * 1e3, 3),
+        "mean_latency_ms": round(reactive_rep.mean * 1e3, 3),
+        "static_p50_latency_ms": round(static.p50 * 1e3, 3),
+        "static_p99_latency_ms": round(static.p99 * 1e3, 3),
+        "final_stage_widths": rs.get("stage_widths"),
+        "grows": rs.get("grows", 0),
+        "shrinks": rs.get("shrinks", 0),
+        "resize_aborts": rs.get("resize_aborts", 0),
+        "resize_reverts": rs.get("resize_reverts", 0),
+        "max_resize_stall_ms": (
+            round(max(stalls) * 1e3, 3) if stalls else 0.0
+        ),
     }
 
 
@@ -364,6 +540,16 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
         f"p50={row['p50_latency_ms']:.2f}ms p99={row['p99_latency_ms']:.2f}ms "
         f"p999={row['p999_latency_ms']:.2f}ms"
     )
+    row = _run_elastic_serving(seconds, workers)
+    rows.append(row)
+    print_fn(
+        f"{row['workload']:>14} {row['backend']:>7} "
+        f"sessions={row['sessions']} open-loop bursty "
+        f"grows={row['grows']} shrinks={row['shrinks']} "
+        f"aborts={row['resize_aborts']} "
+        f"p99={row['p99_latency_ms']:.2f}ms "
+        f"static-p99={row['static_p99_latency_ms']:.2f}ms"
+    )
 
     def thru(workload, backend, batch, staged=None):
         for r in rows:
@@ -418,6 +604,17 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
                  if r["workload"] == "recovery"), 0.0,
             ), 1e-9), 3,
         ),
+        # The PR-9 tentpole ratio: tail latency of the traffic-reactive
+        # loop vs static widths on the same bursty trace (< 1 = reactive
+        # resizes pay for themselves; the acceptance bar is <= 1.25).
+        "elastic_serving_p99_vs_static": round(
+            next((r["p99_latency_ms"] for r in rows
+                  if r["workload"] == "elastic_serving"), 0.0) /
+            max(next(
+                (r["static_p99_latency_ms"] for r in rows
+                 if r["workload"] == "elastic_serving"), 0.0,
+            ), 1e-9), 3,
+        ),
     }
     doc = {
         "meta": {
@@ -441,7 +638,17 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
                            "open-loop Poisson arrivals at "
                            f"{SERVING_UTIL:.0%} of probed capacity; "
                            "latency is coordinated-omission-free "
-                           "(measured from scheduled arrival)",
+                           "(measured from scheduled arrival; probe "
+                           "discards a 400-request warmup prefix)",
+                "elastic_serving": f"{ELASTIC_SESSIONS} sessions, bursty "
+                                   f"open-loop trace ({ELASTIC_DUTY:.0%} of "
+                                   f"each period at {ELASTIC_BURST:g}x the "
+                                   f"{ELASTIC_UTIL:.0%}-of-capacity mean) "
+                                   "on the process backend: static widths "
+                                   "vs the traffic-reactive loop (mux load "
+                                   "signals -> TrafficMonitor grow/shrink "
+                                   "of the sid-partitioned stage, p99 "
+                                   "resize guard); reactive side reported",
             },
             "seconds_per_config": seconds,
             "cpu_count": os.cpu_count(),
@@ -459,7 +666,9 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
         f"batch32/batch1={ratios['thread_batch32_vs_batch1']}x  "
         f"staged/ingress={ratios['staged_vs_ingress_process']}x  "
         f"auto/flat={ratios['auto_vs_flat_process']}x  "
-        f"recovery/clean={ratios['recovery_goodput_vs_clean']}x  -> {out}"
+        f"recovery/clean={ratios['recovery_goodput_vs_clean']}x  "
+        f"elastic-p99/static={ratios['elastic_serving_p99_vs_static']}x  "
+        f"-> {out}"
     )
     return doc
 

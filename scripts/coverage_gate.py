@@ -43,6 +43,9 @@ PER_FILE_FLOORS = {
     # the fault-tolerance subsystem must stay exercised by the chaos battery
     "checkpoint.py": 80.0,
     "faults.py": 80.0,
+    # allocation + occupancy/traffic elasticity policies (the serving tier's
+    # grow/shrink loop lives here and must keep its unit battery)
+    "costmodel.py": 80.0,
 }
 
 _hits: set = set()  # (abspath, lineno)

@@ -47,6 +47,7 @@ RULES: Dict[str, str] = {
     "PV405": "parallel stage without a reorder ring to drain through",
     "PV406": "operator parallelism cap inconsistent with its kind",
     "PV407": "checkpoint geometry inconsistent with the stage layout",
+    "PV408": "traffic-elasticity policy geometry unsatisfiable",
 }
 
 

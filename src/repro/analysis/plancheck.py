@@ -1,4 +1,4 @@
-"""Plan-time ordering-safety rule catalog (rules PV401–PV407).
+"""Plan-time ordering-safety rule catalog (rules PV401–PV408).
 
 :meth:`repro.core.api.PhysicalPlan.verify` delegates here.  The rules assert
 the structural invariants that make a plan's parallel execution externally
@@ -27,6 +27,13 @@ builds, but a hand-built or deserialized-and-edited plan can violate them:
   plan's epoch interval must cover a full dispatch unit
   (``checkpoint_interval >= io_batch``: barriers ride unit boundaries, a
   shorter interval cannot be honored).
+- **PV408** — traffic-elasticity policy geometry: the hysteresis band must
+  be non-empty (``traffic_shrink_util < traffic_grow_util`` — a shrink
+  threshold at or above the grow threshold makes the policy oscillate a
+  width forever), the p99-guard budget, when set, must be positive, and an
+  *explicitly* armed policy (``traffic_elastic=True``) must have at least
+  one stage it can ever act on (non-stateful with ``max_workers > 1``) —
+  a policy with no resizable stage silently never fires.
 
 The module deliberately imports nothing from :mod:`repro.core` — it reads
 the plan duck-typed — so ``core.api`` can import it lazily with no cycle.
@@ -36,7 +43,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
-CATALOG_VERSION = 2
+CATALOG_VERSION = 3
 
 
 @dataclass(frozen=True)
@@ -149,6 +156,45 @@ def verify_plan(plan) -> List[PlanViolation]:
                         "boundaries, a shorter interval cannot be honored",
                     )
                 )
+        popts = getattr(getattr(plan, "config", None), "process", None)
+        if popts is not None:
+            grow = getattr(popts, "traffic_grow_util", None)
+            shrink = getattr(popts, "traffic_shrink_util", None)
+            if (
+                grow is not None and shrink is not None
+                and not (0 < shrink < grow)
+            ):
+                v.append(
+                    PlanViolation(
+                        rule="PV408",
+                        message=f"traffic policy hysteresis is empty: "
+                        f"shrink_util={shrink} must sit strictly inside "
+                        f"(0, grow_util={grow}) or widths oscillate",
+                    )
+                )
+            guard = getattr(popts, "resize_latency_budget", None)
+            if guard is not None and guard <= 0:
+                v.append(
+                    PlanViolation(
+                        rule="PV408",
+                        message=f"resize_latency_budget={guard} must be "
+                        "positive (None disables the p99 guard)",
+                    )
+                )
+            if getattr(popts, "traffic_elastic", None) is True:
+                stages = list(getattr(plan, "stages", ()))
+                if stages and not any(
+                    s.kind != "stateful" and s.max_workers > 1
+                    for s in stages
+                ):
+                    v.append(
+                        PlanViolation(
+                            rule="PV408",
+                            message="traffic_elastic=True but no stage is "
+                            "resizable (non-stateful with max_workers > 1): "
+                            "the policy can never act",
+                        )
+                    )
 
     for s in getattr(plan, "stages", ()):
         if s.kind == "stateful" and s.workers > 1:

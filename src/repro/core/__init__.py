@@ -32,6 +32,8 @@ from .pipeline import (
 from .costmodel import (
     CostModel,
     OccupancyMonitor,
+    TrafficMonitor,
+    TrafficSnapshot,
     proportional_allocation,
     resolve_workers,
 )
@@ -107,6 +109,8 @@ __all__ = [
     "compile_pipeline",
     "CostModel",
     "OccupancyMonitor",
+    "TrafficMonitor",
+    "TrafficSnapshot",
     "proportional_allocation",
     "resolve_workers",
     "HEURISTICS",

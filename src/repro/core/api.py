@@ -156,6 +156,22 @@ class ProcessOptions:
     when ``num_workers="auto"``); the ``replan_*`` trio tunes the occupancy
     monitor; ``parent_idle_cap`` caps the supervisor's idle nap.
 
+    Traffic-reactive elasticity dials (see docs/serving.md): the
+    ``traffic_*`` group tunes the :class:`~repro.core.TrafficMonitor` that
+    turns serving-tier load signals (``SessionMux.load_signals`` snapshots
+    arriving via ``Session.offer_load``) into grow/shrink proposals —
+    ``traffic_elastic`` arms it (``None`` = on exactly when the runtime is
+    elastic; ``True`` additionally forces ``elastic`` on),
+    ``traffic_interval`` is the policy evaluation period,
+    ``traffic_grow_util`` / ``traffic_shrink_util`` are the hysteresis
+    thresholds on predicted stage utilization (shrink must sit strictly
+    below grow), ``traffic_patience`` the consecutive qualifying samples
+    required, and ``traffic_cooldown`` the post-resize quiet period.
+    ``resize_latency_budget`` is the p99 guard: seconds a replan may stall
+    the feeder before the supervisor aborts it pre-quiesce (and a
+    traffic-triggered resize that completes over budget is undone);
+    ``None`` disables the guard.
+
     Fault-tolerance dials (see ``docs/fault-tolerance.md``):
     ``checkpoint_interval`` is the epoch length in serials for keyed/stateful
     state snapshots (0 disables — those stages then abort the job on a worker
@@ -179,6 +195,13 @@ class ProcessOptions:
     replan_interval: float = 0.25
     replan_threshold: float = 0.55
     replan_patience: int = 3
+    traffic_elastic: Optional[bool] = None
+    traffic_interval: float = 0.5
+    traffic_grow_util: float = 0.85
+    traffic_shrink_util: float = 0.30
+    traffic_patience: int = 2
+    traffic_cooldown: float = 2.0
+    resize_latency_budget: Optional[float] = None
     parent_idle_cap: float = 5e-4
     checkpoint_interval: int = 1024
     stall_timeout: Optional[float] = None
@@ -207,6 +230,32 @@ class ProcessOptions:
                "replan_threshold must be in (0, 1]", key="replan_threshold")
         _check(self.replan_patience >= 1, "replan_patience must be >= 1",
                key="replan_patience")
+        _check(
+            self.traffic_elastic is not True or self.elastic is not False,
+            "traffic_elastic=True requires elastic replanning "
+            "(elastic must not be False)",
+            key="traffic_elastic",
+        )
+        _check(self.traffic_interval > 0, "traffic_interval must be > 0",
+               key="traffic_interval")
+        _check(self.traffic_grow_util > 0, "traffic_grow_util must be > 0",
+               key="traffic_grow_util")
+        _check(
+            0 < self.traffic_shrink_util < self.traffic_grow_util,
+            "traffic_shrink_util must be in (0, traffic_grow_util) — the "
+            "hysteresis band must be non-empty",
+            key="traffic_shrink_util",
+        )
+        _check(self.traffic_patience >= 1, "traffic_patience must be >= 1",
+               key="traffic_patience")
+        _check(self.traffic_cooldown >= 0, "traffic_cooldown must be >= 0",
+               key="traffic_cooldown")
+        _check(
+            self.resize_latency_budget is None
+            or self.resize_latency_budget > 0,
+            "resize_latency_budget must be None (guard off) or > 0",
+            key="resize_latency_budget",
+        )
         _check(self.parent_idle_cap > 0, "parent_idle_cap must be > 0",
                key="parent_idle_cap")
         _check(
@@ -587,6 +636,30 @@ class PhysicalPlan:
                     else "no keyed/stateful stage"
                 )
                 lines.append(f"  checkpoint: off ({why})")
+            elastic_on = (
+                p.elastic if p.elastic is not None
+                else c.num_workers == "auto"
+            ) or p.traffic_elastic is True
+            traffic_on = (
+                p.traffic_elastic if p.traffic_elastic is not None
+                else elastic_on
+            )
+            if traffic_on:
+                guard = (
+                    "off" if p.resize_latency_budget is None
+                    else f"{p.resize_latency_budget:g}s"
+                )
+                lines.append(
+                    f"  elasticity: traffic=on "
+                    f"interval={p.traffic_interval:g}s "
+                    f"grow>{p.traffic_grow_util:g} "
+                    f"shrink<{p.traffic_shrink_util:g} "
+                    f"patience={p.traffic_patience} "
+                    f"cooldown={p.traffic_cooldown:g}s guard={guard}"
+                )
+            else:
+                why = "static widths" if not elastic_on else "disabled"
+                lines.append(f"  elasticity: traffic=off ({why})")
             if self.unstaged:
                 # execution warns only when routing nodes land in the tail
                 # (a stages=N cap can strand plain ops there silently)
@@ -938,6 +1011,27 @@ class Session:
         occupancy (scheduler snapshot or stage widths/backlog)."""
         raise NotImplementedError
 
+    def offer_load(self, signals: dict) -> None:
+        """Feed a serving-tier load snapshot to the backend.
+
+        ``signals`` is a :meth:`repro.serve.SessionMux.load_signals`-shaped
+        dict (``ts``, ``sessions``, ``admitted_total``, ``ingress_queued``,
+        ``backpressured``).  The process backend forwards it to the
+        traffic-reactive elasticity policy
+        (:class:`~repro.core.TrafficMonitor`); other backends ignore it.
+        Must be called from the thread that owns the session."""
+
+    def service_once(self) -> bool:
+        """One *non-blocking* backend progress crank; ``True`` if it did work.
+
+        Unlike :meth:`service` this never sleeps and never flushes partial
+        micro-batches, so a pump loop may call it every iteration: on the
+        process backend it advances the single-threaded parent supervisor
+        (whose progress would otherwise ration on ``try_push``/``poll``
+        side effects under steady paced traffic); on backends whose workers
+        make progress on their own threads it is a no-op."""
+        return False
+
     def close(self, drain_timeout: float = 60.0) -> RunReport:
         """Seal the input, drain every in-flight tuple, stop the backend,
         and return the final report (idempotent)."""
@@ -1139,6 +1233,26 @@ class _ProcessSession(Session):
         if not self._rt._service_once():
             time.sleep(1e-4)
 
+    def offer_load(self, signals: dict) -> None:
+        """Forward serving-tier load signals to the supervisor's traffic
+        monitor (see :meth:`Session.offer_load`)."""
+        self._rt.observe_traffic(signals)
+
+    def service_once(self) -> bool:
+        """Bounded non-blocking supervisor sweep (see
+        :meth:`Session.service_once`): cranks until a pass reports no
+        progress (cap 64), so one call drains whatever the workers have
+        ready instead of rationing one crank's worth per call — a fixed
+        per-crank overhead (ring scans, unpickling, the serial tail) would
+        otherwise cap paced throughput far below flood throughput."""
+        rt = self._rt
+        did = False
+        for _ in range(64):
+            if not rt._service_once():
+                break
+            did = True
+        return did
+
     def stats(self) -> dict:
         """Live process-backend counters (see :meth:`Session.stats`)."""
         rt = self._rt
@@ -1154,6 +1268,11 @@ class _ProcessSession(Session):
             "restarts": rt.restarts,
             "recoveries": rt.recoveries,
             "dead_letters": len(rt.dead_letters),
+            "grows": rt.grows,
+            "shrinks": rt.shrinks,
+            "resize_stalls": list(rt.resize_stalls),
+            "resize_aborts": rt.resize_aborts,
+            "resize_reverts": rt.resize_reverts,
         }
 
     def close(self, drain_timeout: float = 60.0) -> RunReport:
@@ -1398,6 +1517,13 @@ class Engine:
             replan_interval=p.replan_interval,
             replan_threshold=p.replan_threshold,
             replan_patience=p.replan_patience,
+            traffic_elastic=p.traffic_elastic,
+            traffic_interval=p.traffic_interval,
+            traffic_grow_util=p.traffic_grow_util,
+            traffic_shrink_util=p.traffic_shrink_util,
+            traffic_patience=p.traffic_patience,
+            traffic_cooldown=p.traffic_cooldown,
+            resize_latency_budget=p.resize_latency_budget,
             parent_idle_cap=p.parent_idle_cap,
             checkpoint_interval=p.checkpoint_interval,
             stall_timeout=p.stall_timeout,

@@ -27,6 +27,12 @@ live restructuring (arXiv 1904.03800), this module supplies:
   width vector when occupancy drifts past a threshold for several
   consecutive samples — the trigger for :class:`~.procrun.ProcessRuntime`'s
   elastic replanning.
+- :class:`TrafficMonitor` — the serving-tier counterpart: an offered-load
+  rate EWMA fed by :meth:`repro.serve.SessionMux.load_signals` snapshots,
+  converted to per-stage utilization against the live cost model, with
+  hysteresis (separate grow/shrink thresholds), per-stage patience streaks,
+  and post-resize cooldowns — so worker widths react to *traffic* (session
+  fan-out, bursty/diurnal ramps), not just skew.
 
 The thread backend's adaptive controller (:meth:`.scheduler.Scheduler.adapt`)
 shares the cost surface (:func:`op_cost_us` folds ``cost_priors`` into
@@ -335,6 +341,33 @@ class _Snapshot:
     backlog: List[int]  # per-stage queued ingress slots
 
 
+def _refresh_measured_costs(
+    model: CostModel,
+    prev: _Snapshot,
+    snap: _Snapshot,
+    widths: Sequence[int],
+    min_backlog: int,
+) -> None:
+    """Fold live drain rates into ``model``: a backlogged stage is
+    service-limited, so its drain rate ≈ width / cost; an unsaturated
+    stage's drain rate only upper-bounds its cost (it is arrival-limited),
+    so it may only lower the estimate."""
+    dt = snap.ts - prev.ts
+    if dt <= 0:
+        return
+    for i, width in enumerate(widths):
+        dd = snap.drained[i] - prev.drained[i]
+        if dd <= 0 or width <= 0:
+            continue
+        measured = width * dt * 1e6 / dd
+        if (
+            snap.backlog[i] >= min_backlog
+            or measured < model.profiles[i].cost_us
+        ):
+            model.observe(i, measured)
+    model.observe_flows(snap.drained)
+
+
 class OccupancyMonitor:
     """Watches live stage counters and proposes elastic replans.
 
@@ -370,8 +403,12 @@ class OccupancyMonitor:
         self.patience = patience
         self._prev: Optional[_Snapshot] = None
         self._next_at = 0.0
-        self._streak = 0
-        self._streak_stage = -1  # patience counts CONSECUTIVE samples of ONE stage
+        # patience accumulates PER STAGE: two stages alternating as the
+        # backlog leader each still reach ``patience`` qualifying samples
+        # (a single shared streak would reset on every leader change and
+        # an oscillating hot spot would never replan).  All streaks clear
+        # whenever the pipeline shows no addressable drift at all.
+        self._streaks: Dict[int, int] = {}
         self.samples = 0  # instrumentation
 
     def due(self, now: float) -> bool:
@@ -397,25 +434,12 @@ class OccupancyMonitor:
         dt = now - prev.ts
         if dt <= 0:
             return None
-        # refresh measured costs: a backlogged stage is service-limited, so
-        # its drain rate ≈ width / cost; an unsaturated stage's drain rate
-        # only upper-bounds its cost (it is arrival-limited), so it may only
-        # lower the estimate.
-        for i, width in enumerate(widths):
-            dd = snap.drained[i] - prev.drained[i]
-            if dd <= 0 or width <= 0:
-                continue
-            measured = width * dt * 1e6 / dd
-            if (
-                snap.backlog[i] >= self.min_backlog
-                or measured < self.model.profiles[i].cost_us
-            ):
-                self.model.observe(i, measured)
-        self.model.observe_flows(snap.drained)
+        _refresh_measured_costs(self.model, prev, snap, widths,
+                                self.min_backlog)
 
         total_backlog = sum(snap.backlog)
         if total_backlog < self.min_backlog:
-            self._streak = 0
+            self._streaks.clear()
             return None
         hot = max(range(len(widths)), key=lambda i: snap.backlog[i])
         caps = self.model.stage_caps()
@@ -426,7 +450,7 @@ class OccupancyMonitor:
         ):
             # no drift, or drift that is unaddressable (hot stage pinned or
             # already at cap): do not thrash the others
-            self._streak = 0
+            self._streaks.clear()
             return None
         proposal: List[Tuple[int, int]] = []
         if self.budget - sum(widths) <= 0:
@@ -435,16 +459,279 @@ class OccupancyMonitor:
                 if i != hot and resizable[i] and widths[i] > 1
             ]
             if not donors:
-                self._streak = 0
+                self._streaks.clear()
                 return None
             donor = min(donors, key=lambda i: snap.backlog[i])
             proposal.append((donor, widths[donor] - 1))
         proposal.append((hot, widths[hot] + 1))
-        if hot != self._streak_stage:  # drift must persist on ONE stage —
-            self._streak = 0  # an alternating backlog leader never replans
-            self._streak_stage = hot
-        self._streak += 1
-        if self._streak < self.patience:
+        self._streaks[hot] = self._streaks.get(hot, 0) + 1
+        if self._streaks[hot] < self.patience:
             return None
-        self._streak = 0
+        self._streaks.clear()
         return proposal
+
+
+# ----------------------------------------------------------- traffic monitor
+@dataclass
+class TrafficSnapshot:
+    """One serving-tier load observation, as exported by
+    :meth:`repro.serve.SessionMux.load_signals`.
+
+    ``admitted_total`` is a monotonic count of tuples the mux admitted into
+    the runtime, ``ingress_queued`` the tuples still parked in per-session
+    DRR ingress queues (admission pressure the runtime is not absorbing),
+    ``backpressured`` the number of sessions paused on a full result
+    buffer."""
+
+    ts: float
+    sessions: int = 0
+    admitted_total: int = 0
+    ingress_queued: int = 0
+    backpressured: int = 0
+
+
+class TrafficMonitor:
+    """Traffic-aware elasticity policy: grow/shrink proposals keyed on
+    *offered load*, not just ring occupancy.
+
+    The :class:`OccupancyMonitor` reacts to stage *skew* — where queued work
+    sits.  A multiplexed serving tier (``repro.serve.SessionMux``) also
+    needs the plan to react to *traffic*: session fan-out and offered-load
+    ramps should widen the sid-partitioned stage, sustained diurnal troughs
+    should hand the workers back.  Following BriskStream's rule that scaling
+    decisions come from a measured execution model re-evaluated at runtime,
+    this policy:
+
+    - ingests serving-tier load snapshots (:meth:`ingest`) and keeps an
+      EWMA of the offered source-tuple rate — the admitted-counter delta
+      *plus* ingress-queue growth, so load the runtime fails to absorb
+      still counts as offered;
+    - converts the rate into per-stage utilization against the live
+      measured cost model (``util = rate * flow * cost_us / (width * 1e6)``)
+      and proposes growing the hottest resizable stage (keyed —
+      i.e. sid-partitioned — stages preferred) once utilization exceeds
+      ``grow_util`` for ``patience`` consecutive samples, or immediately on
+      sustained admission pressure even when the cost model disagrees;
+    - proposes shrinking the idlest over-provisioned stage only when its
+      utilization sits below ``shrink_util`` *and* would remain below
+      ``grow_util`` at the narrower width — the hysteresis band that stops
+      grow/shrink oscillation;
+    - enforces a ``cooldown`` after every proposal, quadrupled when the
+      supervisor reports the resize was aborted or blew its latency budget
+      (:meth:`resize_result`), so a resize that stalls the pipeline is not
+      immediately retried.
+
+    Streaks accumulate per stage and per direction; all state is touched
+    only from the supervisor thread.
+    """
+
+    def __init__(
+        self,
+        model: CostModel,
+        budget: int,
+        *,
+        interval: float = 0.5,
+        grow_util: float = 0.85,
+        shrink_util: float = 0.30,
+        patience: int = 2,
+        cooldown: float = 2.0,
+        alpha: float = 0.3,
+        min_backlog: int = 8,
+    ):
+        if not (0.0 < shrink_util < grow_util):
+            raise ValueError(
+                "traffic policy hysteresis requires 0 < shrink_util "
+                f"< grow_util, got shrink={shrink_util} grow={grow_util}"
+            )
+        self.model = model
+        self.budget = budget
+        self.interval = interval
+        self.grow_util = grow_util
+        self.shrink_util = shrink_util
+        self.patience = max(int(patience), 1)
+        self.cooldown = cooldown
+        self.alpha = alpha
+        self.min_backlog = min_backlog
+        self._last: Optional[TrafficSnapshot] = None
+        self._rate = 0.0  # EWMA offered source tuples/s
+        self._have_rate = False
+        self._pressure = 0
+        self._sessions = 0
+        self._prev: Optional[_Snapshot] = None
+        self._next_at = 0.0
+        self._cooldown_until = 0.0
+        self._grow_streaks: Dict[int, int] = {}
+        self._shrink_streaks: Dict[int, int] = {}
+        self.ingests = 0  # instrumentation
+        self.samples = 0
+        self.proposals = 0
+        self.backoffs = 0
+
+    @property
+    def rate(self) -> float:
+        """Current EWMA estimate of the offered source-tuple rate (1/s)."""
+        return self._rate
+
+    def ingest(self, signals: Dict[str, float]) -> None:
+        """Feed one serving-tier load snapshot (a ``load_signals()`` dict).
+
+        The offered rate between consecutive snapshots is the admitted
+        delta plus the ingress-queue growth over the elapsed time; it is
+        folded into the EWMA.  Queue depth and session count are kept as
+        the admission-pressure signal."""
+        snap = TrafficSnapshot(
+            ts=float(signals.get("ts", 0.0)),
+            sessions=int(signals.get("sessions", 0)),
+            admitted_total=int(signals.get("admitted_total", 0)),
+            ingress_queued=int(signals.get("ingress_queued", 0)),
+            backpressured=int(signals.get("backpressured", 0)),
+        )
+        prev, self._last = self._last, snap
+        self._pressure = snap.ingress_queued
+        self._sessions = snap.sessions
+        self.ingests += 1
+        if prev is None:
+            return
+        dt = snap.ts - prev.ts
+        if dt <= 0:
+            return
+        offered = max(
+            (snap.admitted_total - prev.admitted_total)
+            + (snap.ingress_queued - prev.ingress_queued),
+            0,
+        ) / dt
+        if not self._have_rate:
+            self._rate, self._have_rate = offered, True
+        else:
+            self._rate += self.alpha * (offered - self._rate)
+
+    def due(self, now: float) -> bool:
+        """Whether the next policy evaluation interval has elapsed."""
+        return now >= self._next_at
+
+    def saturated(self) -> bool:
+        """Sustained admission pressure: the mux-side ingress queues hold
+        more than a couple of tuples per open session, i.e. the runtime is
+        not absorbing the offered load regardless of what the cost model
+        predicts."""
+        return self._pressure >= max(16, 2 * max(self._sessions, 1))
+
+    def utilization(self, widths: Sequence[int]) -> List[float]:
+        """Predicted per-stage utilization of the offered rate:
+        ``rate * flow_i * cost_us_i / (width_i * 1e6)`` — the fraction of
+        stage *i*'s service capacity the measured load consumes."""
+        return [
+            self._rate * p.flow * p.cost_us / (max(w, 1) * 1e6)
+            for p, w in zip(self.model.profiles, widths)
+        ]
+
+    def resize_result(
+        self,
+        now: float,
+        *,
+        stall_s: Optional[float] = None,
+        aborted: bool = False,
+        over_budget: bool = False,
+    ) -> None:
+        """Record the outcome of a resize: a completed one (re)starts the
+        normal cooldown; an aborted or over-latency-budget one backs off
+        4x, so a resize whose quiesce stall blew the p99 budget is not
+        immediately retried.  ``stall_s`` is informational."""
+        mult = 4.0 if (aborted or over_budget) else 1.0
+        if aborted or over_budget:
+            self.backoffs += 1
+        self._cooldown_until = max(
+            self._cooldown_until, now + mult * self.cooldown
+        )
+
+    def sample(
+        self,
+        now: float,
+        drained: Sequence[int],
+        backlog: Sequence[int],
+        widths: Sequence[int],
+        resizable: Sequence[bool],
+    ) -> Optional[List[Tuple[int, int]]]:
+        """Evaluate the policy against one stage-counter snapshot; returns
+        ``[(stage, new_width), ...]`` (shrinks first) or None.  Inert until
+        the first two :meth:`ingest` calls establish a rate estimate."""
+        self._next_at = now + self.interval
+        self.samples += 1
+        snap = _Snapshot(now, list(drained), list(backlog))
+        prev, self._prev = self._prev, snap
+        if prev is not None:
+            _refresh_measured_costs(self.model, prev, snap, widths,
+                                    self.min_backlog)
+        if not self._have_rate:
+            return None
+        if now < self._cooldown_until:
+            return None
+        utils = self.utilization(widths)
+        caps = self.model.stage_caps()
+        saturated = self.saturated()
+
+        # grow path: hottest resizable under-cap stage, keyed preferred —
+        # in a mux'd plan the sid-partitioned stage is where fan-out lands.
+        grow_cands = [
+            i for i in range(len(widths))
+            if resizable[i] and widths[i] < caps[i]
+        ]
+        target = None
+        if grow_cands:
+            keyed = [
+                i for i in grow_cands
+                if self.model.profiles[i].kind == "keyed"
+            ]
+            pool = keyed or grow_cands
+            target = max(pool, key=lambda i: (utils[i], snap.backlog[i]))
+        if target is not None and (utils[target] > self.grow_util or saturated):
+            self._shrink_streaks.clear()
+            self._grow_streaks[target] = self._grow_streaks.get(target, 0) + 1
+            if self._grow_streaks[target] < self.patience:
+                return None
+            proposal: List[Tuple[int, int]] = []
+            if self.budget - sum(widths) <= 0:
+                donors = [
+                    i for i in range(len(widths))
+                    if i != target and resizable[i] and widths[i] > 1
+                ]
+                if not donors:
+                    self._grow_streaks.pop(target, None)
+                    return None
+                donor = min(donors, key=lambda i: utils[i])
+                proposal.append((donor, widths[donor] - 1))
+            proposal.append((target, widths[target] + 1))
+            self._grow_streaks.clear()
+            self._cooldown_until = now + self.cooldown
+            self.proposals += 1
+            return proposal
+        self._grow_streaks.clear()
+
+        # shrink path: sustained trough only — idle utilization below the
+        # shrink threshold AND still below grow_util at the narrower width
+        # (hysteresis), with no queued pressure anywhere near the stage.
+        if saturated:
+            self._shrink_streaks.clear()
+            return None
+        victim = None
+        for i in sorted(range(len(widths)), key=lambda i: utils[i]):
+            if not resizable[i] or widths[i] <= 1:
+                continue
+            if snap.backlog[i] >= self.min_backlog:
+                continue
+            if (
+                utils[i] < self.shrink_util
+                and utils[i] * widths[i] / (widths[i] - 1) < self.grow_util
+            ):
+                victim = i
+                break
+        if victim is None:
+            self._shrink_streaks.clear()
+            return None
+        self._shrink_streaks[victim] = self._shrink_streaks.get(victim, 0) + 1
+        if self._shrink_streaks[victim] < self.patience:
+            return None
+        self._shrink_streaks.clear()
+        self._cooldown_until = now + self.cooldown
+        self.proposals += 1
+        return [(victim, widths[victim] - 1)]

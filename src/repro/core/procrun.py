@@ -100,7 +100,12 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .checkpoint import CheckpointStore, decode_barrier, encode_barrier
-from .costmodel import CostModel, OccupancyMonitor, default_budget
+from .costmodel import (
+    CostModel,
+    OccupancyMonitor,
+    TrafficMonitor,
+    default_budget,
+)
 from .faults import (
     DeadLetter, FaultPlan, HANG, InjectedFault, KILL, OP_ERROR, ROUTER_KILL,
     SPILL_DELAY, resolve_policies,
@@ -1101,6 +1106,13 @@ class ProcessRuntime:
         replan_interval: float = 0.25,
         replan_threshold: float = 0.55,
         replan_patience: int = 3,
+        traffic_elastic: Optional[bool] = None,  # None = on when elastic
+        traffic_interval: float = 0.5,
+        traffic_grow_util: float = 0.85,
+        traffic_shrink_util: float = 0.30,
+        traffic_patience: int = 2,
+        traffic_cooldown: float = 2.0,
+        resize_latency_budget: Optional[float] = None,  # p99 guard; None off
         stage_widths: Optional[Sequence[int]] = None,  # pin a PhysicalPlan's widths
         checkpoint_interval: int = 1024,  # serials per epoch; 0 disables
         stall_timeout: Optional[float] = None,  # hung-process detector; None off
@@ -1163,6 +1175,25 @@ class ProcessRuntime:
         self.replan_interval = replan_interval
         self.replan_threshold = replan_threshold
         self.replan_patience = replan_patience
+        # traffic-reactive elasticity needs the elastic machinery (stage
+        # headroom, quiesce/re-fork); an explicit True arms both.
+        if traffic_elastic is None:
+            self.traffic_elastic = self.elastic
+        else:
+            self.traffic_elastic = bool(traffic_elastic)
+            if self.traffic_elastic and elastic is False:
+                raise ValueError(
+                    "traffic_elastic=True requires elastic replanning "
+                    "(elastic must not be False)"
+                )
+            if self.traffic_elastic:
+                self.elastic = True
+        self.traffic_interval = traffic_interval
+        self.traffic_grow_util = traffic_grow_util
+        self.traffic_shrink_util = traffic_shrink_util
+        self.traffic_patience = traffic_patience
+        self.traffic_cooldown = traffic_cooldown
+        self.resize_latency_budget = resize_latency_budget
 
         self.node_specs = dict(nodes)
         self.edges = [tuple(e) for e in edges]
@@ -1264,10 +1295,17 @@ class ProcessRuntime:
 
         # elastic replanning state
         self._monitor: Optional[OccupancyMonitor] = None
+        self._traffic: Optional[TrafficMonitor] = None
         self._resizes: collections.deque = collections.deque()
         self._active_replan: Optional[dict] = None
         self._handoff: dict[tuple[int, int], bytes] = {}  # (stage, widx) -> blob
         self.replans = 0  # completed elastic replan events (instrumentation)
+        # resize-latency accounting (the p99-guard's evidence trail)
+        self.resize_stalls: List[float] = []  # begin->finish wall s, completed
+        self.resize_aborts = 0  # guard-triggered aborts (stall > budget)
+        self.resize_reverts = 0  # over-budget traffic resizes undone
+        self.grows = 0  # completed resizes that widened a stage
+        self.shrinks = 0  # completed resizes that narrowed a stage
 
     @classmethod
     def from_chain(cls, specs: Sequence[OpSpec], **kw) -> "ProcessRuntime":
@@ -1408,6 +1446,7 @@ class ProcessRuntime:
         )
         self._eof_seen = False
         self._monitor = None
+        self._traffic = None
         if self.elastic and any(p.resizable for p in self.stage_plans):
             self._monitor = OccupancyMonitor(
                 self.cost_model,
@@ -1416,6 +1455,17 @@ class ProcessRuntime:
                 occupancy_threshold=self.replan_threshold,
                 patience=self.replan_patience,
             )
+            if self.traffic_elastic:
+                # inert until a serving tier feeds it via observe_traffic()
+                self._traffic = TrafficMonitor(
+                    self.cost_model,
+                    self.worker_budget,
+                    interval=self.traffic_interval,
+                    grow_util=self.traffic_grow_util,
+                    shrink_util=self.traffic_shrink_util,
+                    patience=self.traffic_patience,
+                    cooldown=self.traffic_cooldown,
+                )
         self._resizes.clear()
         self._active_replan = None
         self._handoff = {}
@@ -1457,6 +1507,7 @@ class ProcessRuntime:
         self._router_conns = {}
         self._disp = None
         self._monitor = None
+        self._traffic = None
         self._active_replan = None
         self._resizes.clear()
         self._handoff = {}
@@ -1786,6 +1837,16 @@ class ProcessRuntime:
     # resume the feeder.  Order and loss-freedom are inherited from the crash
     # protocol: nothing is in flight across the boundary, and the re-forked
     # workers consume the same rings with peek → publish → advance.
+    def observe_traffic(self, signals: Dict) -> None:
+        """Feed a serving-tier load snapshot (``SessionMux.load_signals``
+        dict) to the traffic-reactive elasticity policy.
+
+        No-op when the policy is off (``traffic_elastic`` resolved False)
+        or the runtime has no resizable stage.  Must be called from the
+        supervisor-owning thread (the same one that pushes/services)."""
+        if self._traffic is not None:
+            self._traffic.ingest(signals)
+
     def _drive_elastic(self, now: float, src_done: bool) -> None:
         if self._active_replan is not None:
             self._step_replan(now, src_done)
@@ -1794,25 +1855,42 @@ class ProcessRuntime:
             if src_done:  # drain phase: a resize can no longer pay for itself
                 self._resizes.clear()
                 return
-            stage, new_w = self._resizes.popleft()
-            self._begin_replan(stage, new_w, now)
+            stage, new_w, origin = self._resizes.popleft()
+            self._begin_replan(stage, new_w, now, origin=origin)
             return
-        if self._monitor is None or src_done or not self._monitor.due(now):
+        if src_done:
+            return
+        mon_due = self._monitor is not None and self._monitor.due(now)
+        tm_due = self._traffic is not None and self._traffic.due(now)
+        if not (mon_due or tm_due):
             return
         drained = [x.progress()[0] for x in self._exchanges]
         backlog = [x.backlog_slots() for x in self._exchanges]
         widths = [p.workers for p in self.stage_plans]
         resizable = [p.resizable for p in self.stage_plans]
-        props = self._monitor.sample(now, drained, backlog, widths, resizable)
-        for stage, w in props or ():
+        props: List[Tuple[int, int, str]] = []
+        if mon_due:
+            for stage, w in self._monitor.sample(
+                now, drained, backlog, widths, resizable
+            ) or ():
+                props.append((stage, w, "occupancy"))
+        if tm_due and not props:  # skew proposals take the turn; traffic next
+            for stage, w in self._traffic.sample(
+                now, drained, backlog, widths, resizable
+            ) or ():
+                props.append((stage, w, "traffic"))
+        for stage, w, origin in props:
             plan = self.stage_plans[stage]
             w = min(max(w, 1), plan.max_workers)
             if w != plan.workers:
-                self._resizes.append((stage, w))
+                self._resizes.append((stage, w, origin))
 
-    def _begin_replan(self, stage: int, new_w: int, now: float) -> None:
+    def _begin_replan(
+        self, stage: int, new_w: int, now: float, origin: str = "occupancy"
+    ) -> None:
         rep = {
-            "stage": stage, "new_w": new_w,
+            "stage": stage, "new_w": new_w, "old_w":
+            self.stage_plans[stage].workers, "origin": origin, "t0": now,
             "deadline": now + 10.0, "boundary": None,
         }
         if stage == 0:  # the parent itself is the feeder
@@ -1836,6 +1914,22 @@ class ProcessRuntime:
         plan = self.stage_plans[stage]
         x = self._exchanges[stage]
         phase = rep["phase"]
+        budget = self.resize_latency_budget
+        if (
+            phase in ("flush", "pausing", "quiesce")
+            and budget is not None
+            and now - rep["t0"] > budget
+        ):
+            # p99 guard: the quiesce stall already exceeds the latency
+            # budget — abort pre-quiesce (nothing irreversible yet) and
+            # back the policy off so it is not immediately retried
+            self.resize_aborts += 1
+            if self._traffic is not None:
+                self._traffic.resize_result(
+                    now, stall_s=now - rep["t0"], aborted=True
+                )
+            self._abort_replan()
+            return
         if phase in ("flush", "pausing", "quiesce") and (
             src_done or now > rep["deadline"]
         ):
@@ -1914,6 +2008,23 @@ class ProcessRuntime:
                 else:
                     conn.send(("resume", new_w))
         self.replans += 1
+        if new_w > rep["old_w"]:
+            self.grows += 1
+        elif new_w < rep["old_w"]:
+            self.shrinks += 1
+        now = time.perf_counter()
+        stall = now - rep["t0"]
+        self.resize_stalls.append(stall)
+        budget = self.resize_latency_budget
+        over = budget is not None and stall > budget
+        if self._traffic is not None:
+            self._traffic.resize_result(now, stall_s=stall, over_budget=over)
+        if over and rep["origin"] == "traffic":
+            # p99 guard, undo path: the resize completed but its stall blew
+            # the budget — return to the prior width (the revert itself is
+            # never re-reverted) and leave the policy in extended cooldown
+            self.resize_reverts += 1
+            self._resizes.append((stage, rep["old_w"], "revert"))
         self._active_replan = None
 
     def _abort_replan(self) -> None:

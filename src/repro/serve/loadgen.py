@@ -93,25 +93,49 @@ def arrival_times(cfg: ArrivalConfig, n: int) -> List[float]:
             t += scale * rng.paretovariate(cfg.alpha)
             times.append(t)
     else:  # modulated (non-homogeneous) Poisson: bursty / diurnal
-        for _ in range(n):
-            t += rng.expovariate(_instant_rate(cfg, t))
-            times.append(t)
+        # Lewis-Shedler thinning: homogeneous candidates at the peak rate,
+        # each kept with probability rate(t)/peak.  Stepping by the local
+        # rate at the gap's *start* (the obvious shortcut) is badly biased
+        # once the trough's mean gap rivals the period: a single
+        # trough-drawn gap leaps whole bursts, so bursts are systematically
+        # under-sampled and the realized mean rate lands far below nominal.
+        peak = _peak_rate(cfg)
+        while len(times) < n:
+            t += rng.expovariate(peak)
+            if rng.random() * peak <= _instant_rate(cfg, t):
+                times.append(t)
     return times
+
+
+def _bursty_factors(cfg: ArrivalConfig) -> tuple:
+    """``(high, low)`` rate multipliers of the bursty square wave, scaled so
+    the wave's analytic mean is exactly ``cfg.rate`` even when the trough
+    floor (5% of base) binds because ``duty * factor > 1``."""
+    duty, factor = cfg.burst_duty, cfg.burst_factor
+    low = max(1.0 - duty * factor, 0.05) / (1.0 - duty)
+    norm = duty * factor + (1.0 - duty) * low
+    return factor / norm, low / norm
 
 
 def _instant_rate(cfg: ArrivalConfig, t: float) -> float:
     """Instantaneous rate of the modulated processes at offset ``t``."""
     if cfg.shape == "bursty":
-        # square wave normalized to the mean rate: duty of each period at
-        # factor x the base rate, the remainder at the (clamped) low rate
-        duty, factor = cfg.burst_duty, cfg.burst_factor
-        high = cfg.rate * factor
-        low = cfg.rate * max(1.0 - duty * factor, 0.05) / (1.0 - duty)
+        # square wave at the mean rate: duty of each period at ~factor x
+        # the base rate, the remainder at the (floored) low rate
+        high, low = _bursty_factors(cfg)
         phase = (t % cfg.period_s) / cfg.period_s
-        return high if phase < duty else low
+        return cfg.rate * (high if phase < cfg.burst_duty else low)
     # diurnal: +-80% sinusoidal swing over one period
     swing = 1.0 + 0.8 * math.sin(2.0 * math.pi * t / cfg.period_s)
     return max(cfg.rate * swing, cfg.rate * 0.05)
+
+
+def _peak_rate(cfg: ArrivalConfig) -> float:
+    """Upper bound on :func:`_instant_rate` (the thinning envelope)."""
+    if cfg.shape == "bursty":
+        high, low = _bursty_factors(cfg)
+        return cfg.rate * max(high, low)
+    return cfg.rate * 1.8  # diurnal peak of the +-80% swing
 
 
 def percentile(sorted_vals: List[float], q: float) -> float:
@@ -175,6 +199,7 @@ def run_open_loop(
     payload: Callable[[int, int], Any] = lambda sid, i: i,
     slow_consumers: Optional[Dict[int, float]] = None,
     drain_timeout: float = 120.0,
+    warmup: int = 0,
 ) -> LatencyReport:
     """Drive ``sessions`` concurrent sessions open-loop through ``mux``.
 
@@ -189,9 +214,21 @@ def run_open_loop(
     per-item sleep, injecting consumer-side stalls (the mux must confine
     the damage to that session).  Returns a :class:`LatencyReport` with a
     ``per_session`` breakdown (latency summaries per session index).
+
+    ``warmup`` discards each session's first ``warmup`` requests from the
+    measurement window: they are pushed on schedule (the server still sees
+    them) but excluded from the latency percentiles, and ``achieved_rate``
+    counts only the completions inside the steady-state window (opening
+    when the *last* session finishes its warmup prefix, closing at the
+    last completion overall).  Use it when probing steady-state capacity —
+    a cold start (fork, first plan, jit) otherwise deflates the probe's
+    achieved rate, while dividing all post-warmup completions by a
+    late-opening window would inflate it.
     """
     if sessions < 1 or requests < 1:
         raise ValueError("sessions and requests must be >= 1")
+    if not (0 <= warmup < requests):
+        raise ValueError("warmup must be in [0, requests)")
     slow = dict(slow_consumers or {})
     handles = [mux.open() for _ in range(sessions)]
     # per-session schedules, decorrelated by seed; one global merged heap
@@ -265,18 +302,33 @@ def run_open_loop(
                 f"session index {idx}: {len(done)} outputs for {requests} "
                 "requests — run_open_loop needs a selectivity-1 pipeline"
             )
-        lats = [done[k] - sched_abs[idx][k] for k in range(requests)]
+        lats = [done[k] - sched_abs[idx][k] for k in range(warmup, requests)]
         per_session[idx] = _summarize(lats)
         latencies.extend(lats)
 
     latencies.sort()
     total = sessions * requests
+    if warmup:
+        # steady-state window: opens once *every* session is past its
+        # warmup prefix, closes at the last completion — and only the
+        # completions inside it count, so uneven per-session progress
+        # cannot inflate the rate (completions before the window opened
+        # must not be divided by the window they didn't land in)
+        win_start = max(completions[idx][warmup - 1] for idx in range(sessions))
+        win_end = max(completions[idx][-1] for idx in range(sessions))
+        window = win_end - win_start
+        measured = sum(
+            1 for done in completions for t in done if t > win_start
+        )
+    else:
+        window = duration
+        measured = total
     return LatencyReport(
         requests=total,
         completed=sum(len(c) for c in completions),
         duration_s=duration,
         offered_rate=arrivals.rate * sessions,
-        achieved_rate=(total / duration) if duration > 0 else float("nan"),
+        achieved_rate=(measured / window) if window > 0 else float("nan"),
         p50=percentile(latencies, 50.0),
         p99=percentile(latencies, 99.0),
         p999=percentile(latencies, 99.9),

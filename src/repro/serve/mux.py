@@ -88,7 +88,11 @@ class MuxConfig:
     — shared egress never blocks on one reader); ``quantum`` is the
     deficit-round-robin base quantum (tuples per scheduling round for
     weight 1.0); ``state_partitions`` is the partition count given to
-    stateful operators converted to session-keyed partitioned form."""
+    stateful operators converted to session-keyed partitioned form;
+    ``load_signal_interval`` is how often (seconds) the pump exports a
+    :meth:`SessionMux.load_signals` snapshot to the inner runtime via
+    ``Session.offer_load`` — the feed for traffic-reactive elastic
+    replanning (docs/serving.md)."""
 
     max_sessions: int = 64
     ingress_depth: int = 1024
@@ -96,6 +100,7 @@ class MuxConfig:
     quantum: int = 16
     state_partitions: int = 8
     push_timeout: float = 30.0
+    load_signal_interval: float = 0.25
 
     def validate(self) -> "MuxConfig":
         """Range-check every knob; returns self for chaining."""
@@ -109,6 +114,8 @@ class MuxConfig:
             raise ValueError("quantum must be >= 1")
         if self.state_partitions < 1:
             raise ValueError("state_partitions must be >= 1")
+        if self.load_signal_interval <= 0:
+            raise ValueError("load_signal_interval must be > 0")
         return self
 
 
@@ -437,6 +444,7 @@ class SessionMux:
         self._pump_error: Optional[BaseException] = None
         self._opened = 0
         self._undeliverable = 0
+        self._admitted_total = 0  # monotonic; pump thread only
         self._pending_tokens: collections.deque = collections.deque()
         self.report = None
         self._pump = threading.Thread(
@@ -484,7 +492,32 @@ class SessionMux:
             "opened_total": self._opened,
             "undeliverable": self._undeliverable,
             "max_sessions": self.config.max_sessions,
+            "traffic": self.load_signals(),
             "inner": inner,
+        }
+
+    def load_signals(self) -> dict:
+        """Aggregate serving-tier load snapshot for elastic replanning.
+
+        Keys: ``ts`` (perf_counter), ``sessions`` (open count),
+        ``admitted_total`` (monotonic tuples admitted into the runtime),
+        ``ingress_queued`` (tuples parked in DRR ingress queues — admission
+        pressure the runtime is not absorbing), ``backpressured`` (sessions
+        paused on a full result buffer), ``undeliverable``.  The pump feeds
+        this to ``Session.offer_load`` every ``load_signal_interval``
+        seconds; the process backend's :class:`~repro.core.TrafficMonitor`
+        turns it into grow/shrink proposals."""
+        cfg = self.config
+        sessions = list(self._sessions.values())
+        return {
+            "ts": time.perf_counter(),
+            "sessions": len(sessions),
+            "admitted_total": self._admitted_total,
+            "ingress_queued": sum(len(s._ingress) for s in sessions),
+            "backpressured": sum(
+                1 for s in sessions if len(s._results) >= cfg.result_budget
+            ),
+            "undeliverable": self._undeliverable,
         }
 
     def close(self, drain_timeout: float = 60.0):
@@ -531,9 +564,27 @@ class SessionMux:
     def _pump_loop(self) -> None:
         try:
             idle_spin = 0
+            # duck-typed: the inner session exports load signals to the
+            # supervisor when it can (process backend); fakes/thread
+            # sessions without the hook are simply not fed
+            offer = getattr(self._inner, "offer_load", None)
+            crank = getattr(self._inner, "service_once", None)
+            signal_at = 0.0
             while not self._closed:
+                if offer is not None:
+                    now = time.perf_counter()
+                    if now >= signal_at:
+                        signal_at = now + self.config.load_signal_interval
+                        offer(self.load_signals())
                 moved = self._pump_ingress()
                 moved |= self._pump_egress()
+                if crank is not None:
+                    # crank the backend every turn: the process backend's
+                    # single-threaded supervisor must not ration its
+                    # progress on try_push/poll side effects while the
+                    # pump is busy moving tuples (paced traffic would
+                    # otherwise run far below flood capacity)
+                    moved |= crank()
                 if moved:
                     idle_spin = 0
                 else:
@@ -574,12 +625,16 @@ class SessionMux:
                             self._pending_tokens.append(session.sid)
                             session.admitted += 1  # token slot: queue once
                         break
-                    session._deficit = 0.0
+                    # idle turn: keep the banked credit (the accrual cap
+                    # above already bounds it at two rounds) — a briefly
+                    # paused high-weight session must not forfeit its
+                    # earned share, exactly like a backpressured one
                     break
                 if not self._inner.try_push((session.sid, value)):
                     session._ingress.appendleft(value)  # runtime is full
                     return moved
                 session.admitted += 1
+                self._admitted_total += 1
                 session._deficit -= 1.0
                 moved = True
         while self._pending_tokens:

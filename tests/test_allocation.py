@@ -25,6 +25,7 @@ from repro.core import (
     OpSpec,
     OccupancyMonitor,
     ProcessRuntime,
+    TrafficMonitor,
     proportional_allocation,
     resolve_workers,
     run_pipeline,
@@ -289,6 +290,171 @@ def test_occupancy_monitor_ignores_unaddressable_drift():
             resizable=[True, True, False],
         )
         assert not proposal
+
+
+def test_occupancy_monitor_survives_alternating_hot_stage():
+    """Regression (per-stage patience streaks): two stages alternating as
+    the backlog leader must each accumulate their own qualifying samples.
+    The pre-fix monitor kept one shared streak keyed to 'the' hot stage and
+    reset it on every leader change, so an oscillating hot spot never
+    reached ``patience`` and the pipeline never replanned."""
+    specs, priors, _hot = _shape_interior_hot()
+    nodes, edges = _chain_nodes(specs)
+    plans, _, _ = _plan_stages(nodes, edges, 1, None)
+    model = CostModel(plans, priors)
+    mon = OccupancyMonitor(model, budget=4, interval=0.0, patience=2)
+    widths, resizable = [1, 1], [True, True]
+    proposal = None
+    fired_at = None
+    for tick in range(1, 7):
+        # leader flips every sample: 0, 1, 0, 1, ...
+        backlog = [70, 30] if tick % 2 else [30, 70]
+        proposal = mon.sample(
+            now=float(tick),
+            drained=[tick * 100, tick * 80],
+            backlog=backlog,
+            widths=widths,
+            resizable=resizable,
+        )
+        if proposal:
+            fired_at = tick
+            break
+    assert proposal, (
+        "alternating hot stages starved the shared patience streak: "
+        "the monitor never proposed a replan"
+    )
+    # the leader at the firing tick reached its own 2-sample streak
+    hot = 0 if fired_at % 2 else 1
+    assert dict(proposal).get(hot) == 2, (proposal, fired_at)
+
+
+# ----------------------------------------------------------- traffic monitor
+def _traffic_fixture(cost_us=1000.0, **kw):
+    """A pre(stateless)+hot(keyed) two-stage model with a known per-tuple
+    cost, so ``util = rate * cost / (width * 1e6)`` is easy to dial."""
+    specs = [
+        OpSpec("pre", "stateless", _double, cost_us=2),
+        OpSpec("hot", "partitioned", _ksum, key_fn=_mod11,
+               num_partitions=22, init_state=_zero, cost_us=cost_us),
+    ]
+    nodes, edges = _chain_nodes(specs)
+    plans, _, _ = _plan_stages(nodes, edges, 1, None)
+    model = CostModel(plans, {"pre": 2, "hot": cost_us})
+    kw.setdefault("interval", 0.0)
+    return TrafficMonitor(model, budget=4, **kw)
+
+
+def _feed_rate(mon, rate, sessions=6, queued=0, t0=0.0):
+    """Two load snapshots that establish an offered-rate EWMA of ``rate``."""
+    mon.ingest({"ts": t0, "sessions": sessions, "admitted_total": 0,
+                "ingress_queued": queued, "backpressured": 0})
+    mon.ingest({"ts": t0 + 1.0, "sessions": sessions,
+                "admitted_total": int(rate), "ingress_queued": queued,
+                "backpressured": 0})
+
+
+def test_traffic_monitor_inert_until_rate_established():
+    mon = _traffic_fixture(patience=1)
+    # no ingest at all: the policy must not act on a zero-information rate
+    assert mon.sample(1.0, [10, 10], [0, 0], [1, 1], [True, True]) is None
+    mon.ingest({"ts": 0.0, "sessions": 6, "admitted_total": 0,
+                "ingress_queued": 0, "backpressured": 0})
+    # one snapshot: still no delta to derive a rate from
+    assert mon.sample(2.0, [20, 20], [0, 0], [1, 1], [True, True]) is None
+
+
+def test_traffic_monitor_grows_keyed_stage_after_patience():
+    mon = _traffic_fixture(patience=2)
+    _feed_rate(mon, 900)  # util = 900 * 1000us / 1e6 = 0.9 > grow 0.85
+    assert mon.sample(2.0, [50, 50], [0, 0], [1, 1], [True, True]) is None
+    prop = mon.sample(3.0, [50, 50], [0, 0], [1, 1], [True, True])
+    assert prop == [(1, 2)], prop  # the keyed stage, one step wider
+    assert mon.proposals == 1
+
+
+def test_traffic_monitor_saturation_overrides_cost_model():
+    """Admission pressure (deep mux ingress queues) must force a grow even
+    when the cost model says the stages are idle — the measured-cost surface
+    can be stale or wrong, the queue is ground truth."""
+    mon = _traffic_fixture(patience=1)
+    # rate ~20/s: util 0.02, nowhere near grow_util...
+    _feed_rate(mon, 20, sessions=6, queued=40)  # ...but 40 >= max(16, 12)
+    assert mon.saturated()
+    prop = mon.sample(2.0, [10, 10], [0, 8], [1, 1], [True, True])
+    assert prop == [(1, 2)], prop
+
+
+def test_traffic_monitor_hysteresis_blocks_marginal_shrink():
+    """A shrink must also clear the *grow* threshold at the narrower width
+    (util * w / (w-1) < grow_util) — otherwise the very next sample would
+    qualify the stage for re-growth and widths oscillate."""
+    mon = _traffic_fixture(patience=1, grow_util=0.85, shrink_util=0.5)
+    _feed_rate(mon, 900)  # width 2: util 0.45 < shrink 0.5 ...
+    # ... but at width 1 it would be 0.9 > grow 0.85: blocked
+    assert mon.sample(2.0, [50, 50], [0, 0], [1, 2], [True, True]) is None
+    assert mon.sample(3.0, [50, 50], [0, 0], [1, 2], [True, True]) is None
+    # deepen the trough: width 2 util 0.35, width 1 would be 0.7 < 0.85
+    _feed_rate(mon, 700, t0=10.0)
+    mon._rate = 700.0  # EWMA converges slowly; pin for determinism
+    prop = mon.sample(4.0, [50, 50], [0, 0], [1, 2], [True, True])
+    assert prop == [(1, 1)], prop
+
+
+def test_traffic_monitor_shrink_needs_drained_backlog():
+    mon = _traffic_fixture(patience=1)
+    _feed_rate(mon, 50)  # deep trough by rate...
+    # ...but the stage still holds queued work: no shrink while draining
+    assert mon.sample(
+        2.0, [50, 50], [0, 32], [1, 2], [True, True]
+    ) is None
+    prop = mon.sample(3.0, [60, 60], [0, 0], [1, 2], [True, True])
+    assert prop == [(1, 1)], prop
+
+
+def test_traffic_monitor_cooldown_and_abort_backoff():
+    mon = _traffic_fixture(patience=1, cooldown=2.0)
+    _feed_rate(mon, 900)
+    assert mon.sample(2.0, [50, 50], [0, 0], [1, 1], [True, True]) == [(1, 2)]
+    # inside the cooldown window: the same pressure must not re-fire
+    assert mon.sample(3.0, [60, 60], [0, 0], [1, 1], [True, True]) is None
+    assert mon.sample(4.5, [70, 70], [0, 0], [1, 1], [True, True]) == [(1, 2)]
+    # an aborted resize backs off 4x the cooldown from its report time
+    mon.resize_result(4.5, aborted=True)
+    assert mon.backoffs == 1
+    assert mon.sample(11.0, [80, 80], [0, 0], [1, 1], [True, True]) is None
+    assert mon.sample(13.0, [90, 90], [0, 0], [1, 1], [True, True]) == [(1, 2)]
+
+
+def test_traffic_monitor_funds_grow_by_shrinking_idle_stage():
+    """With no spare budget the grow proposal must lead with a donor shrink
+    (shrink listed first so the supervisor frees budget before spending)."""
+    mon = _traffic_fixture(patience=1)
+    mon.budget = 3
+    _feed_rate(mon, 1700)
+    # widths [2, 1] exhaust the budget; keyed stage 1 is drowning (util
+    # 1.7), stateless stage 0 is near-idle -> donate one of its workers
+    prop = mon.sample(2.0, [50, 50], [0, 24], [2, 1], [True, True])
+    assert prop == [(0, 1), (1, 2)], prop
+
+
+def test_traffic_monitor_rejects_empty_hysteresis_band():
+    with pytest.raises(ValueError):
+        _traffic_fixture(grow_util=0.5, shrink_util=0.5)
+    with pytest.raises(ValueError):
+        _traffic_fixture(grow_util=0.4, shrink_util=0.6)
+
+
+def test_traffic_monitor_rate_counts_unabsorbed_ingress():
+    """Offered load the runtime failed to admit (tuples parked in the mux's
+    DRR queues) must still count toward the rate EWMA — measuring only the
+    admitted delta would read *harder* saturation as *lower* load."""
+    mon = _traffic_fixture(patience=1)
+    mon.ingest({"ts": 0.0, "sessions": 2, "admitted_total": 0,
+                "ingress_queued": 0, "backpressured": 0})
+    # 100 admitted + queue grew by 400: offered was 500/s, not 100/s
+    mon.ingest({"ts": 1.0, "sessions": 2, "admitted_total": 100,
+                "ingress_queued": 400, "backpressured": 0})
+    assert mon.rate == pytest.approx(500.0)
 
 
 # ---------------------------------------------------------- elastic replanning

@@ -232,6 +232,46 @@ def test_checkpoint_geometry_is_verified():
     assert rules == {"PV407"}
 
 
+def test_traffic_policy_geometry_is_verified():
+    """PV408: hysteresis band, p99-guard sign, and a resizable stage for an
+    explicitly armed policy.  ProcessOptions.validate blocks these at
+    construction, so the violations are injected into built plans — the
+    deserialized-and-edited surface the catalog exists for."""
+    def _plan(specs, **popts):
+        eng = Engine(EngineConfig(
+            backend="process", num_workers=2,
+            process=ProcessOptions(worker_budget=2, **popts),
+        ))
+        return eng.plan(specs)
+
+    keyed = [
+        OpSpec("hot", "partitioned", _kcount, key_fn=_mod8, num_partitions=4,
+               init_state=_zero, cost_us=8),
+    ]
+    # engine-built with the policy armed: clean
+    plan = _plan(keyed, traffic_elastic=True)
+    assert plan.verify(raise_on_violation=False) == []
+    # empty hysteresis band: shrink threshold at/above grow
+    plan = _plan(keyed)
+    plan.config.process.traffic_shrink_util = plan.config.process.traffic_grow_util
+    rules = {v.rule for v in plan.verify(raise_on_violation=False)}
+    assert rules == {"PV408"}
+    # non-positive p99-guard budget
+    plan = _plan(keyed)
+    plan.config.process.resize_latency_budget = -0.5
+    rules = {v.rule for v in plan.verify(raise_on_violation=False)}
+    assert rules == {"PV408"}
+    # armed policy with nothing it can ever act on: a stateful-only plan
+    # (width pinned at 1) leaves no non-stateful stage with headroom
+    plan = _plan([
+        OpSpec("acc", "stateful", _sf_sum, init_state=_zero, cost_us=2),
+    ])
+    assert plan.verify(raise_on_violation=False) == []  # unarmed: fine
+    plan.config.process.traffic_elastic = True
+    rules = {v.rule for v in plan.verify(raise_on_violation=False)}
+    assert rules == {"PV408"}
+
+
 # ---------------------------------------------------------------------- CLI
 def test_cli_rules_lists_catalog(capsys):
     assert analysis_main(["--rules"]) == 0

@@ -503,3 +503,90 @@ def test_mux_session_churn_survives_keyed_worker_kill():
             "injected keyed-worker kill never fired"
         )
     assert _shm_segments() == before
+
+
+@pytest.mark.timeout(180)
+def test_traffic_resize_survives_keyed_worker_kill_and_retired_sessions():
+    """Chaos: SIGKILL a sid-partitioned worker while *traffic-triggered*
+    elasticity is live-resizing that same stage, with session churn across
+    the window (one session retires mid-run, another is admitted into the
+    freed slot).  The combination must stay exact: per-session running
+    sums survive checkpoint restore + replay at whatever width the policy
+    chose, the retired session's slot is reusable, and any late replay
+    output of a retired sid is counted undeliverable — never delivered to
+    the wrong session, never a crash."""
+    from repro.core.api import Engine, EngineConfig, ProcessOptions
+    from repro.serve import MuxConfig, SessionMux
+
+    before = _shm_segments()
+    plan = FaultPlan(specs=[
+        # worker 0 always exists, so the kill cannot go moot if it fires
+        # before the first grow; serial 600 of ~1900 lands after the
+        # saturation-triggered resize in practice
+        FaultSpec(kind=KILL, stage=1, worker=0, serial=600),
+    ], seed=23)
+    eng = Engine(EngineConfig(
+        backend="process", num_workers=1, batch_size=8,
+        process=ProcessOptions(
+            worker_budget=3, checkpoint_interval=64, io_batch=8,
+            replan_interval=600.0,  # occupancy monitor parked: traffic only
+            traffic_elastic=True, traffic_interval=0.05,
+            traffic_grow_util=0.65, traffic_shrink_util=0.30,
+            traffic_patience=1, traffic_cooldown=0.2,
+        ),
+        faults=FaultOptions(plan=plan),
+    ))
+    chain = [
+        OpSpec("double", "stateless", _double),
+        OpSpec("acc", "stateful", _accsum),  # mux makes this sid-partitioned
+    ]
+    inputs = {
+        name: [(ord(name) * 41 + j) % 503 + 1 for j in range(n)]
+        for name, n in (("a", 400), ("b", 700), ("c", 500), ("d", 300))
+    }
+
+    def oracle(vals):
+        out, s = [], 0
+        for v in vals:
+            s += 2 * v
+            out.append(s)
+        return out
+
+    mux = SessionMux(eng, chain, config=MuxConfig(
+        max_sessions=3, state_partitions=4, load_signal_interval=0.02,
+    ))
+    with mux:
+        handles = {k: mux.open() for k in "abc"}
+        # flood the DRR queues: admission pressure trips the policy's
+        # saturation override, so a grow fires early in the stream and the
+        # serial-600 kill lands in/around the resize window
+        cursors = dict.fromkeys("abc", 0)
+        while any(cursors[k] < len(inputs[k]) for k in "abc"):
+            for k in "abc":
+                lo = cursors[k]
+                if lo >= len(inputs[k]):
+                    continue
+                handles[k].push(inputs[k][lo:lo + 80])
+                cursors[k] = lo + 80
+        # churn across the crash/resize window: retire a, admit d
+        want_a = oracle(inputs["a"])
+        got_a = list(handles["a"].results(max_items=len(want_a), timeout=90))
+        assert got_a == want_a
+        handles["a"].close()
+        assert handles["a"].poll() == []
+        handles["d"] = mux.open()
+        handles["d"].push(inputs["d"])
+        for k in "bcd":
+            want = oracle(inputs[k])
+            got = list(handles[k].results(max_items=len(want), timeout=90))
+            assert got == want, f"session {k}: egress diverged"
+            handles[k].close()
+            assert handles[k].poll() == []
+        rt = mux._inner._rt
+        assert rt.restarts >= 1 and rt.recoveries >= 1, (
+            "injected keyed-worker kill never fired"
+        )
+        assert rt.grows >= 1, "traffic policy never grew the keyed stage"
+        stats = mux.stats()
+        assert stats["undeliverable"] >= 0  # counted, not delivered/crashed
+    assert _shm_segments() == before

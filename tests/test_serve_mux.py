@@ -8,6 +8,7 @@ starvation snapshot's per-session backlog stats.
 """
 import collections
 import random
+import threading
 import time
 
 import pytest
@@ -229,6 +230,115 @@ def test_deficit_round_robin_respects_weights():
         mux._pump.join(timeout=5)
 
 
+@pytest.mark.timeout(60)
+def test_deficit_round_robin_banks_credit_across_pause_resume():
+    """Regression (empty-ingress DRR turn): a briefly idle session must
+    keep its banked deficit — capped at two rounds' worth — so a paused
+    high-weight session resumes at its earned share.  The pre-fix pump
+    zeroed ``_deficit`` whenever a session's ingress came up empty, so a
+    weight-3 session that paused for even one scheduling round restarted
+    from zero credit and was admitted at the same trickle as a fresh
+    session (12 tuples in the resume round instead of the banked 24)."""
+    inner = _FakeInner()
+    inner.released = True  # runtime accepts from the start
+    mux = SessionMux(
+        _FakeEngine(inner), [_ZOO["double"]()],
+        config=MuxConfig(max_sessions=2, quantum=4, ingress_depth=512),
+    )
+    try:
+        a = mux.open(weight=1.0)
+        b = mux.open(weight=3.0)
+        # stop the pump thread: the test drives DRR rounds by hand so the
+        # round structure (accrual -> admit -> idle) is deterministic.
+        # (_closed also gates the client push surface, so ingress is fed
+        # through the queues directly below.)
+        mux._closed = True
+        mux._pump.join(timeout=5)
+        a._deficit = b._deficit = 0.0  # clear accrual from pump idle turns
+        a._ingress.extend(range(100))
+        a.pushed += 100
+        # rounds 1-3: b idle (paused client), a streaming.  b accrues
+        # quantum*weight = 12 credit per round, capped at two rounds (24);
+        # the cap must hold — an idle session can't bank unboundedly.
+        for _ in range(3):
+            mux._pump_ingress()
+        assert b._deficit == 24.0, b._deficit  # banked, capped (pre-fix: 0.0)
+        assert a.admitted == 12  # 3 rounds x quantum 4, unaffected
+        # resume: b pushes a burst; the next single round must spend the
+        # banked credit plus this round's accrual, already capped at 24
+        b._ingress.extend(range(1000, 1060))
+        b.pushed += 60
+        before = len(inner.accepted)
+        mux._pump_ingress()
+        admitted = collections.Counter(
+            sid for sid, _v in inner.accepted[before:]
+        )
+        assert admitted[b.sid] == 24, admitted  # pre-fix: 12
+        assert admitted[a.sid] == 4  # a's steady share keeps flowing
+    finally:
+        mux._closed = True
+        if mux._pump.is_alive():
+            mux._pump.join(timeout=5)
+
+
+@pytest.mark.timeout(60)
+def test_late_output_of_retired_session_counted_undeliverable():
+    """A retired session's late outputs (crash-replay overlap, or tuples
+    surfacing while an elastic resize drains the sid-partitioned stage)
+    must be counted ``undeliverable`` — never delivered to another
+    session, never a KeyError in the pump."""
+    from repro.serve.mux import _FlushToken
+
+    class _EchoInner(_FakeInner):
+        """Accepts pushes and lets the test script the egress stream."""
+
+        def __init__(self):
+            super().__init__()
+            self.released = True
+            self.out = []
+
+        def poll(self, max_items=None):
+            out, self.out = self.out, []
+            return out
+
+    inner = _EchoInner()
+    mux = SessionMux(
+        _FakeEngine(inner), [_ZOO["double"]()],
+        config=MuxConfig(max_sessions=2),
+    )
+    try:
+        a = mux.open()
+        b = mux.open()
+        mux._closed = True  # stop the pump; drive the demux loop by hand
+        mux._pump.join(timeout=5)
+        # retire a through the real drain protocol: closing + empty
+        # ingress queues its flush token, the token's egress retires it
+        a._closing = True
+        mux._pump_ingress()
+        assert any(isinstance(x, _FlushToken) for x in inner.accepted)
+        inner.out = [_FlushToken(a.sid)]
+        mux._pump_egress()
+        assert a._drained.is_set()
+        assert a.sid in mux._retired
+        # late outputs of the retired sid arrive interleaved with b's
+        inner.out = [(a.sid, 111), (b.sid, 7), (a.sid, 222)]
+        mux._pump_egress()
+        assert mux._undeliverable == 2
+        assert list(b._results) == [7]  # b's stream untouched
+        assert a.poll() == []  # nothing leaked into the retired session
+        stats = mux.stats()
+        assert stats["undeliverable"] == 2
+        assert stats["traffic"]["undeliverable"] == 2
+        # a duplicate flush token after retirement is idempotent
+        inner.out = [_FlushToken(a.sid)]
+        mux._pump_egress()
+        assert mux._undeliverable == 2
+    finally:
+        mux._closed = True
+        if mux._pump.is_alive():
+            mux._pump.join(timeout=5)
+
+
 @pytest.mark.timeout(120)
 def test_slow_consumer_does_not_stall_other_sessions():
     """A consumer that never reads must not delay another session's
@@ -356,6 +466,102 @@ def test_arrival_shapes_hit_requested_mean_rate():
         arrival_times(ArrivalConfig(shape="pareto", alpha=0.9), 1)
     with pytest.raises(ValueError):
         arrival_times(ArrivalConfig(shape="bursty", burst_duty=1.5), 1)
+
+
+def test_modulated_arrivals_unbiased_when_trough_gap_rivals_period():
+    """Regression (Lewis-Shedler thinning): at low nominal rates the old
+    generator stepped by the local rate at each gap's *start*, so one
+    trough-drawn gap (mean ~ 1/low_rate, comparable to the whole period)
+    leapt entire bursts and the realized mean rate landed at a fraction of
+    nominal (~0.23x for these parameters).  Thinned sampling must realize
+    the nominal mean within sampling noise for both modulated shapes."""
+    for cfg in (
+        ArrivalConfig(shape="bursty", rate=18.0, burst_factor=4.0,
+                      burst_duty=0.35, period_s=1.0, seed=11),
+        ArrivalConfig(shape="diurnal", rate=10.0, period_s=2.0, seed=11),
+    ):
+        times = arrival_times(cfg, 400)
+        realized = 400 / times[-1]
+        assert 0.75 <= realized / cfg.rate <= 1.33, (cfg.shape, realized)
+        assert all(b >= a for a, b in zip(times, times[1:]))
+    # the bursty square wave's analytic mean must stay pinned to cfg.rate
+    # even when the trough floor binds (duty * factor > 1)
+    from repro.serve.loadgen import _bursty_factors
+    for duty, factor in ((0.2, 8.0), (0.35, 4.0), (0.5, 3.0), (0.225, 4.0)):
+        cfg = ArrivalConfig(shape="bursty", burst_duty=duty,
+                            burst_factor=factor)
+        high, low = _bursty_factors(cfg)
+        mean = duty * high + (1.0 - duty) * low
+        assert mean == pytest.approx(1.0), (duty, factor, mean)
+        assert high > 1.0 > low > 0.0
+
+
+class _PacedHandle:
+    """Fake session: ignores pushes, emits ``n`` completions at a fixed
+    ``pace`` once ``start`` is set — a deterministic server for exercising
+    run_open_loop's measurement windows without a real runtime."""
+
+    def __init__(self, sid, n, pace, start, done):
+        self.sid = sid
+        self._n, self._pace = n, pace
+        self._start, self._done = start, done
+
+    def try_push(self, value):
+        return True
+
+    def close(self, drain_timeout=None):
+        pass
+
+    def results(self, timeout=None):
+        self._start.wait(timeout)
+        for k in range(self._n):
+            time.sleep(self._pace)
+            yield k
+        self._done.set()
+
+
+class _PacedMux:
+    """Serves sessions *sequentially* (session 1 only starts once session 0
+    has drained) — the maximally uneven progress that inflates a naive
+    warmup-window rate."""
+
+    def __init__(self, n, pace):
+        first = threading.Event()
+        first.set()
+        self._events = [first]
+        self._n, self._pace = n, pace
+        self._opened = 0
+
+    def open(self, weight=1.0):
+        nxt = threading.Event()
+        h = _PacedHandle(self._opened, self._n, self._pace,
+                         self._events[-1], nxt)
+        self._events.append(nxt)
+        self._opened += 1
+        return h
+
+
+def test_warmup_rate_counts_only_steady_window_completions():
+    """Regression (serving probe warm-up): ``achieved_rate`` must divide
+    the completions *inside* the steady-state window by that window.  The
+    pre-fix probe had no warmup handling at all (cold-start ramp deflated
+    capacity), and the first cut divided every post-warmup completion by a
+    window that opens only when the slowest session exits warmup — with
+    uneven per-session progress that inflates the rate ~2x (here: two
+    sessions served back to back at exactly 200/s each)."""
+    n, pace = 60, 0.005
+    rep = run_open_loop(
+        _PacedMux(n, pace), sessions=2, requests=n, warmup=30,
+        arrivals=ArrivalConfig(shape="poisson", rate=1e6, seed=3),
+    )
+    # true service rate is 200/s whenever anything is being served; the
+    # naive all-completions/late-window quotient reads ~400/s
+    assert 140.0 < rep.achieved_rate < 280.0, rep.achieved_rate
+    # warmup requests are excluded from the percentile population
+    assert rep.per_session[0]["n"] == n - 30
+    with pytest.raises(ValueError):
+        run_open_loop(_PacedMux(n, pace), sessions=1, requests=10,
+                      warmup=10, arrivals=ArrivalConfig(rate=1e6))
 
 
 def test_percentile_nearest_rank():
