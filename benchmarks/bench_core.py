@@ -32,6 +32,19 @@ CPU-bound synthetic queries (pure-Python compute stages, GIL-bound) through:
     rounds, throughput aggregated per config) so the ``auto_vs_flat_process``
     ratio cancels host-speed drift on small/noisy boxes.
 
+  - columnar_device (SL widen -> two device affine stages, NumPy reference
+    kernel): the SAME chain with ``columnar=False`` (pickled units; the
+    device workers convert tuples to columns serially) vs ``columnar=True``
+    (TAG_COLBLOCK spans end-to-end: parallel block encode upstream,
+    zero-copy device ingest, block pass-through between device stages).
+    Measured INTERLEAVED like skewed_stages so the
+    ``columnar_vs_pickle_process`` ratio cancels host-speed drift (still
+    budget ~±20% run-to-run on shared vCPUs — see docs/columnar.md).
+  - device_offload (widen -> one device stage on the jax/pallas kernel,
+    columnar ingest): the offload smoke row — proves the pallas dispatch
+    path end-to-end and tracks its throughput; falls back to the NumPy
+    reference kernel (and says so in the row) when jax is absent.
+
   - serving / elastic_serving (open-loop multiplexed sessions): the serving
     row tracks coordinated-omission-free tail latency at 50% of probed
     capacity; the elastic_serving row replays a bursty trace against static
@@ -75,11 +88,53 @@ HOT_SPIN = 1200  # keyed hot spot: ~96 µs/tuple in the partitioned op alone
 SKEW_HOT = 10000  # skewed_stages hot stage: heavy per-tuple compute so the
 SKEW_COLD = 30  # allocation effect dominates exchange/plumbing overhead
 
+COL_WIDTH = 12  # i8 columns per row on the columnar rows (96-byte payload)
+COL_BATCH = 256  # micro-batch = device batch on the columnar A/B: units big
+#                  enough that codec cost, not per-unit exchange plumbing,
+#                  is what the pair contrasts (at batch 32 both sides mostly
+#                  measure the router and the ratio collapses to ~1)
+
+
+def _col_widen(v):
+    # intentionally cheap widening: the columnar rows measure the *wire*
+    # (pickled units vs TAG_COLBLOCK spans), so per-tuple compute stays
+    # negligible next to codec + exchange costs
+    return [(v,) * COL_WIDTH]
+
+
+def _columnar_device_chain(backend: str, kernel: str, ndev: int = 2):
+    from repro.columnar import Schema, device_op
+    from repro.core.operators import OpSpec
+
+    schema = Schema.of(*(["i8"] * COL_WIDTH))
+    ops = [OpSpec("widen", "stateless", _col_widen, cost_us=1.0)]
+    for i, (a, b) in zip(range(ndev), ((3, -1), (1, 5))):
+        ops.append(device_op(
+            f"dev{i}", kernel, schema, params={"a": a, "b": b},
+            backend=backend, cost_us=2.0,
+        ))
+    return ops
+
+
+def _offload_backend():
+    """(backend, kernel) for the device_offload row: pallas when jax is
+    importable, the NumPy reference otherwise (the row records which)."""
+    from repro.columnar import have_jax
+
+    if have_jax():
+        return "jax", "affine_pallas"
+    return "numpy", "affine"
+
+
 WORKLOADS = {
     "cpu_chain": lambda: cpu_bound_chain(stages=STAGES, spin=SPIN),
     "keyed_hotspot": lambda: keyed_hotspot_chain(spin_edge=30, spin_hot=HOT_SPIN),
     "skewed_stages": lambda: skewed_stage_chain(
         spin_hot=SKEW_HOT, spin_cold=SKEW_COLD
+    ),
+    "columnar_device": lambda: _columnar_device_chain("numpy", "affine"),
+    "device_offload": lambda: _columnar_device_chain(
+        *_offload_backend(), ndev=1
     ),
 }
 
@@ -134,6 +189,10 @@ def _run_once(cfg: dict, n: int, workers: int):
         kw["parent_idle_cap"] = cfg["parent_idle_cap"]
     if cfg.get("workers") == "auto" and "worker_budget" in cfg:
         kw["worker_budget"] = cfg["worker_budget"]
+    for key in ("columnar", "device_batch", "device_backend",
+                "device_inflight", "max_inflight", "reorder_size"):
+        if key in cfg:
+            kw[key] = cfg[key]
     return engine_run(WORKLOADS[cfg["workload"]](), range(n), **kw)
 
 
@@ -498,6 +557,73 @@ def _run_ab_configs(seconds: float, workers: int):
     return rows
 
 
+def _columnar_ab_configs():
+    base = dict(
+        workload="columnar_device", backend="process", batch_size=COL_BATCH,
+        workers=2, device_batch=COL_BATCH, device_backend="numpy",
+        max_inflight=32, reorder_size=1024,
+    )
+    return (dict(base, columnar=False), dict(base, columnar=True))
+
+
+def _run_columnar_ab(seconds: float, workers: int):
+    """The tentpole wire A/B: pickled units vs TAG_COLBLOCK spans through
+    the same widen -> device -> device chain, interleaved over
+    ``AB_ROUNDS`` so both sides sample the same host-speed regime.  Even
+    interleaved, budget ~±20% ratio drift run-to-run on shared vCPUs."""
+    pickle_cfg, col_cfg = _columnar_ab_configs()
+    probe_n = 4000
+    _, probe = _run_once(pickle_cfg, probe_n, workers)
+    per_round = max(int(probe.throughput * seconds / AB_ROUNDS), probe_n)
+    agg = {id(pickle_cfg): [0, 0.0, None], id(col_cfg): [0, 0.0, None]}
+    for _ in range(AB_ROUNDS):
+        for cfg in (pickle_cfg, col_cfg):
+            pipe, report = _run_once(cfg, per_round, workers)
+            slot = agg[id(cfg)]
+            slot[0] += report.tuples_in
+            slot[1] += report.wall_time
+            slot[2] = (pipe, report)
+    rows = []
+    for cfg in (pickle_cfg, col_cfg):
+        tuples, wall, (pipe, report) = agg[id(cfg)]
+        rows.append({
+            "workload": cfg["workload"],
+            "backend": cfg["backend"],
+            "batch_size": cfg["batch_size"],
+            "stages": getattr(pipe, "num_stages", None),
+            "workers": cfg["workers"],
+            "columnar": cfg["columnar"],
+            "device_batch": cfg["device_batch"],
+            "device_backend": cfg["device_backend"],
+            "interleaved_rounds": AB_ROUNDS,
+            "tuples": tuples,
+            "wall_s": round(wall, 3),
+            "throughput_per_s": round(tuples / wall, 1),
+            "egress_throughput_per_s": round(report.egress_throughput, 1),
+            "p99_latency_ms": round(report.p99_latency * 1e3, 3),
+            "mean_latency_ms": round(report.mean_latency * 1e3, 3),
+            "busy_frac": round(report.worker_busy_frac, 3),
+        })
+    return rows
+
+
+def _run_device_offload(seconds: float, workers: int):
+    """Offload smoke row: one device stage on the pallas kernel (interpret
+    mode) with columnar ingest — an absolute-throughput tracker for the
+    dispatch path, not an A/B."""
+    backend, kernel = _offload_backend()
+    cfg = {
+        "workload": "device_offload", "backend": "process",
+        "batch_size": 64, "workers": 2, "columnar": True,
+        "device_batch": 128, "device_backend": backend, "max_inflight": 32,
+    }
+    row = _run_config(cfg, seconds, workers)
+    row["columnar"] = True
+    row["device_backend"] = backend
+    row["device_kernel"] = kernel
+    return row
+
+
 def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
         print_fn=print):
     rows = []
@@ -531,6 +657,26 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
             f"thru={row['throughput_per_s']:>10,.0f}/s "
             f"({row['tuples']} tuples / {row['wall_s']}s interleaved)"
         )
+    for row in _run_columnar_ab(seconds, workers):
+        rows.append(row)
+        wire = "colblock" if row["columnar"] else "pickle"
+        print_fn(
+            f"{row['workload']:>14} {row['backend']:>7} "
+            f"batch={row['batch_size']:<3} wire={wire:<8} "
+            f"thru={row['throughput_per_s']:>10,.0f}/s "
+            f"busy={row['busy_frac']:.2f} "
+            f"({row['tuples']} tuples / {row['wall_s']}s interleaved)"
+        )
+    row = _run_device_offload(seconds, workers)
+    rows.append(row)
+    print_fn(
+        f"{row['workload']:>14} {row['backend']:>7} "
+        f"batch={row['batch_size']:<3} "
+        f"kernel={row['device_kernel']}({row['device_backend']}) "
+        f"thru={row['throughput_per_s']:>10,.0f}/s "
+        f"p99={row['p99_latency_ms']:.3f}ms "
+        f"({row['tuples']} tuples / {row['wall_s']}s)"
+    )
     row = _run_serving(seconds, workers)
     rows.append(row)
     print_fn(
@@ -604,6 +750,20 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
                  if r["workload"] == "recovery"), 0.0,
             ), 1e-9), 3,
         ),
+        # The PR-10 tentpole ratio: TAG_COLBLOCK spans vs pickled units on
+        # the same widen -> device -> device chain (interleaved; the
+        # columnar side encodes blocks in the parallel upstream workers and
+        # device stages ingest/relay them zero-copy).
+        "columnar_vs_pickle_process": round(
+            next((r["throughput_per_s"] for r in rows
+                  if r["workload"] == "columnar_device" and r["columnar"]),
+                 0.0) /
+            max(next(
+                (r["throughput_per_s"] for r in rows
+                 if r["workload"] == "columnar_device"
+                 and not r["columnar"]), 0.0,
+            ), 1e-9), 3,
+        ),
         # The PR-9 tentpole ratio: tail latency of the traffic-reactive
         # loop vs static widths on the same bursty trace (< 1 = reactive
         # resizes pay for themselves; the acceptance bar is <= 1.25).
@@ -633,6 +793,20 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
                                  "cores+1 budget over the 2 data-parallel "
                                  "stages; auto = cost-model division "
                                  f"(interleaved x{AB_ROUNDS})",
+                "columnar_device": (
+                    f"SL widen (scalar -> {COL_WIDTH}x i8 tuple) -> 2 device "
+                    "affine stages (NumPy reference kernel), batch "
+                    f"{COL_BATCH}: pickled units vs TAG_COLBLOCK spans on "
+                    f"the same chain, interleaved x{AB_ROUNDS}; the ratio "
+                    "still carries ~±20% host drift on shared vCPUs "
+                    "(docs/columnar.md)"
+                ),
+                "device_offload": (
+                    "widen -> 1 device stage with columnar ingest on the "
+                    "jax/pallas kernel (interpret-mode pallas_call; NumPy "
+                    "reference fallback recorded in device_backend when jax "
+                    "is absent) — offload smoke row, not an A/B"
+                ),
                 "serving": f"{SERVING_SESSIONS} concurrent ordered sessions "
                            "multiplexed onto one runtime (SessionMux), "
                            "open-loop Poisson arrivals at "
@@ -666,6 +840,7 @@ def run(seconds: float = 10.0, workers: int = 4, out: str = "BENCH_core.json",
         f"batch32/batch1={ratios['thread_batch32_vs_batch1']}x  "
         f"staged/ingress={ratios['staged_vs_ingress_process']}x  "
         f"auto/flat={ratios['auto_vs_flat_process']}x  "
+        f"columnar/pickle={ratios['columnar_vs_pickle_process']}x  "
         f"recovery/clean={ratios['recovery_goodput_vs_clean']}x  "
         f"elastic-p99/static={ratios['elastic_serving_p99_vs_static']}x  "
         f"-> {out}"

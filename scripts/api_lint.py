@@ -1,8 +1,8 @@
 #!/usr/bin/env python
 """Public-API lint (wired into ``scripts/verify.sh``).
 
-Every name in ``repro.core.__all__``, ``repro.analysis.__all__``, and
-``repro.serve.__all__`` must
+Every name in ``repro.core.__all__``, ``repro.analysis.__all__``,
+``repro.serve.__all__``, and ``repro.columnar.__all__`` must
 (a) import — a stale ``__all__`` entry is a broken promise — and (b) carry a
 non-empty docstring when it is a class or function (constants are exempt:
 their meaning is documented where they are defined).  Classes are
@@ -59,6 +59,7 @@ def _lint_module(mod, problems: list) -> int:
 
 def main() -> int:
     import repro.analysis as analysis
+    import repro.columnar as columnar
     import repro.core as core
     import repro.serve as serve
 
@@ -67,6 +68,7 @@ def main() -> int:
         _lint_module(core, problems)
         + _lint_module(analysis, problems)
         + _lint_module(serve, problems)
+        + _lint_module(columnar, problems)
     )
     if problems:
         print(f"api-lint: {len(problems)} violation(s)", file=sys.stderr)

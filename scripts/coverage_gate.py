@@ -32,9 +32,10 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 CORE_DIR = os.path.join(REPO, "src", "repro", "core")
 ANALYSIS_DIR = os.path.join(REPO, "src", "repro", "analysis")
 SERVE_DIR = os.path.join(REPO, "src", "repro", "serve")
+COLUMNAR_DIR = os.path.join(REPO, "src", "repro", "columnar")
 # Each gated package must independently clear the floor: a well-covered core
 # cannot paper over an untested analysis pass (or vice versa).
-GATED_DIRS = [CORE_DIR, ANALYSIS_DIR, SERVE_DIR]
+GATED_DIRS = [CORE_DIR, ANALYSIS_DIR, SERVE_DIR, COLUMNAR_DIR]
 DEFAULT_FLOOR = 80.0
 # Stricter per-file floors: the public Engine surface (core/api.py) must stay
 # well-exercised even if the aggregate floor would tolerate a gap there.

@@ -5,10 +5,10 @@
 #   ./scripts/verify.sh --fast   # gated tier-1 pytest only
 #
 # scripts/api_lint.py gates the public surface first: every name in
-# repro.core.__all__, repro.analysis.__all__, and repro.serve.__all__ must
-# import and every exported class/function (and public method) must carry a
-# docstring — the Engine, analysis, and serving APIs cannot grow
-# undocumented entry points.
+# repro.core.__all__, repro.analysis.__all__, repro.serve.__all__, and
+# repro.columnar.__all__ must import and every exported class/function (and
+# public method) must carry a docstring — the Engine, analysis, serving, and
+# columnar APIs cannot grow undocumented entry points.
 #
 # The static-analysis gate (python -m repro.analysis --check) runs the
 # guarded-by / lock-order / fork-safety passes over src/repro/core and fails
@@ -17,12 +17,13 @@
 #
 # The tier-1 suite runs under scripts/coverage_gate.py: pytest -x -q with
 # --durations=10 (slow-test regressions surface in every run) plus a
-# line-coverage floor of 80% over src/repro/core/, src/repro/analysis/, and
-# src/repro/serve/ independently (plus a stricter 85% per-file floor on
-# core/api.py, the public surface) — a drop below any floor fails
-# verification.  The bench smoke (~20 s) runs the thread/process/batched/
-# staged/auto-allocated backends end to end — including the open-loop
-# multiplexed `serving` workload (docs/serving.md) — and rewrites
+# line-coverage floor of 80% over src/repro/core/, src/repro/analysis/,
+# src/repro/serve/, and src/repro/columnar/ independently (plus a stricter
+# 85% per-file floor on core/api.py, the public surface) — a drop below any
+# floor fails verification.  The bench smoke (~30 s) runs the thread/
+# process/batched/staged/auto-allocated backends end to end — including the
+# open-loop multiplexed `serving` workload (docs/serving.md) and the
+# columnar-vs-pickle + device-offload rows (docs/columnar.md) — and rewrites
 # BENCH_core.json, so the perf plumbing cannot silently rot.  The docs check
 # (scripts/check_links.py) keeps docs/, the root markdown files, and
 # benchmarks/README.md free of broken relative links.

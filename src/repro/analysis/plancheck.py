@@ -1,4 +1,4 @@
-"""Plan-time ordering-safety rule catalog (rules PV401–PV408).
+"""Plan-time ordering-safety rule catalog (rules PV401–PV408, PV410–PV412).
 
 :meth:`repro.core.api.PhysicalPlan.verify` delegates here.  The rules assert
 the structural invariants that make a plan's parallel execution externally
@@ -21,10 +21,11 @@ builds, but a hand-built or deserialized-and-edited plan can violate them:
   (the plan must carry ring geometry with ``reorder_size >= 1``).
 - **PV406** — per-operator caps must match kinds on any backend: a stateful
   operator's ``max_dop`` is exactly 1, a partitioned operator's is >= 1.
-- **PV407** — checkpoint geometry: only keyed/stateful stages may be marked
-  ``checkpointed`` (stateless workers carry no state to snapshot — they
-  recover by re-fork + replay alone), and when any stage checkpoints the
-  plan's epoch interval must cover a full dispatch unit
+- **PV407** — checkpoint geometry: only keyed/stateful/device stages may be
+  marked ``checkpointed`` (stateless workers carry no state to snapshot —
+  they recover by re-fork + replay alone; device stages ride group restore
+  because their batches span ingress units), and when any stage checkpoints
+  the plan's epoch interval must cover a full dispatch unit
   (``checkpoint_interval >= io_batch``: barriers ride unit boundaries, a
   shorter interval cannot be honored).
 - **PV408** — traffic-elasticity policy geometry: the hysteresis band must
@@ -34,6 +35,19 @@ builds, but a hand-built or deserialized-and-edited plan can violate them:
   *explicitly* armed policy (``traffic_elastic=True``) must have at least
   one stage it can ever act on (non-stateful with ``max_workers > 1``) —
   a policy with no resizable stage silently never fires.
+- **PV410** — device stages are width-pinned: a device stage's planned
+  ``workers`` must equal the ring geometry's ``device_workers`` pin and its
+  ``max_workers`` (per-worker batching state strands half-filled batches
+  under elastic resize, so device stages carry zero elastic headroom).
+- **PV411** — device batching geometry: ``device_batch >= io_batch`` (a
+  device batch smaller than a dispatch unit splits units across dispatches
+  for no win) and ``device_batch × device_inflight <= reorder_size`` (the
+  rows a device worker may hold unpublished must fit the reorder window or
+  ordered egress can livelock behind them).
+- **PV412** — columnar claims need fixed-width schemas: when the plan arms
+  the columnar path (or cuts a device stage), every device operator must
+  declare a fixed-width schema (``schema_width >= 1``) — the block codec
+  cannot type a column vector without one.
 
 The module deliberately imports nothing from :mod:`repro.core` — it reads
 the plan duck-typed — so ``core.api`` can import it lazily with no cycle.
@@ -43,7 +57,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
-CATALOG_VERSION = 3
+CATALOG_VERSION = 4
 
 
 @dataclass(frozen=True)
@@ -127,13 +141,13 @@ def verify_plan(plan) -> List[PlanViolation]:
             if getattr(s, "checkpointed", False)
         ]
         for s in ckpt_stages:
-            if s.kind not in ("keyed", "stateful"):
+            if s.kind not in ("keyed", "stateful", "device"):
                 v.append(
                     PlanViolation(
                         rule="PV407",
                         stage=s.index,
                         message=f"{s.kind} stage marked checkpointed; only "
-                        "keyed/stateful stages carry state to snapshot",
+                        "keyed/stateful/device stages carry recovery state",
                     )
                 )
         if ckpt_stages:
@@ -184,7 +198,7 @@ def verify_plan(plan) -> List[PlanViolation]:
             if getattr(popts, "traffic_elastic", None) is True:
                 stages = list(getattr(plan, "stages", ()))
                 if stages and not any(
-                    s.kind != "stateful" and s.max_workers > 1
+                    s.kind not in ("stateful", "device") and s.max_workers > 1
                     for s in stages
                 ):
                     v.append(
@@ -232,4 +246,66 @@ def verify_plan(plan) -> List[PlanViolation]:
                     "ingress ring for the extra workers",
                 )
             )
+        if s.kind == "device":
+            pin = ring.get("device_workers")
+            if pin is not None and s.workers != pin:
+                v.append(
+                    PlanViolation(
+                        rule="PV410",
+                        stage=s.index,
+                        message=f"device stage planned at width {s.workers} "
+                        f"but the ring geometry pins device_workers={pin}",
+                    )
+                )
+            if s.max_workers != s.workers:
+                v.append(
+                    PlanViolation(
+                        rule="PV410",
+                        stage=s.index,
+                        message=f"device stage has elastic headroom "
+                        f"(max_workers={s.max_workers} != workers="
+                        f"{s.workers}); per-worker batching state cannot "
+                        "survive a resize",
+                    )
+                )
+
+    dev_stages = [
+        s for s in getattr(plan, "stages", ()) if s.kind == "device"
+    ]
+    if dev_stages and ring:
+        io_batch = ring.get("io_batch") or 1
+        dbatch = ring.get("device_batch") or 0
+        dinflight = ring.get("device_inflight") or 1
+        reorder = ring.get("reorder_size") or 0
+        if dbatch and dbatch < io_batch:
+            v.append(
+                PlanViolation(
+                    rule="PV411",
+                    message=f"device_batch={dbatch} < io_batch={io_batch}: "
+                    "a device batch must cover at least one dispatch unit",
+                )
+            )
+        if dbatch and reorder and dbatch * dinflight > reorder:
+            v.append(
+                PlanViolation(
+                    rule="PV411",
+                    message=f"device_batch={dbatch} x device_inflight="
+                    f"{dinflight} exceeds reorder_size={reorder}: unpublished "
+                    "device rows overrun the ordered-egress window",
+                )
+            )
+    if dev_stages or ring.get("columnar"):
+        for op in plan.ops:
+            if op.kind != "device":
+                continue
+            width = getattr(op, "schema_width", None)
+            if not width or width < 1:
+                v.append(
+                    PlanViolation(
+                        rule="PV412",
+                        op=op.name,
+                        message="device operator declares no fixed-width "
+                        "columnar schema (schema_width must be >= 1)",
+                    )
+                )
     return v

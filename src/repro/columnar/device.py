@@ -1,0 +1,340 @@
+"""Device-offload execution for ``DEVICE`` operator stages.
+
+A device stage accumulates columnar micro-batches until it holds a
+device-sized batch, dispatches the batch to a jax/pallas kernel
+*asynchronously* (jax dispatch returns before the computation finishes),
+and only synchronises — ``jax.block_until_ready`` — when a result must
+cross the ordered-egress boundary.  With ``device_inflight >= 2`` batches
+in flight, host-side ingest/encode overlaps device compute
+(double-buffering).  See ``docs/columnar.md`` for the dispatch protocol.
+
+Everything jax lives behind function-local imports: this module imports
+cleanly without jax, and :func:`resolve_backend` picks the pure-NumPy
+reference backend when jax is absent (``auto``) or when the caller pins
+``backend="numpy"``.  The NumPy backend evaluates the same elementwise
+math eagerly so ordered egress is bit-identical between backends for
+integer schemas; float results may differ in the last ulp across
+backends because XLA fuses multiply-add (see ``docs/columnar.md``).
+
+Kernels are elementwise column maps ``fn(*cols) -> cols`` registered in
+:data:`KERNELS` under a name; each entry supplies a NumPy factory and a
+jax factory.  ``affine_pallas`` is the pallas-backed entry — it lowers
+through :func:`pl.pallas_call` (interpret mode, so it runs on CPU jax).
+Batch boundaries never change results precisely *because* kernels are
+elementwise; that is what lets the runtime flush partial batches on
+barriers, EOF, or upstream stalls without forking the output.
+"""
+from __future__ import annotations
+
+import functools
+from collections import deque
+from typing import Any, Callable, Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.operators import DEVICE, OpSpec
+from .block import ColumnBlock, Schema
+
+Params = Tuple[Tuple[str, Any], ...]
+
+
+def have_jax() -> bool:
+    """True when jax is importable (cached by the import system itself)."""
+    try:
+        import jax  # noqa: F401
+    except Exception:
+        return False
+    return True
+
+
+def jax_fork_hazard() -> bool:
+    """True when THIS process has already initialized a jax backend client.
+
+    Forking after client initialization is unrecoverable: the child
+    inherits XLA/LLVM threadpool locks whose owner threads do not exist,
+    so its first jax computation deadlocks (clearing the backend registry
+    in the child does not help — verified experimentally).  Merely
+    *importing* jax is safe; only running a computation (or e.g.
+    ``jax.random.PRNGKey``) creates the client.  The process runtime
+    checks this before forking jax device workers and fails fast with
+    guidance instead of hanging until the drain timeout."""
+    import sys
+
+    if "jax" not in sys.modules:
+        return False
+    try:
+        from jax._src import xla_bridge as xb
+
+        return bool(xb.backends_are_initialized())
+    except Exception:
+        return False
+
+
+def resolve_backend(name: Optional[str] = "auto") -> str:
+    """Resolve a backend request to ``"jax"`` or ``"numpy"``.
+
+    ``auto`` prefers jax when importable; pinning ``jax`` without jax
+    installed is an error (tests use it behind ``importorskip``)."""
+    if name in (None, "", "auto"):
+        return "jax" if have_jax() else "numpy"
+    if name == "jax":
+        if not have_jax():
+            raise RuntimeError(
+                "device backend 'jax' requested but jax is not importable; "
+                "use backend='auto' to fall back to the NumPy reference"
+            )
+        return "jax"
+    if name == "numpy":
+        return "numpy"
+    raise ValueError(f"unknown device backend {name!r} (auto|jax|numpy)")
+
+
+# --------------------------------------------------------------- kernels
+def _np_affine(params: Params) -> Callable[..., tuple]:
+    kw = dict(params)
+    a, b = kw.get("a", 1), kw.get("b", 0)
+
+    def fn(*cols):
+        return tuple(np.asarray(c * a + b, dtype=c.dtype) for c in cols)
+
+    return fn
+
+
+def _jax_affine(params: Params) -> Callable[..., tuple]:
+    kw = dict(params)
+    a, b = kw.get("a", 1), kw.get("b", 0)
+
+    def fn(*cols):
+        return tuple(c * a + b for c in cols)
+
+    return fn
+
+
+def _np_square(params: Params) -> Callable[..., tuple]:
+    def fn(*cols):
+        return tuple(np.asarray(c * c, dtype=c.dtype) for c in cols)
+
+    return fn
+
+
+def _jax_square(params: Params) -> Callable[..., tuple]:
+    def fn(*cols):
+        return tuple(c * c for c in cols)
+
+    return fn
+
+
+def _pallas_affine_body(x_ref, o_ref, *, a, b):
+    o_ref[...] = x_ref[...] * a + b
+
+
+def _jax_affine_pallas(params: Params) -> Callable[..., tuple]:
+    import jax
+    from jax.experimental import pallas as pl
+
+    kw = dict(params)
+    a, b = kw.get("a", 1), kw.get("b", 0)
+    body = functools.partial(_pallas_affine_body, a=a, b=b)
+
+    def fn(*cols):
+        return tuple(
+            pl.pallas_call(
+                body,
+                out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
+                interpret=True,
+            )(c)
+            for c in cols
+        )
+
+    return fn
+
+
+#: kernel name -> (numpy factory, jax factory); factories take the frozen
+#: params tuple and return an elementwise column map ``fn(*cols) -> cols``.
+KERNELS = {
+    "affine": (_np_affine, _jax_affine),
+    "square": (_np_square, _jax_square),
+    "affine_pallas": (_np_affine, _jax_affine_pallas),
+}
+
+
+def make_kernel(
+    kernel: str, backend: str, params: Params = ()
+) -> Callable[..., tuple]:
+    """Instantiate a registered kernel for a resolved backend."""
+    try:
+        np_factory, jax_factory = KERNELS[kernel]
+    except KeyError:
+        raise ValueError(
+            f"unknown device kernel {kernel!r} (registered: {sorted(KERNELS)})"
+        ) from None
+    return jax_factory(params) if backend == "jax" else np_factory(params)
+
+
+@functools.lru_cache(maxsize=None)
+def _ref_kernel(kernel: str, params: Params) -> Callable[..., tuple]:
+    return make_kernel(kernel, "numpy", params)
+
+
+def ref_apply(value, kernel: str, params: Params, schema: Schema) -> list:
+    """Per-value NumPy reference apply — the ``OpSpec.fn`` of a device op.
+
+    This is what the thread backend, cost calibration, and correctness
+    tests run; the batched device path must match it (bit-exactly for
+    integer schemas)."""
+    block = ColumnBlock.from_values([value], schema=schema)
+    if block is None:
+        raise TypeError(
+            f"device-op input {value!r} does not fit schema {schema}"
+        )
+    outs = _ref_kernel(kernel, params)(*block.columns)
+    return ColumnBlock.from_columns(schema, list(outs)).to_values()
+
+
+def device_op(
+    name: str,
+    kernel: str,
+    schema: Schema,
+    *,
+    params: Optional[dict] = None,
+    device_batch: int = 0,
+    backend: str = "auto",
+    cost_us: float = 1.0,
+) -> OpSpec:
+    """Build a ``DEVICE``-kind :class:`OpSpec`.
+
+    ``device_batch=0`` defers to the runtime's ``device_batch`` knob.
+    The spec's ``fn`` is the NumPy reference (:func:`ref_apply`), so the
+    same spec runs unchanged on the thread backend."""
+    if kernel not in KERNELS:
+        raise ValueError(
+            f"unknown device kernel {kernel!r} (registered: {sorted(KERNELS)})"
+        )
+    frozen: Params = tuple(sorted((params or {}).items()))
+    return OpSpec(
+        name=name,
+        kind=DEVICE,
+        fn=functools.partial(
+            ref_apply, kernel=kernel, params=frozen, schema=schema
+        ),
+        cost_us=cost_us,
+        schema=schema,
+        device_kernel=(kernel, frozen),
+        device_batch=int(device_batch),
+        device_backend=backend,
+    )
+
+
+class DeviceExecutor:
+    """Double-buffered batch executor behind a device-stage worker.
+
+    ``submit`` absorbs per-unit :class:`ColumnBlock`\\ s; once accumulated
+    rows reach ``batch`` the pending blocks are concatenated and
+    dispatched.  Up to ``inflight`` dispatched batches ride concurrently;
+    submitting past the window synchronises on the *oldest* batch only,
+    so with jax the newest dispatch overlaps both host ingest and the
+    older batches still computing.  Completed batches are split back into
+    the original per-unit blocks — serials and marks untouched — so the
+    caller publishes each unit exactly as it arrived (the replay-identity
+    requirement: re-fed units re-derive identical publishes regardless of
+    how device batches regrouped them)."""
+
+    def __init__(
+        self,
+        spec: OpSpec,
+        batch: int = 256,
+        inflight: int = 2,
+        backend: str = "auto",
+    ):
+        if spec.kind != DEVICE or spec.device_kernel is None:
+            raise ValueError(f"op {spec.name!r} is not a device op")
+        kernel, params = spec.device_kernel
+        self.schema: Schema = spec.schema
+        self.batch = max(int(spec.device_batch or batch), 1)
+        self.inflight_limit = max(int(inflight), 1)
+        self.backend = resolve_backend(spec.device_backend or backend)
+        fn = make_kernel(kernel, self.backend, params)
+        if self.backend == "jax":
+            import jax
+
+            fn = jax.jit(fn)
+        self._fn = fn
+        self._pending: List[ColumnBlock] = []
+        self._pending_rows = 0
+        self._inflight: Deque[Tuple[Any, list]] = deque()
+        #: dispatched batch count (observability)
+        self.dispatches = 0
+
+    @property
+    def pending_rows(self) -> int:
+        """Rows accumulated but not yet dispatched."""
+        return self._pending_rows
+
+    @property
+    def inflight(self) -> int:
+        """Dispatched batches not yet synchronised."""
+        return len(self._inflight)
+
+    def submit(self, block: ColumnBlock) -> List[ColumnBlock]:
+        """Absorb one unit's block; returns any units whose batches
+        completed (possibly none, never blocks unless the window is full)."""
+        self._pending.append(block)
+        self._pending_rows += len(block)
+        if self._pending_rows < self.batch:
+            return []
+        self._dispatch()
+        ready: List[ColumnBlock] = []
+        while len(self._inflight) > self.inflight_limit:
+            ready.extend(self._pop())
+        return ready
+
+    def flush(self) -> List[ColumnBlock]:
+        """Dispatch any partial batch and synchronise everything in
+        flight (barrier / EOF / upstream-stall path)."""
+        if self._pending:
+            self._dispatch()
+        out: List[ColumnBlock] = []
+        while self._inflight:
+            out.extend(self._pop())
+        return out
+
+    def _dispatch(self) -> None:
+        big = ColumnBlock.concat(self._pending)
+        units = [(b.serials, b.marks) for b in self._pending]
+        self._pending = []
+        self._pending_rows = 0
+        if self.backend == "jax":
+            import jax.numpy as jnp
+
+            # fresh np.concatenate output: safe to alias zero-copy, the
+            # host never mutates it after dispatch
+            outs = self._fn(*(jnp.asarray(c) for c in big.columns))
+        else:
+            outs = self._fn(*big.columns)
+        self.dispatches += 1
+        self._inflight.append((outs, units))
+
+    def _pop(self) -> List[ColumnBlock]:
+        outs, units = self._inflight.popleft()
+        if self.backend == "jax":
+            import jax
+
+            outs = jax.block_until_ready(outs)
+        cols = [
+            np.asarray(o).astype(dt, copy=False)
+            for o, dt in zip(outs, self.schema.dtypes)
+        ]
+        blocks: List[ColumnBlock] = []
+        off = 0
+        for serials, marks in units:
+            n = len(serials)
+            blocks.append(
+                ColumnBlock(
+                    self.schema,
+                    [c[off : off + n] for c in cols],
+                    serials,
+                    list(marks),
+                )
+            )
+            off += n
+        return blocks

@@ -50,7 +50,7 @@ from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Tupl
 
 from .costmodel import graph_flows, resolve_workers
 from .faults import FaultOptions
-from .operators import OpSpec, PARTITIONED, STATEFUL
+from .operators import DEVICE, OpSpec, PARTITIONED, STATEFUL
 from .pipeline import CompiledPipeline, GraphPipeline
 from .procrun import ProcessRuntime, _chain_nodes
 from .runtime import RunReport, StreamRuntime
@@ -180,6 +180,19 @@ class ProcessOptions:
     before it is SIGKILLed into the crash-recovery path; ``None`` = off;
     must exceed the worst single-unit operator time); ``spill_timeout`` is
     the oversized-bundle relay deadline.
+
+    Columnar / device-offload dials (see ``docs/columnar.md``):
+    ``columnar`` arms the zero-copy batch path — dispatchers seal numeric
+    micro-batches as ``TAG_COLBLOCK`` column blocks instead of pickled
+    units (non-conforming batches fall back to pickle per unit);
+    ``device_batch`` is the rows-per-dispatch target of ``device``-kind
+    stages (clamped up to ``io_batch``); ``device_workers`` is the pinned
+    width of every device stage (device widths never resize — batching
+    state lives per worker); ``device_inflight`` bounds asynchronous
+    dispatches in flight (2 = double-buffering: the newest dispatch
+    overlaps host ingest and the oldest batch's compute);
+    ``device_backend`` picks the kernel backend (``auto`` = jax when
+    importable, else the pure-NumPy reference).
     """
 
     stages: Optional[int] = None
@@ -203,6 +216,11 @@ class ProcessOptions:
     traffic_cooldown: float = 2.0
     resize_latency_budget: Optional[float] = None
     parent_idle_cap: float = 5e-4
+    columnar: bool = False
+    device_batch: int = 256
+    device_workers: int = 1
+    device_inflight: int = 2
+    device_backend: str = "auto"
     checkpoint_interval: int = 1024
     stall_timeout: Optional[float] = None
     spill_timeout: float = 10.0
@@ -258,6 +276,26 @@ class ProcessOptions:
         )
         _check(self.parent_idle_cap > 0, "parent_idle_cap must be > 0",
                key="parent_idle_cap")
+        _check(isinstance(self.columnar, bool),
+               "columnar must be a bool", key="columnar")
+        _check(
+            isinstance(self.device_batch, int) and self.device_batch >= 1,
+            "device_batch must be an int >= 1", key="device_batch",
+        )
+        _check(
+            isinstance(self.device_workers, int) and self.device_workers >= 1,
+            "device_workers must be an int >= 1", key="device_workers",
+        )
+        _check(
+            isinstance(self.device_inflight, int)
+            and self.device_inflight >= 1,
+            "device_inflight must be an int >= 1", key="device_inflight",
+        )
+        _check(
+            self.device_backend in ("auto", "jax", "numpy"),
+            "device_backend must be one of auto|jax|numpy",
+            key="device_backend",
+        )
         _check(
             isinstance(self.checkpoint_interval, int)
             and self.checkpoint_interval >= 0,
@@ -455,7 +493,9 @@ class PlannedOp:
     relative input ``flow`` (tuples per source tuple), per-tuple ``cost_us``,
     declared ``selectivity``, the ``load_share`` fraction of total predicted
     work, and the intrinsic parallelism cap ``max_dop`` (``None`` =
-    unbounded — stateless operators)."""
+    unbounded — stateless operators).  ``schema_width`` is the declared
+    columnar field count of ``device``-kind operators (``None``
+    otherwise)."""
 
     name: str
     kind: str
@@ -464,6 +504,7 @@ class PlannedOp:
     flow: float
     load_share: float
     max_dop: Optional[int] = None
+    schema_width: Optional[int] = None
 
 
 @dataclass
@@ -473,8 +514,9 @@ class PlannedStage:
     from the cost model under ``num_workers="auto"``), the elastic headroom
     (``max_workers``), the predicted per-tuple ``cost_us`` / relative
     ``flow`` / ``load_share`` driving the allocation, and whether the stage
-    participates in epoch checkpointing (``checkpointed`` — keyed/stateful
-    stages with a non-zero ``checkpoint_interval`` and crash restarts on)."""
+    participates in epoch checkpointing (``checkpointed`` — keyed, stateful,
+    and device stages with a non-zero ``checkpoint_interval`` and crash
+    restarts on)."""
 
     index: int
     kind: str
@@ -618,6 +660,17 @@ class PhysicalPlan:
                 f"reorder_payload={r.get('reorder_payload')}"
             )
             p = c.process
+            dev_stages = [s for s in self.stages if s.kind == "device"]
+            if r.get("columnar") or dev_stages:
+                bits = [f"columnar={'on' if r.get('columnar') else 'off'}"]
+                if dev_stages:
+                    bits.append(
+                        f"device_batch={r.get('device_batch')} "
+                        f"device_workers={r.get('device_workers')} "
+                        f"device_inflight={r.get('device_inflight')} "
+                        f"backend={p.device_backend}"
+                    )
+                lines.append(f"  columnar: {' '.join(bits)}")
             ckpt = [
                 f"s{s.index}" for s in self.stages
                 if getattr(s, "checkpointed", False)
@@ -633,7 +686,7 @@ class PhysicalPlan:
                 why = (
                     "disabled"
                     if p.checkpoint_interval == 0 or not p.restart_on_crash
-                    else "no keyed/stateful stage"
+                    else "no keyed/stateful/device stage"
                 )
                 lines.append(f"  checkpoint: off ({why})")
             elastic_on = (
@@ -1525,6 +1578,11 @@ class Engine:
             traffic_cooldown=p.traffic_cooldown,
             resize_latency_budget=p.resize_latency_budget,
             parent_idle_cap=p.parent_idle_cap,
+            columnar=p.columnar,
+            device_batch=p.device_batch,
+            device_workers=p.device_workers,
+            device_inflight=p.device_inflight,
+            device_backend=p.device_backend,
             checkpoint_interval=p.checkpoint_interval,
             stall_timeout=p.stall_timeout,
             spill_timeout=p.spill_timeout,
@@ -1564,6 +1622,10 @@ class Engine:
                 max(rt.checkpoint_interval, rt.io_batch)
                 if any(s.checkpointed for s in stages) else 0
             ),
+            "columnar": int(rt.columnar),
+            "device_batch": rt.device_batch,
+            "device_workers": rt.device_workers,
+            "device_inflight": rt.device_inflight,
         }
         return PhysicalPlan(
             backend="process", config=self.config, ops=ops, routing=routing,
@@ -1582,6 +1644,10 @@ def _planned_ops(op_rows) -> List[PlannedOp]:
             max_dop = spec.num_partitions
         else:
             max_dop = None
+        schema_width = (
+            spec.schema.width
+            if spec.kind == DEVICE and spec.schema is not None else None
+        )
         ops.append(
             PlannedOp(
                 name=spec.name,
@@ -1591,6 +1657,7 @@ def _planned_ops(op_rows) -> List[PlannedOp]:
                 flow=round(flow, 4),
                 load_share=round(flow * cost / total, 4),
                 max_dop=max_dop,
+                schema_width=schema_width,
             )
         )
     return ops

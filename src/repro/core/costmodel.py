@@ -81,6 +81,31 @@ def op_cost_us(op: OpSpec, cost_priors: Optional[Dict[str, float]]) -> float:
     return max(float(op.cost_us), 1e-3)
 
 
+#: per-batch device dispatch overhead prior (µs): jax trace-cache hit +
+#: host->device staging setup, amortised over the batch.
+DEVICE_DISPATCH_US = 50.0
+#: host<->device transfer bandwidth prior, bytes per µs (~8 GB/s).
+DEVICE_BYTES_PER_US = 8192.0
+
+
+def device_cost_us(
+    op: OpSpec,
+    device_batch: int,
+    cost_priors: Optional[Dict[str, float]],
+) -> float:
+    """Per-tuple cost of a device op: the op's own compute prior plus the
+    amortised dispatch overhead and the per-row transfer term (the schema's
+    fixed row width is on the wire twice: in and out).  ``cost_priors``
+    override the whole estimate, same as :func:`op_cost_us`."""
+    if cost_priors and op.name in cost_priors:
+        return max(float(cost_priors[op.name]), 1e-3)
+    batch = max(int(device_batch), 1)
+    cost = max(float(op.cost_us), 1e-3) + DEVICE_DISPATCH_US / batch
+    if op.schema is not None:
+        cost += 2.0 * op.schema.row_bytes / DEVICE_BYTES_PER_US
+    return cost
+
+
 def proportional_allocation(
     loads: Sequence[float],
     budget: int,
@@ -198,7 +223,7 @@ class StageProfile:
     input flow (stage input tuples per pipeline source tuple)."""
 
     index: int
-    kind: str  # "stateless" | "keyed" | "stateful"
+    kind: str  # "stateless" | "keyed" | "stateful" | "device"
     cost_us: float
     flow: float = 1.0
     selectivity: float = 1.0  # stage output tuples per stage input tuple
@@ -220,16 +245,27 @@ class CostModel:
     product across stages.
     """
 
-    def __init__(self, plans: Sequence, cost_priors: Optional[Dict[str, float]] = None):
+    def __init__(
+        self,
+        plans: Sequence,
+        cost_priors: Optional[Dict[str, float]] = None,
+        device_batch: int = 256,
+    ):
         self.plans = list(plans)
         self.cost_priors = dict(cost_priors) if cost_priors else None
+        self.device_batch = max(int(device_batch), 1)
         self.profiles: List[StageProfile] = []
         flow = 1.0
         for plan in self.plans:
             cost = 0.0
             sel = 1.0
             for op in plan.ops:
-                cost += sel * op_cost_us(op, self.cost_priors)
+                if plan.kind == "device":
+                    cost += sel * device_cost_us(
+                        op, self.device_batch, self.cost_priors
+                    )
+                else:
+                    cost += sel * op_cost_us(op, self.cost_priors)
                 sel *= max(float(op.selectivity), 0.0)
             if not plan.ops:  # identity pass-through stage
                 cost = 1e-3
@@ -302,25 +338,38 @@ class CostModel:
 
     def stage_caps(self) -> List[int]:
         """Per-stage width caps: stateful = 1, keyed = partition count,
-        stateless = effectively unbounded."""
+        device = its planned width (pinned), stateless = effectively
+        unbounded."""
         caps = []
         for plan, prof in zip(self.plans, self.profiles):
             if prof.kind == "stateful":
                 caps.append(1)  # intrinsic serial constraint
             elif prof.kind == "keyed":
                 caps.append(max(plan.ops[0].num_partitions, 1))
+            elif prof.kind == "device":
+                # device widths are pinned at plan time (device_workers):
+                # batching state lives per worker, so elastic resize would
+                # strand half-filled batches.
+                caps.append(max(plan.max_workers, 1))
             else:
                 caps.append(1 << 30)
         return caps
 
     def allocate(self, budget: int) -> List[int]:
         """Width vector for ``budget`` total workers (each stage >= 1,
-        stateful pinned at 1, keyed capped at its partition count)."""
-        mins = [1] * len(self.profiles)
+        stateful pinned at 1, keyed capped at its partition count, device
+        pinned at its planned width)."""
+        mins = [
+            max(plan.max_workers, 1) if p.kind == "device" else 1
+            for plan, p in zip(self.plans, self.profiles)
+        ]
         # stateful stages carry load but cannot widen: exclude their load so
         # the remaining budget divides over the stages that can absorb it.
+        # Device stages are likewise pinned (mins == caps), so their load is
+        # excluded too.
         loads = [
-            0.0 if p.kind == "stateful" else p.load for p in self.profiles
+            0.0 if p.kind in ("stateful", "device") else p.load
+            for p in self.profiles
         ]
         return proportional_allocation(loads, budget, mins, self.stage_caps())
 

@@ -9,6 +9,9 @@ Operator function signatures:
   stateless:    fn(value) -> list[out]
   stateful:     fn(state, value) -> (state, list[out])
   partitioned:  fn(state, key, value) -> (state, list[out])
+  device:       fn(value) -> list[out]   (the NumPy reference; the process
+                backend instead batches columnar blocks through the declared
+                ``device_kernel`` via :class:`repro.columnar.DeviceExecutor`)
 
 Contract: operator functions must be **deterministic** (same state/value in,
 same outputs out) and side-effect-free outside their own state.  The thread
@@ -34,12 +37,13 @@ from .serial import AtomicLong, SerialAssigner
 STATELESS = "stateless"
 STATEFUL = "stateful"
 PARTITIONED = "partitioned"
+DEVICE = "device"
 
 
 @dataclass
 class OpSpec:
     name: str
-    kind: str  # stateless | stateful | partitioned
+    kind: str  # stateless | stateful | partitioned | device
     fn: Callable
     key_fn: Optional[Callable[[Any], Hashable]] = None
     num_partitions: int = 1
@@ -49,9 +53,16 @@ class OpSpec:
     # the discrete-event simulator as ground-truth virtual costs).
     cost_us: float = 1.0
     selectivity: float = 1.0
+    # Device-offload declaration (kind == DEVICE only; see repro.columnar).
+    # ``fn`` stays the per-value NumPy reference so every non-device path
+    # (thread backend, calibration, correctness tests) runs the spec as-is.
+    schema: Any = None  # repro.columnar.Schema of the fixed-width rows
+    device_kernel: Any = None  # (registry name, frozen params tuple)
+    device_batch: int = 0  # rows per device dispatch (0 = runtime knob)
+    device_backend: str = "auto"  # auto | jax | numpy
 
     def __post_init__(self):
-        if self.kind not in (STATELESS, STATEFUL, PARTITIONED):
+        if self.kind not in (STATELESS, STATEFUL, PARTITIONED, DEVICE):
             raise ValueError(f"bad operator kind {self.kind!r}")
         if self.kind == PARTITIONED:
             if self.key_fn is None:
@@ -59,6 +70,15 @@ class OpSpec:
             if self.partitioner is None:
                 n = self.num_partitions
                 self.partitioner = lambda k, n=n: hash(k) % n
+        if self.kind == DEVICE:
+            if self.device_kernel is None or self.schema is None:
+                raise ValueError(
+                    f"{self.name}: device operator needs device_kernel and schema"
+                )
+            if self.selectivity != 1.0:
+                # Elementwise column maps are 1:1 by construction; anything
+                # else would make partial-batch flushes change results.
+                raise ValueError(f"{self.name}: device operators are 1:1")
 
 
 class _Marker:
@@ -131,7 +151,10 @@ class OperatorNode:
             self._state = spec.init_state()
             self._queue: collections.deque = collections.deque()
             self._reorder = None  # single worker => already ordered
-        elif spec.kind == STATELESS:
+        elif spec.kind in (STATELESS, DEVICE):
+            # DEVICE runs its per-value NumPy reference here: on the thread
+            # backend a device op is just a stateless flat-map (batched
+            # kernel dispatch exists only on the process backend).
             self.max_dop = 1 << 30  # effectively ∞ (capped by cores)
             self._queue = collections.deque()
             # Parking wrapper: non-FIFO worklists (Volcano bucket ownership,

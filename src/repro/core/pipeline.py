@@ -45,6 +45,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .operators import (
+    DEVICE,
     OpSpec,
     OperatorNode,
     PARTITIONED,
@@ -232,7 +233,7 @@ def _wrap_spec(spec: OpSpec) -> OpSpec:
             f.add(len(outs) - 1)
         return [_Envelope(value.frames, o) for o in outs]
 
-    if spec.kind == STATELESS:
+    if spec.kind in (STATELESS, DEVICE):
         fn = spec.fn
 
         def fn_sl(value):
@@ -272,6 +273,10 @@ def _wrap_spec(spec: OpSpec) -> OpSpec:
         init_state=spec.init_state,
         cost_us=spec.cost_us,
         selectivity=spec.selectivity,
+        schema=spec.schema,
+        device_kernel=spec.device_kernel,
+        device_batch=spec.device_batch,
+        device_backend=spec.device_backend,
     )
 
 

@@ -83,6 +83,25 @@ Payloads ride fixed-width ring slots (units and result bundles pickled,
 single int/float results raw); result bundles too large for a reorder slot
 spill to the worker's pipe with a spill tag left in the ring, preserving
 order — the parent relays spill bodies to the router that drains them.
+With ``columnar=True`` fixed-width numeric units skip pickle entirely:
+feeders seal them as ``TAG_COLBLOCK`` span slots (:mod:`repro.columnar`),
+workers decode the column vectors zero-copy, and 1:1 numeric results ride
+back out the same way.  Device stages work either way — with columnar off
+the device worker converts pickled tuples to columns itself, serially —
+so the knob is an honest pickle-vs-columnar A/B even on device chains.
+
+**Device stages** (``OpSpec.kind == "device"``) are a fourth stage kind:
+each worker wraps its op in a :class:`~repro.columnar.DeviceExecutor`,
+accumulating columnar units to ``device_batch`` rows and dispatching them
+asynchronously to a jax/pallas kernel (double-buffered; NumPy reference
+without jax).  Because a device batch spans ingress units, the worker
+must commit its ring cursor *before* publishing — so device stages are
+not re-fork-recoverable and instead ride the keyed/stateful checkpoint +
+replay-log group restore (publishes stay per-serial guarded, and
+elementwise kernels make results independent of batch regrouping).  A
+device worker also flushes partial batches on barriers, EOF, and upstream
+stalls, so an idle pipeline can never wedge on rows parked below the
+batch threshold.
 """
 from __future__ import annotations
 
@@ -110,7 +129,7 @@ from .faults import (
     DeadLetter, FaultPlan, HANG, InjectedFault, KILL, OP_ERROR, ROUTER_KILL,
     SPILL_DELAY, resolve_policies,
 )
-from .operators import OpSpec, PARTITIONED, STATEFUL, STATELESS, _Marker
+from .operators import DEVICE, OpSpec, PARTITIONED, STATEFUL, STATELESS, _Marker
 from .pipeline import GraphPipeline, Merge, NodeSpec, Split, percentile_latencies
 from .runtime import RunReport
 from . import shm
@@ -171,7 +190,7 @@ def _chain_nodes(specs: Sequence[OpSpec]):
 class StagePlan:
     """One process stage: a worker group executing a run of operators."""
 
-    kind: str  # "stateless" | "keyed" | "stateful"
+    kind: str  # "stateless" | "keyed" | "stateful" | "device"
     ops: List[OpSpec] = field(default_factory=list)
     workers: int = 1
     index: int = 0
@@ -182,15 +201,22 @@ class StagePlan:
 
     @property
     def recoverable(self) -> bool:
-        """Only stateless stages survive a worker crash (no lost state)."""
+        """Only stateless stages survive a worker crash (no lost state).
+        Device stages are stateless in the fn sense but advance their ring
+        cursor before publishing (batches span units), so they recover via
+        the checkpoint/replay-log path, not per-worker re-fork."""
         return all(op.kind == STATELESS for op in self.ops)
 
     @property
     def resizable(self) -> bool:
         """Elastic replanning can re-fork this stage at a new width:
         stateless trivially, keyed via quiesced state migration; stateful
-        stages are pinned at one worker."""
-        return self.kind != "stateful" and max(self.max_workers, 1) > 1
+        stages are pinned at one worker and device stages at their
+        ``device_workers`` width (PV410 verifies the pin)."""
+        return (
+            self.kind not in ("stateful", "device")
+            and max(self.max_workers, 1) > 1
+        )
 
     def describe(self) -> str:
         names = ",".join(op.name for op in self.ops) or "<identity>"
@@ -203,6 +229,7 @@ def _plan_stages(
     num_workers: int,
     max_stages: Optional[int],
     allocate: Optional[Callable[[List["StagePlan"]], List[int]]] = None,
+    device_workers: int = 1,
 ):
     """Cut the graph's linear ingress prefix into stages.
 
@@ -247,6 +274,20 @@ def _plan_stages(
                 if len(stages) >= cap:
                     break
                 cur_kind = "stateless"
+        elif spec.kind == DEVICE:
+            # A device op owns its stage alone (the worker body is the batch
+            # executor, not the segment interpreter) at a width pre-pinned to
+            # device_workers — the cost-model allocator never touches it.
+            close_stage()
+            if len(stages) >= cap:
+                break
+            dw = max(int(device_workers), 1)
+            stages.append(
+                StagePlan("device", [spec], dw, len(stages), max_workers=dw)
+            )
+            seg_names.add(cur)
+            cur = succ[cur][0] if succ[cur] else None
+            continue
         else:  # partitioned/stateful operators must head their own stage
             close_stage()
             if len(stages) >= cap:
@@ -262,7 +303,7 @@ def _plan_stages(
     if allocate is not None:
         widths = allocate(stages)
         for plan, w in zip(stages, widths):
-            if plan.kind != "stateful":
+            if plan.kind not in ("stateful", "device"):
                 plan.workers = max(int(w), 1)
     tail_nodes = {k: v for k, v in nodes.items() if k not in seg_names}
     tail_edges = [(u, v) for u, v in edges if u not in seg_names]
@@ -281,7 +322,7 @@ def _apply_segment(ops: Sequence[OpSpec], states: list, value: Any) -> list:
     vals = [value]
     for oi, op in enumerate(ops):
         nxt: list = []
-        if op.kind == STATELESS:
+        if op.kind in (STATELESS, DEVICE):  # device: per-value reference fn
             fn = op.fn
             for v in vals:
                 nxt.extend(fn(v))
@@ -317,7 +358,7 @@ def _apply_segment_safe(ops, states, value, policies):
     for oi, op in enumerate(ops):
         try:
             nxt: list = []
-            if op.kind == STATELESS:
+            if op.kind in (STATELESS, DEVICE):
                 fn = op.fn
                 for v in vals:
                     nxt.extend(fn(v))
@@ -374,7 +415,8 @@ def _publish(reorder, conn, serial, tag, data, span, beat=None,
 
 
 def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None,
-                 stage=0, dedup=False, policies=None, child_faults=None):
+                 stage=0, dedup=False, policies=None, child_faults=None,
+                 columnar=False, dev_cfg=None):
     """Stage worker body (entered via fork; exits with os._exit).
 
     Consumes peek → process → publish → advance so a crash strands at most
@@ -389,7 +431,14 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None,
 
     ``policies`` is one ``on_error`` policy per op (positional);
     ``child_faults`` carries this worker's injected ``op_error``/
-    ``spill_delay`` triggers keyed by serial."""
+    ``spill_delay`` triggers keyed by serial.
+
+    ``columnar`` arms the result-side columnar codec (1:1 numeric results
+    publish as ``TAG_COLBLOCK`` instead of pickled ``TAG_BUNDLES``);
+    columnar *ingress* needs no flag — any worker decodes ``TAG_COLBLOCK``
+    units on arrival.  ``dev_cfg`` is ``(device_batch, device_inflight,
+    device_backend)`` for device stages, whose whole worker body is the
+    batch-executor path (see the module docstring)."""
     ingress.sync_consumer()  # crash replacement: resume at the shared cursor
     states = preload if preload is not None else _init_states(seg_ops)
     busy = 0.0
@@ -401,6 +450,33 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None,
     op_err = (child_faults or {}).get(OP_ERROR) or None
     spill_delay = (child_faults or {}).get(SPILL_DELAY) or None
     dead: list = []  # (serial, op, value, error) quarantined this unit
+
+    # Columnar plumbing — imported lazily so non-columnar streams never pay
+    # the numpy import in every forked child.
+    col = None  # repro.columnar.codec module
+    colout = None  # result-side codec (columnar-armed non-device stages)
+    executor = None  # DeviceExecutor (device stages)
+    ColumnBlock = None
+    if seg_ops and seg_ops[0].kind == DEVICE:
+        from ..columnar import codec as col
+        from ..columnar.block import ColumnBlock
+        from ..columnar.device import DeviceExecutor
+
+        dbatch, dinflight, dbackend = dev_cfg or (256, 2, "auto")
+        executor = DeviceExecutor(
+            seg_ops[0], batch=dbatch, inflight=dinflight, backend=dbackend
+        )
+    elif columnar:
+        from ..columnar import codec as col
+
+        colout = col.ColumnarCodec()
+
+    def publish_block(out) -> None:
+        # ordered-egress boundary: the executor synchronised `out` already;
+        # publish rides the generic span/spill path under the block's head
+        if not reorder.published(out.head_serial):
+            _publish(reorder, conn, out.head_serial, shm.TAG_COLBLOCK,
+                     col.encode_block(out), len(out), beat, spill_delay)
 
     def apply_one(serial, v):
         if op_err is not None and serial in op_err:
@@ -433,6 +509,17 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None,
             closing = ingress.closed() or reorder.stopped()
             rec = ingress.peek()
             if rec is None:
+                if (
+                    executor is not None
+                    and (executor.pending_rows or executor.inflight)
+                    and (closing or idle >= 1e-3)
+                ):
+                    # liveness: an upstream stall (or EOF) must not park rows
+                    # below the batch threshold — the inflight window could be
+                    # wedged on exactly those serials.  Elementwise kernels
+                    # make the partial-batch flush result-identical.
+                    for out in executor.flush():
+                        publish_block(out)
                 if closing:
                     break
                 time.sleep(idle)
@@ -441,6 +528,13 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None,
             idle = _IDLE_MIN
             serial, tag, data, nslots = rec
             if tag == shm.TAG_BARRIER:
+                if executor is not None:
+                    # every serial below the boundary must be published
+                    # before the epoch can complete — once the replay log
+                    # truncates at the boundary, unpublished older rows
+                    # would be unrecoverable
+                    for out in executor.flush():
+                        publish_block(out)
                 # epoch checkpoint: snapshot state-after-serials-< boundary
                 # and ack over the pipe; nothing reaches the reorder ring.
                 # Acking before advance keeps the snapshot ≤1 barrier stale
@@ -505,8 +599,47 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None,
                         if not reorder.published(s):
                             _publish(reorder, conn, s, btag, bdata, 1,
                                      beat, spill_delay)
-            else:  # TAG_UNIT: contiguous serial span [serial, serial+len)
-                values, marks = pickle.loads(data)
+            else:  # TAG_UNIT/TAG_COLBLOCK: contiguous span [serial, serial+len)
+                block = None
+                if tag == shm.TAG_COLBLOCK:
+                    if col is None:  # upstream device stage, columnar off
+                        from ..columnar import codec as col
+                    block = col.decode_block(data)
+                    values, marks = None, block.marks
+                else:
+                    values, marks = pickle.loads(data)
+                if executor is not None:
+                    blk = block
+                    if blk is None:
+                        blk = ColumnBlock.from_values(
+                            values, head_serial=serial, marks=marks,
+                            schema=executor.schema,
+                        )
+                    elif blk.schema != executor.schema:
+                        blk = ColumnBlock.from_values(
+                            blk.to_values(), head_serial=serial, marks=marks,
+                            schema=executor.schema,
+                        )
+                    if blk is not None:
+                        for _, m in blk.marks:
+                            if not m.begin:
+                                m.begin = t_begin
+                        ready = executor.submit(blk)
+                        processed += len(blk)
+                        busy += time.perf_counter() - t_begin
+                        # Commit BEFORE publish: the device batch spans
+                        # ingress units, so this worker can never be replayed
+                        # by per-worker re-fork — device stages recover via
+                        # the checkpoint/replay-log group restore, and the
+                        # per-serial publish guards absorb replayed
+                        # duplicates however the batches regroup.
+                        ingress.advance(nslots)
+                        for out in ready:
+                            publish_block(out)
+                        continue
+                    # off-schema unit: per-value reference fallback below
+                if values is None:
+                    values = block.to_values()
                 if dedup and serial <= last_seen:
                     cut = min(last_seen + 1 - serial, len(values))
                     values = values[cut:]
@@ -536,11 +669,28 @@ def _worker_main(wid, ingress, reorder, conn, seg_ops, preload=None,
                 processed += len(values)
                 busy += time.perf_counter() - t_begin
                 if not reorder.published(serial):
-                    bdata = pickle.dumps((bundles, out_marks, dropped), _PICKLE)
-                    _publish(
-                        reorder, conn, serial, shm.TAG_BUNDLES, bdata,
-                        len(values), beat, spill_delay,
-                    )
+                    enc = None
+                    if colout is not None and not dropped and all(
+                        len(b) == 1 for b in bundles
+                    ):
+                        # 1:1 numeric results stay columnar end-to-end; the
+                        # slot shape (head, span) matches the TAG_BUNDLES
+                        # fallback exactly, so the replay head check is
+                        # indifferent to which encoding a predecessor chose
+                        enc = colout.try_encode_unit(
+                            [b[0] for b in bundles], out_marks, serial
+                        )
+                    if enc is not None:
+                        _publish(reorder, conn, serial, shm.TAG_COLBLOCK,
+                                 enc[0], len(values), beat, spill_delay)
+                    else:
+                        bdata = pickle.dumps(
+                            (bundles, out_marks, dropped), _PICKLE
+                        )
+                        _publish(
+                            reorder, conn, serial, shm.TAG_BUNDLES, bdata,
+                            len(values), beat, spill_delay,
+                        )
             if dead:
                 conn.send(("dead", wid, dead))
                 dead = []
@@ -573,7 +723,8 @@ class _Dispatcher:
     otherwise).  Used by the parent (stage 0) and by every router."""
 
     def __init__(self, exchange: shm.ExchangeRing, plan: StagePlan,
-                 io_batch: int, max_inflight: int, ckpt_interval: int = 0):
+                 io_batch: int, max_inflight: int, ckpt_interval: int = 0,
+                 columnar: bool = False):
         self.x = exchange
         self.plan = plan
         self.workers = plan.workers  # ACTIVE width (<= exchange.consumers)
@@ -581,6 +732,22 @@ class _Dispatcher:
         self.max_inflight = max_inflight
         self.paused = False  # elastic replan: gate intake + liveness flushes
         self.keyed = plan.kind == "keyed"
+        # Columnar sealing (non-keyed only — keyed units carry explicit
+        # per-tuple serials and stay pickled).  Armed by the ``columnar``
+        # knob alone: device workers accept both pickled units (converting
+        # per tuple, serially) and TAG_COLBLOCK spans (zero-copy ingest),
+        # so the flag is an honest A/B switch.  When feeding a device stage
+        # the codec is pinned to the op's declared schema so blocks arrive
+        # ready-typed.
+        self._codec = None
+        if columnar and not self.keyed:
+            from ..columnar.codec import ColumnarCodec
+
+            schema = (
+                plan.ops[0].schema
+                if plan.kind == "device" and plan.ops else None
+            )
+            self._codec = ColumnarCodec(schema)
         # Epoch checkpointing (keyed/stateful stages only): stamp a barrier
         # every ckpt_interval serials and keep a per-ring replay log of
         # every record pumped since the last COMPLETE epoch — the group-
@@ -730,9 +897,44 @@ class _Dispatcher:
         self._vals, self._marks = [], []
         head = self._head_serial
         self._head_serial = self.next_serial
+        if self._codec is not None:
+            enc = self._codec.try_encode_unit(vals, marks, head)
+            if enc is not None:
+                self._outq[next(self._rr)].append(
+                    (head, shm.TAG_COLBLOCK, enc[0])
+                )
+                self._queued += 1
+                return
         data = pickle.dumps((vals, marks), _PICKLE)
         self._outq[next(self._rr)].append((head, shm.TAG_UNIT, data))
         self._queued += 1
+
+    def add_block(self, block) -> bool:
+        """Columnar pass-through: route a whole decoded block as one unit,
+        re-stamped with this stage's serials — no per-tuple add, no pickle.
+        Returns False when the block must be re-fed per-value instead
+        (keyed routing, or a schema pinned to a different layout)."""
+        if self.keyed or self._codec is None:
+            return False
+        if self._codec.schema is None:
+            self._codec.schema = block.schema
+        elif block.schema != self._codec.schema:
+            return False
+        if (
+            self._next_boundary is not None
+            and self.next_serial >= self._next_boundary
+        ):
+            self.stamp_barrier()
+        self._seal_contiguous()  # partial scalar adds precede this block
+        from ..columnar.codec import encode_block
+
+        head = self.next_serial
+        self.next_serial += len(block)
+        self._head_serial = self.next_serial
+        data = encode_block(block.with_serials(head))
+        self._outq[next(self._rr)].append((head, shm.TAG_COLBLOCK, data))
+        self._queued += 1
+        return True
 
     def flush(self) -> None:
         """Seal every partial accumulator (source end / upstream idle)."""
@@ -825,7 +1027,7 @@ def _await_spill(spills, serial, pump, timeout: float = 10.0, describe=None):
 
 
 def _router_main(ridx, upstream, exchange, conn, plan, io_batch, max_inflight,
-                 ckpt_interval=0, spill_timeout=10.0):
+                 ckpt_interval=0, spill_timeout=10.0, columnar=False):
     """Exchange-router body: drain the upstream stage's reorder ring (stream
     order), re-stamp serials, seal/route units into the downstream stage, and
     cascade EOF.  Never runs operator ``fn`` bodies — though keyed routing
@@ -851,7 +1053,8 @@ def _router_main(ridx, upstream, exchange, conn, plan, io_batch, max_inflight,
     window."""
     exchange.sync_feeder()  # restart: reload the ingress producer cursors
     resume_serial = upstream.sync_drainer()  # restart: committed pair
-    disp = _Dispatcher(exchange, plan, io_batch, max_inflight, ckpt_interval)
+    disp = _Dispatcher(exchange, plan, io_batch, max_inflight, ckpt_interval,
+                       columnar=columnar)
     if resume_serial > 1:
         disp.restore_serial(resume_serial)
     committed = upstream.read_pos()
@@ -1045,6 +1248,15 @@ def _route_result(disp, conn, tag, data) -> None:
             conn.send(("marks", [m]))
         for j, v in enumerate(outs):
             disp.add(v, m if j == 0 else None)
+    elif tag == shm.TAG_COLBLOCK:
+        from ..columnar.codec import decode_block
+
+        block = decode_block(data)
+        if not disp.add_block(block):
+            # keyed routing (or schema mismatch): per-value re-dispatch
+            mk = dict(block.marks) if block.marks else None
+            for i, v in enumerate(block.to_values()):
+                disp.add(v, mk.get(i) if mk else None)
     else:
         for v in shm.decode_bundle(tag, data):
             disp.add(v, None)
@@ -1114,6 +1326,11 @@ class ProcessRuntime:
         traffic_cooldown: float = 2.0,
         resize_latency_budget: Optional[float] = None,  # p99 guard; None off
         stage_widths: Optional[Sequence[int]] = None,  # pin a PhysicalPlan's widths
+        columnar: bool = False,  # seal numeric units as TAG_COLBLOCK blocks
+        device_batch: int = 256,  # rows per device kernel dispatch
+        device_workers: int = 1,  # pinned width of every device stage
+        device_inflight: int = 2,  # async dispatches in flight (2 = dbl-buf)
+        device_backend: str = "auto",  # auto | jax | numpy
         checkpoint_interval: int = 1024,  # serials per epoch; 0 disables
         stall_timeout: Optional[float] = None,  # hung-process detector; None off
         spill_timeout: float = 10.0,  # spill-body relay deadline (seconds)
@@ -1147,6 +1364,30 @@ class ProcessRuntime:
         if io_batch is None:
             io_batch = batch_size if batch_size and batch_size > 1 else 32
         self.io_batch = max(1, io_batch)
+        self.columnar = bool(columnar)
+        if not isinstance(device_batch, int) or device_batch < 1:
+            raise ValueError(
+                f"device_batch must be a positive int, got {device_batch!r}"
+            )
+        # a device batch smaller than a dispatch unit would split units
+        # across dispatches for no win; clamp to the PV411 floor
+        self.device_batch = max(device_batch, self.io_batch)
+        if not isinstance(device_workers, int) or device_workers < 1:
+            raise ValueError(
+                f"device_workers must be a positive int, got {device_workers!r}"
+            )
+        self.device_workers = device_workers
+        if not isinstance(device_inflight, int) or device_inflight < 1:
+            raise ValueError(
+                f"device_inflight must be a positive int, got "
+                f"{device_inflight!r}"
+            )
+        self.device_inflight = device_inflight
+        if device_backend not in ("auto", "jax", "numpy"):
+            raise ValueError(
+                f"device_backend must be auto|jax|numpy, got {device_backend!r}"
+            )
+        self.device_backend = device_backend
         self.restart_on_crash = restart_on_crash
         if not isinstance(checkpoint_interval, int) or checkpoint_interval < 0:
             raise ValueError(
@@ -1203,14 +1444,20 @@ class ProcessRuntime:
             self.worker_budget = budget
 
             def allocate(plans):  # noqa: F811 — prior-based initial widths
-                self.cost_model = CostModel(plans, self.cost_priors)
+                self.cost_model = CostModel(
+                    plans, self.cost_priors, device_batch=self.device_batch
+                )
                 return self.cost_model.allocate(budget)
 
         self.stage_plans, tail_nodes, tail_edges = _plan_stages(
-            self.node_specs, self.edges, num_workers, stages, allocate
+            self.node_specs, self.edges, num_workers, stages, allocate,
+            device_workers=self.device_workers,
         )
         if not self.auto_workers:
-            self.cost_model = CostModel(self.stage_plans, self.cost_priors)
+            self.cost_model = CostModel(
+                self.stage_plans, self.cost_priors,
+                device_batch=self.device_batch,
+            )
         # Executing a pre-made PhysicalPlan: pin the planner's widths (the
         # plan was built from the same priors, so this is reproducibility,
         # not override) and skip the run-time calibration pass — elastic
@@ -1223,7 +1470,7 @@ class ProcessRuntime:
                     f"{len(self.stage_plans)} planned stages"
                 )
             for plan, w in zip(self.stage_plans, self.pinned_widths):
-                if plan.kind != "stateful":
+                if plan.kind not in ("stateful", "device"):
                     plan.workers = max(int(w), 1)
         if self.worker_budget is None:
             # elastic replanning with flat widths: the budget it may
@@ -1321,7 +1568,7 @@ class ProcessRuntime:
         caps = self.cost_model.stage_caps()
         spare = max(self.worker_budget - (len(self.stage_plans) - 1), 1)
         for plan, cap in zip(self.stage_plans, caps):
-            if not self.elastic or plan.kind == "stateful":
+            if not self.elastic or plan.kind in ("stateful", "device"):
                 plan.max_workers = plan.workers
             else:
                 plan.max_workers = max(min(cap, spare), plan.workers)
@@ -1346,12 +1593,13 @@ class ProcessRuntime:
 
     # -------------------------------------------------------------- lifecycle
     def _ckpt_enabled(self, stage: int) -> bool:
-        """Whether this stage recovers by epoch checkpoint + replay (only
-        keyed/stateful stages need it; stateless re-forks per worker)."""
+        """Whether this stage recovers by epoch checkpoint + replay
+        (keyed/stateful stages for their state, device stages because their
+        batches span ring units; stateless re-forks per worker)."""
         return (
             self.checkpoint_interval > 0
             and self.restart_on_crash
-            and self.stage_plans[stage].kind in ("keyed", "stateful")
+            and self.stage_plans[stage].kind in ("keyed", "stateful", "device")
         )
 
     def _stage_ckpt_interval(self, stage: int) -> int:
@@ -1365,16 +1613,41 @@ class ProcessRuntime:
                      preload=None):
         x = self._exchanges[stage]
         plan = self.stage_plans[stage]
+        if plan.kind == "device" and plan.ops:
+            from ..columnar.device import jax_fork_hazard, resolve_backend
+
+            backend = resolve_backend(
+                plan.ops[0].device_backend or self.device_backend
+            )
+            if backend == "jax" and jax_fork_hazard():
+                # Fail fast: a forked child of a jax-initialized parent
+                # deadlocks on its first computation (inherited XLA
+                # threadpool locks), which would otherwise surface as an
+                # opaque drain timeout a minute from now.
+                raise RuntimeError(
+                    "cannot fork a jax device worker: this process has "
+                    "already initialized a jax backend (e.g. ran a jax "
+                    "computation or created a PRNGKey), and forked "
+                    "children of an initialized parent deadlock inside "
+                    "XLA. Run the engine before any in-process jax work, "
+                    "or pin device_backend='numpy' for this run. "
+                    "See docs/columnar.md (fork safety)."
+                )
         parent_conn, child_conn = self._ctx.Pipe(duplex=False)
         child_faults = (
             self.fault_plan.child_specs(stage, widx)
             if self.fault_plan is not None else None
         )
+        dev_cfg = (
+            (self.device_batch, self.device_inflight, self.device_backend)
+            if plan.kind == "device" else None
+        )
         proc = self._ctx.Process(
             target=_worker_main,
             args=(widx, x.rings[widx], x.reorder, child_conn, plan.ops,
                   preload, stage, plan.kind != "stateless",
-                  resolve_policies(self.on_error, plan.ops), child_faults),
+                  resolve_policies(self.on_error, plan.ops), child_faults,
+                  self.columnar, dev_cfg),
             daemon=True,
         )
         proc.start()
@@ -1394,7 +1667,8 @@ class ProcessRuntime:
             args=(stage, self._exchanges[stage - 1].reorder,
                   self._exchanges[stage], child_conn,
                   self.stage_plans[stage], self.io_batch, self.max_inflight,
-                  self._stage_ckpt_interval(stage), self.spill_timeout),
+                  self._stage_ckpt_interval(stage), self.spill_timeout,
+                  self.columnar),
             daemon=True,
         )
         proc.start()
@@ -1432,6 +1706,7 @@ class ProcessRuntime:
         self._disp = _Dispatcher(
             self._exchanges[0], self.stage_plans[0], self.io_batch,
             self.max_inflight, self._stage_ckpt_interval(0),
+            columnar=self.columnar,
         )
         self._ckpt = CheckpointStore()
         self._log_floor = {s: 1 for s in range(len(self.stage_plans))}
@@ -2331,7 +2606,7 @@ class ProcessRuntime:
             if self.cost_model.calibrate(sample):
                 widths = self.cost_model.allocate(self.worker_budget)
                 for plan, w in zip(self.stage_plans, widths):
-                    if plan.kind != "stateful":
+                    if plan.kind not in ("stateful", "device"):
                         plan.workers = max(int(w), 1)
                 self._set_stage_headroom()
                 if not self._explicit_inflight:  # user's latency cap wins
@@ -2403,6 +2678,13 @@ class ProcessRuntime:
                     self._emit(outs, m)
                 elif m is not None:
                     self._record_dropped(m)
+            elif tag == shm.TAG_COLBLOCK:
+                from ..columnar.codec import decode_block
+
+                block = decode_block(data)
+                mk = dict(block.marks) if block.marks else None
+                for i, v in enumerate(block.to_values()):
+                    self._emit([v], mk.get(i) if mk else None)
             else:
                 self._emit(shm.decode_bundle(tag, data), None)
         return progress

@@ -69,9 +69,15 @@ condition with ``STALE`` (already drained) and is dropped.
 
 Payload codec: dispatch units and multi-tuple result bundles travel as
 pickle; single-int/float result bundles take a raw 8-byte fast path
-(``TAG_ONE_INT``/``TAG_ONE_FLOAT``).  Reorder-ring bundles whose pickle
-exceeds the slot payload are diverted to a pipe side channel and the slot
-carries only a spill tag, keeping the ring itself fixed-width.
+(``TAG_ONE_INT``/``TAG_ONE_FLOAT``) and bundles of homogeneous small
+int/float tuples take a raw struct path (``TAG_TUPS`` — a 4-byte header,
+per-column type codes, then 8 bytes per cell).  Columnar micro-batches
+(:mod:`repro.columnar`) ride whole blocks through ``TAG_COLBLOCK`` span
+slots — NumPy column vectors written directly into the ring via the same
+span-publish path, with pickle reserved for the ragged marker sidecar.
+Reorder-ring bundles whose encoding exceeds the slot payload are diverted
+to a pipe side channel and the slot carries only a spill tag, keeping the
+ring itself fixed-width.
 """
 from __future__ import annotations
 
@@ -99,9 +105,74 @@ TAG_BARRIER = 13  # epoch checkpoint barrier riding an ingress ring: the
 # serial field is the epoch's boundary serial B (state after every serial
 # < B), the payload is the 8-byte epoch number.  Workers snapshot and ack
 # over their pipe; nothing is published to the reorder ring for a barrier.
+TAG_COLBLOCK = 14  # columnar micro-batch (repro.columnar wire format): a
+# whole fixed-width ColumnBlock in one span slot — as a dispatch unit it
+# replaces TAG_UNIT (serial = block head, span rides the record), as a
+# result it replaces TAG_BUNDLES (span = block rows, one serial per row).
+# The payload is decoded by repro.columnar.codec; core.shm only moves it.
+TAG_TUPS = 15  # bundle of homogeneous fixed-width numeric tuples:
+# [n:2][k:1][col type codes: k bytes] then n*k raw 8-byte cells row-major
+# (code 0 = int64, 1 = float64) — the widened raw fast path for results
+# that are small tuples of ints/floats instead of bare scalars.
 
 _I8 = struct.Struct("<q")
 _F8 = struct.Struct("<d")
+_TUP_HDR = struct.Struct("<HB")  # rows:2, cols:1 (then `cols` code bytes)
+_TUP_MAX_COLS = 16
+_TUP_MAX_ROWS = 0xFFFF
+_I64_MIN, _I64_MAX = -(1 << 63), (1 << 63) - 1
+
+
+def _try_encode_tuples(outs: list) -> Optional[bytes]:
+    """Raw struct encoding for a bundle of homogeneous numeric tuples, or
+    None when any row breaks the shape/type contract (pickle fallback).
+    Column types are fixed by the first row; bools are excluded (a bool is
+    an int subclass but must round-trip as bool)."""
+    first = outs[0]
+    k = len(first)
+    if not 1 <= k <= _TUP_MAX_COLS or len(outs) > _TUP_MAX_ROWS:
+        return None
+    codes = bytearray()
+    for v in first:
+        if type(v) is int:
+            codes.append(0)
+        elif type(v) is float:
+            codes.append(1)
+        else:
+            return None
+    buf = bytearray(_TUP_HDR.pack(len(outs), k))
+    buf += codes
+    pack_i, pack_f = _I8.pack, _F8.pack
+    for row in outs:
+        if type(row) is not tuple or len(row) != k:
+            return None
+        for code, v in zip(codes, row):
+            if code == 0:
+                if type(v) is not int or not _I64_MIN <= v <= _I64_MAX:
+                    return None
+                buf += pack_i(v)
+            else:
+                if type(v) is not float:
+                    return None
+                buf += pack_f(v)
+    return bytes(buf)
+
+
+def _decode_tuples(data: bytes) -> list:
+    n, k = _TUP_HDR.unpack_from(data, 0)
+    codes = data[_TUP_HDR.size:_TUP_HDR.size + k]
+    off = _TUP_HDR.size + k
+    unpack_i, unpack_f = _I8.unpack_from, _F8.unpack_from
+    out = []
+    for _ in range(n):
+        row = []
+        for code in codes:
+            row.append(
+                unpack_i(data, off)[0] if code == 0 else unpack_f(data, off)[0]
+            )
+            off += 8
+        out.append(tuple(row))
+    return out
 
 
 def encode_bundle(outs: list) -> Tuple[int, bytes]:
@@ -114,6 +185,10 @@ def encode_bundle(outs: list) -> Tuple[int, bytes]:
             return TAG_ONE_INT, _I8.pack(v)
         if type(v) is float:
             return TAG_ONE_FLOAT, _F8.pack(v)
+    if type(outs[0]) is tuple:
+        raw = _try_encode_tuples(outs)
+        if raw is not None:
+            return TAG_TUPS, raw
     return TAG_PICKLE, pickle.dumps(outs, protocol=pickle.HIGHEST_PROTOCOL)
 
 
@@ -124,6 +199,8 @@ def decode_bundle(tag: int, data: bytes) -> list:
         return [_I8.unpack(data)[0]]
     if tag == TAG_ONE_FLOAT:
         return [_F8.unpack(data)[0]]
+    if tag == TAG_TUPS:
+        return _decode_tuples(data)
     return pickle.loads(data)
 
 

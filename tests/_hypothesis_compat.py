@@ -41,6 +41,19 @@ def integers(min_value=None, max_value=None) -> _Strategy:
     return _Strategy(lambda rng: rng.randint(lo, hi), lambda: lo)
 
 
+def floats(min_value=None, max_value=None, **_ignored) -> _Strategy:
+    lo = -1e6 if min_value is None else min_value
+    hi = 1e6 if max_value is None else max_value
+    return _Strategy(lambda rng: rng.uniform(lo, hi), lambda: float(lo))
+
+
+def tuples(*strategies_) -> _Strategy:
+    def draw(rng):
+        return tuple(s.draw(rng) for s in strategies_)
+
+    return _Strategy(draw, lambda: tuple(s.minimal() for s in strategies_))
+
+
 def sampled_from(elements) -> _Strategy:
     elements = list(elements)
     return _Strategy(lambda rng: rng.choice(elements), lambda: elements[0])
@@ -85,6 +98,8 @@ def permutations(values) -> _Strategy:
 
 strategies = SimpleNamespace(
     integers=integers,
+    floats=floats,
+    tuples=tuples,
     lists=lists,
     sampled_from=sampled_from,
     sets=sets,

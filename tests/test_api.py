@@ -242,6 +242,61 @@ def test_explain_golden_split_merge_dag_with_unstaged_tail():
     assert plan.routing == ["split", "merge"]
 
 
+def _device_chain():
+    from repro.columnar import Schema, device_op
+
+    return [
+        OpSpec("pre", "stateless", _ident, cost_us=3.0),
+        device_op("affine", "affine", Schema.of("i8", scalar=True),
+                  params={"a": 3, "b": 1}, cost_us=20.0),
+        OpSpec("post", "stateless", _ident, cost_us=3.0),
+    ]
+
+
+def test_explain_golden_device_chain():
+    """A columnar device chain renders the device stage, the columnar knob
+    line, and the PV41x-verified footer deterministically."""
+    eng = Engine(EngineConfig(
+        backend="process", num_workers=2, batch_size=32,
+        process=ProcessOptions(worker_budget=4, columnar=True,
+                               device_batch=128),
+    ))
+    plan = eng.plan(_device_chain())
+    assert plan.explain() == _read_golden("plan_device_chain.txt")
+    # device stage is width-pinned (no elastic headroom) and checkpointed
+    dev = [s for s in plan.stages if s.kind == "device"]
+    assert len(dev) == 1 and dev[0].workers == dev[0].max_workers == 1
+    assert dev[0].checkpointed
+    # the device op row carries its declared schema width
+    assert [op.schema_width for op in plan.ops] == [None, 1, None]
+
+
+def test_device_plan_dict_round_trip_preserves_verification():
+    eng = Engine(EngineConfig(
+        backend="process", num_workers=2,
+        process=ProcessOptions(worker_budget=4, columnar=True),
+    ))
+    plan = eng.plan(_device_chain())
+    clone = PhysicalPlan.from_dict(plan.to_dict())
+    assert clone.explain() == plan.explain()
+    assert clone.verify(raise_on_violation=False) == []
+    # degrade the clone: widen the device stage past its pin -> PV410
+    dev = [s for s in clone.stages if s.kind == "device"][0]
+    dev.workers = 3
+    rules = {v.rule for v in clone.verify(raise_on_violation=False)}
+    assert "PV410" in rules
+    # degrade the ring: device batch below a dispatch unit -> PV411
+    clone2 = PhysicalPlan.from_dict(plan.to_dict())
+    clone2.ring["device_batch"] = 1
+    rules2 = {v.rule for v in clone2.verify(raise_on_violation=False)}
+    assert "PV411" in rules2
+    # strip the schema claim -> PV412
+    clone3 = PhysicalPlan.from_dict(plan.to_dict())
+    clone3.ops[1].schema_width = None
+    rules3 = {v.rule for v in clone3.verify(raise_on_violation=False)}
+    assert "PV412" in rules3
+
+
 # ------------------------------------------------------- plan dict round-trip
 _KINDS = st.sampled_from(["stateless", "filter", "keyed", "stateful"])
 

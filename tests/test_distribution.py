@@ -7,6 +7,10 @@ import sys
 
 import pytest
 
+pytest.importorskip(
+    "jax", reason="distribution tests fork a jax host-device mesh subprocess"
+)
+
 _SMALL_MESH_PROG = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -366,6 +366,92 @@ rt.run(src(), drain_timeout=300)
 
 
 @pytest.mark.timeout(120)
+def _col_widen(v):
+    return [(v, v * 3)]
+
+
+def _col_ksum(s, k, t):
+    s = (s or 0) + t[0]
+    return s, [(k, s + t[1])]
+
+
+def _col_chain():
+    """Columnar-eligible chain: numeric tuples ride TAG_COLBLOCK through the
+    stateless stage, then fall back to pickle at the keyed stage."""
+    return [
+        OpSpec("widen", "stateless", _col_widen),
+        OpSpec("acc", "partitioned", _col_ksum, key_fn=_col_mod, num_partitions=14,
+               init_state=_zero),
+    ]
+
+
+def _col_mod(t):
+    return t[0] % 7
+
+
+def _col_reference(n):
+    states, out = {}, []
+    for v in range(1, n + 1):
+        t = (v, v * 3)
+        k = t[0] % 7
+        states[k] = states.get(k, 0) + t[0]
+        out.append((k, states[k] + t[1]))
+    return out
+
+
+@pytest.mark.timeout(120)
+def test_worker_kill_mid_columnar_stream_exact_egress_no_leak():
+    """SIGKILL a stateless worker while the stream rides the columnar
+    TAG_COLBLOCK path: re-fork + replay must re-derive byte-identical
+    ordered egress (the columnar encoding is replay-indifferent — a
+    replayed unit may re-publish as a block or as pickle and the reorder
+    ring cannot tell), with zero shm segment leaks."""
+    n = 4000
+    before = _shm_segments()
+    plan = FaultPlan(specs=[
+        FaultSpec(kind=KILL, stage=0, worker=0, serial=1200),
+        FaultSpec(kind=KILL, stage=1, worker=1, serial=2500),
+    ], seed=23)
+    rt = ProcessRuntime.from_chain(
+        _col_chain(), num_workers=3, collect_outputs=True, io_batch=8,
+        checkpoint_interval=64, fault_plan=plan, columnar=True,
+    )
+    report = rt.run(_slow_source(n))
+    assert rt.outputs == _col_reference(n)
+    assert report.tuples_out == n
+    assert rt.restarts >= 2 and rt.recoveries >= 1
+    assert rt.dead_letters == []
+    assert _shm_segments() == before
+
+
+@pytest.mark.timeout(120)
+def test_device_worker_kill_recovers_via_checkpoint_replay():
+    """SIGKILL a device-stage worker mid-stream: device batches span
+    ingress units (advance-before-publish), so recovery must ride the
+    checkpoint/replay-log group restore — and the recovered egress must
+    stay bit-identical to the NumPy reference."""
+    from repro.columnar import Schema, device_op
+
+    n = 3000
+    before = _shm_segments()
+    dev = device_op("dev", "affine", Schema.of("i8", "i8"),
+                    params={"a": 3, "b": -1}, backend="numpy")
+    plan = FaultPlan(specs=[
+        FaultSpec(kind=KILL, stage=1, worker=0, serial=900),
+    ], seed=29)
+    rt = ProcessRuntime.from_chain(
+        [OpSpec("widen", "stateless", _col_widen), dev],
+        num_workers=2, collect_outputs=True, io_batch=8,
+        checkpoint_interval=64, fault_plan=plan, columnar=True,
+        device_batch=32,
+    )
+    report = rt.run(_slow_source(n))
+    assert rt.outputs == [(v * 3 - 1, v * 9 - 1) for v in range(1, n + 1)]
+    assert report.tuples_out == n
+    assert rt.restarts >= 1 and rt.recoveries >= 1
+    assert _shm_segments() == before
+
+
 def test_sigterm_mid_run_tears_down_without_shm_leak():
     """SIGTERM during a live stream must convert to SystemExit(143), run
     the normal teardown (reap children, unlink every segment), and exit

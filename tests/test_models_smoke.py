@@ -1,11 +1,14 @@
 """Per-architecture smoke tests (deliverable f): reduced configs of each
 family run one forward/train step + prefill/decode consistency on CPU."""
 import dataclasses
+import functools
 
 import numpy as np
 import pytest
 
-import jax
+jax = pytest.importorskip(
+    "jax", reason="model smoke tests need jax (models are jax-native)"
+)
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, applicable_shapes, get_config, smoke_config
@@ -18,15 +21,22 @@ from repro.models.transformer import (
     prefill,
 )
 
-KEY = jax.random.PRNGKey(0)
+@functools.lru_cache(maxsize=None)
+def KEY():
+    # Lazy: creating a PRNGKey initializes the jax CPU client, and doing
+    # that at import (= pytest collection) time poisons every forked
+    # process-backend jax device worker that runs later in the same
+    # session — forked children inherit dead XLA threadpool locks and
+    # deadlock (see docs/columnar.md, fork safety).
+    return jax.random.PRNGKey(0)
 
 
 def _batch(cfg, B=2, S=24):
-    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    toks = jax.random.randint(KEY(), (B, S), 0, cfg.vocab_size)
     batch = {"tokens": toks, "labels": toks}
     if cfg.num_encoder_tokens:
         batch["encoder_states"] = jax.random.normal(
-            KEY, (B, cfg.num_encoder_tokens, cfg.d_model), cfg.dtype
+            KEY(), (B, cfg.num_encoder_tokens, cfg.d_model), cfg.dtype
         )
     return batch
 
@@ -34,7 +44,7 @@ def _batch(cfg, B=2, S=24):
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_forward_and_train_step(arch):
     cfg = smoke_config(arch)
-    params = init_params(cfg, KEY)
+    params = init_params(cfg, KEY())
     batch = _batch(cfg)
     logits, aux = forward_train(cfg, params, batch["tokens"], batch.get("encoder_states"))
     assert logits.shape == (2, 24, cfg.padded_vocab)
@@ -49,7 +59,7 @@ def test_smoke_forward_and_train_step(arch):
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_decode_matches_forward(arch):
     cfg = dataclasses.replace(smoke_config(arch), capacity_factor=64.0)
-    params = init_params(cfg, KEY)
+    params = init_params(cfg, KEY())
     B, S = 2, 24
     batch = _batch(cfg, B, S)
     toks = batch["tokens"]
@@ -71,8 +81,8 @@ def test_smoke_decode_matches_forward(arch):
 @pytest.mark.parametrize("arch", ["olmo-1b", "mamba2-780m", "qwen2-moe-a2.7b"])
 def test_smoke_generate(arch):
     cfg = smoke_config(arch)
-    params = init_params(cfg, KEY)
-    prompt = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    params = init_params(cfg, KEY())
+    prompt = jax.random.randint(KEY(), (2, 8), 0, cfg.vocab_size)
     out = generate(cfg, params, prompt, num_steps=4)
     assert out.shape == (2, 5)
     assert bool(jnp.all((out >= 0) & (out < cfg.padded_vocab)))

@@ -1,18 +1,26 @@
 """Tests for the §Perf serving levers: int8 KV decode, EP MoE, TP-resident
 param specs, seq-parallel — semantics must be preserved."""
 import dataclasses
+import functools
 
 import numpy as np
 import pytest
 
-import jax
+jax = pytest.importorskip(
+    "jax", reason="serving-optimization tests need jax (jax-native levers)"
+)
 import jax.numpy as jnp
 
 from repro.configs import smoke_config
 from repro.models.common import init_params, param_defs, param_pspecs
 from repro.models.transformer import decode_step, forward_train, prefill
 
-KEY = jax.random.PRNGKey(0)
+@functools.lru_cache(maxsize=None)
+def KEY():
+    # Lazy: a module-level PRNGKey would initialize the jax client at
+    # pytest collection time and deadlock every forked process-backend
+    # jax device worker later in the session (docs/columnar.md).
+    return jax.random.PRNGKey(0)
 
 
 def _quantize_cache(cache):
@@ -37,9 +45,9 @@ def _quantize_cache(cache):
 def test_int8_kv_decode_close_to_bf16():
     cfg = smoke_config("olmo-1b")
     cfg_q = dataclasses.replace(cfg, kv_quant=True)
-    params = init_params(cfg, KEY)
+    params = init_params(cfg, KEY())
     B, S = 2, 24
-    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    toks = jax.random.randint(KEY(), (B, S), 0, cfg.vocab_size)
     full_logits, _ = forward_train(cfg, params, toks)
     _, cache = prefill(cfg, params, toks[:, : S - 1], max_len=S + 4)
     qcache = _quantize_cache(cache)
@@ -57,8 +65,8 @@ def test_int8_kv_decode_close_to_bf16():
 def test_ep_moe_matches_dense_path():
     cfg = dataclasses.replace(smoke_config("qwen2-moe-a2.7b"), capacity_factor=64.0)
     cfg_ep = dataclasses.replace(cfg, moe_ep=True)
-    params = init_params(cfg, KEY)
-    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    params = init_params(cfg, KEY())
+    toks = jax.random.randint(KEY(), (2, 16), 0, cfg.vocab_size)
     base, _ = forward_train(cfg, params, toks)
     ep, _ = forward_train(cfg_ep, params, toks)
     np.testing.assert_allclose(
@@ -87,8 +95,8 @@ def test_tp_resident_strips_fsdp_axis():
 def test_seq_parallel_is_semantics_preserving():
     cfg = smoke_config("glm4-9b")
     cfg_sp = dataclasses.replace(cfg, seq_parallel=True)
-    params = init_params(cfg, KEY)
-    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    params = init_params(cfg, KEY())
+    toks = jax.random.randint(KEY(), (2, 16), 0, cfg.vocab_size)
     a, _ = forward_train(cfg, params, toks)
     b, _ = forward_train(cfg_sp, params, toks)  # no mesh: constraint no-ops
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -5,7 +5,10 @@ import os
 import numpy as np
 import pytest
 
-import jax
+jax = pytest.importorskip(
+    "jax", reason="substrate tests need jax (optimizer/checkpoint/engine "
+    "are jax-native)"
+)
 import jax.numpy as jnp
 
 from repro.configs import smoke_config
